@@ -1,0 +1,112 @@
+"""Paper Fig. 5: training-cycle time split + speedup vs devices x cores.
+
+Evaluates the calibrated cost model (core/grouping.py, Pi3 profile) for
+every (devices 1-6, cores 1-4) combination of the paper's testbed: tiles =
+devices x cores; intra-device tiles communicate via shared memory (zero
+boundary cost), inter-device over 100 Mbps Ethernet; weight aggregation
+once per batch.  Two speedup variants as in the paper: batch=1 (weight
+update dominates) and batch->inf (weight update amortised away).
+
+Paper's measured results: single tile ~7 min/sample; speedups 2x-15x.
+"""
+from __future__ import annotations
+
+from repro.core.grouping import PI3_PROFILE, _group_cost, _map_extents
+from repro.core.tiling import no_grouping
+from repro.models.yolo import yolov2_16_layers
+
+HW = (416, 416)
+LAYERS = yolov2_16_layers()
+
+
+def _grid(tiles: int) -> tuple[int, int]:
+    best = (1, tiles)
+    for n in range(1, tiles + 1):
+        if tiles % n == 0:
+            m = tiles // n
+            if abs(n - m) < abs(best[0] - best[1]):
+                best = (n, m)
+    return best
+
+
+def cycle_time(devices: int, cores: int, batch: int = 1, include_weights: bool = True):
+    """(compute_s, boundary_s, sync_s, weights_s) for the tile grid."""
+    tiles = devices * cores
+    n, m = _grid(tiles)
+    ext = _map_extents(HW, LAYERS)
+    groups = no_grouping(len(LAYERS))
+    compute = boundary = sync = 0.0
+    for g in groups:
+        c, b, s = _group_cost(LAYERS, ext, g.start, g.end, n, m, PI3_PROFILE, batch)
+        compute += c
+        boundary += b
+        sync += s
+    # shared-memory within a device: only inter-device boundary traffic pays
+    # the Ethernet link (paper S5: "no overhead for communication between
+    # tiles on the same device")
+    inter_frac = 0.0 if devices == 1 else (devices - 1) / max(devices, 1)
+    boundary *= inter_frac
+    sync = 0.0 if devices == 1 else sync
+    weights = 0.0
+    if include_weights and devices > 1:
+        wbytes = sum(
+            l.kernel**2 * l.in_channels * l.out_channels * PI3_PROFILE.dtype_bytes
+            for l in LAYERS if not l.pool
+        )
+        # paper S4.1: every device ships its full partial weight-gradient
+        # SET to a central device and receives the summed set back (fp32,
+        # both directions) - traffic grows linearly with devices, which is
+        # what makes 6 devices slower than 4 at batch=1 (Fig. 5)
+        weights = 4.0 * wbytes * (devices - 1) / PI3_PROFILE.agg_bw
+    return compute, boundary, sync, weights
+
+
+def run() -> list[dict]:
+    base = sum(cycle_time(1, 1))
+    rows = []
+    for devices in (1, 2, 4, 6):
+        for cores in (1, 2, 4):
+            c, b, s, w = cycle_time(devices, cores)
+            total = c + b + s + w
+            total_inf = c + b + s                  # batch->inf: weights amortised
+            rows.append(
+                dict(
+                    name=f"fig5/d{devices}c{cores}",
+                    devices=devices,
+                    cores=cores,
+                    tiles=devices * cores,
+                    compute_s=round(c, 2),
+                    boundary_s=round(b, 3),
+                    sync_s=round(s, 3),
+                    weights_s=round(w, 2),
+                    total_s=round(total, 2),
+                    speedup_b1=round(base / total, 2),
+                    speedup_binf=round(base / total_inf, 2),
+                )
+            )
+    return rows
+
+
+def check(rows) -> list[str]:
+    """Claims from paper S5.1."""
+    notes = []
+    by = {(r["devices"], r["cores"]): r for r in rows}
+    t11 = by[(1, 1)]["total_s"]
+    notes.append(
+        f"single tile cycle {t11:.0f}s vs paper ~420s: "
+        f"{'OK' if 300 <= t11 <= 550 else 'OFF'}"
+    )
+    mx = max(r["speedup_binf"] for r in rows)
+    notes.append(
+        f"max speedup (batch->inf) {mx:.1f}x vs paper up to ~15x: "
+        f"{'OK' if 10 <= mx <= 30 else 'OFF'} "
+        f"(cost model is ideal-scaling; the paper's 15x includes process/"
+        f"NUMA overheads the analytic model omits)"
+    )
+    s61 = by[(6, 4)]["speedup_b1"]
+    s41 = by[(4, 4)]["speedup_b1"]
+    notes.append(
+        f"batch=1: 6 dev {s61:.1f}x <= 4 dev {s41:.1f}x (weight-comm limited, Fig. 5): "
+        f"{'OK' if s61 <= s41 * 1.02 else 'OFF'}"
+    )
+    return notes

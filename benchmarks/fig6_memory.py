@@ -1,0 +1,86 @@
+"""Paper Fig. 6: peak physical memory per tile vs number of tiles.
+
+Accounts the per-tile training working set of YOLOv2-16 at 416x416 exactly
+as the paper splits it: feature maps (fwd activations incl. halos), delta
+maps (gradients), filters (full copy per tile - constant), and "other"
+(im2col / compute buffer, code, comm buffers ~ proportional to the largest
+layer tile).  Paper: ~400 MB at 1 tile -> ~50 MB at 24 tiles, with filter
+memory constant (diminishing returns).
+"""
+from __future__ import annotations
+
+from repro.core.tiling import build_tiling_plan, no_grouping, TileBox
+from repro.models.yolo import yolov2_16_layers
+
+HW = (416, 416)
+LAYERS = yolov2_16_layers()
+BYTES = 4
+
+
+def _grid(tiles: int) -> tuple[int, int]:
+    best = (1, tiles)
+    for n in range(1, tiles + 1):
+        if tiles % n == 0:
+            m = tiles // n
+            if abs(n - m) < abs(best[0] - best[1]):
+                best = (n, m)
+    return best
+
+
+def tile_memory(tiles: int) -> dict:
+    n, m = _grid(tiles)
+    specs = [l.spec() for l in LAYERS]
+    plan = build_tiling_plan(HW, specs, n, m, no_grouping(len(LAYERS)))
+    tp = plan.tiles[0][0]                       # interior-ish tile (worst case)
+
+    feat = delta = 0
+    biggest = 0
+    for gi, g in enumerate(plan.groups):
+        gp = tp.groups[gi]
+        for lp in gp.layers:
+            sp = specs[lp.layer_index]
+            cin = max(sp.in_channels, 1)
+            ih, iw = plan.layer_hw[lp.layer_index]
+            box = TileBox(lp.in_box.rows.clip(ih), lp.in_box.cols.clip(iw))
+            elems = box.rows.size * box.cols.size * cin
+            feat += elems * BYTES               # stored activation (training)
+            delta += elems * BYTES              # delta map, same extent
+            biggest = max(biggest, elems * sp.kernel * sp.kernel)
+    filters = sum(
+        l.kernel**2 * l.in_channels * l.out_channels * BYTES
+        for l in LAYERS if not l.pool
+    ) * 2                                        # weights + weight grads
+    other = biggest * BYTES + (16 << 20)         # im2col buffer + code/comm
+    total = feat + delta + filters + other
+    return dict(
+        tiles=tiles, grid=f"{n}x{m}",
+        feature_mb=round(feat / 2**20, 1),
+        delta_mb=round(delta / 2**20, 1),
+        filter_mb=round(filters / 2**20, 1),
+        other_mb=round(other / 2**20, 1),
+        total_mb=round(total / 2**20, 1),
+    )
+
+
+def run() -> list[dict]:
+    rows = []
+    for tiles in (1, 2, 4, 8, 16, 24):
+        r = tile_memory(tiles)
+        r["name"] = f"fig6/t{tiles}"
+        rows.append(r)
+    return rows
+
+
+def check(rows) -> list[str]:
+    one = rows[0]["total_mb"]
+    last = rows[-1]["total_mb"]
+    notes = [
+        f"1 tile {one:.0f} MB vs paper ~400 MB: {'OK' if 250 <= one <= 600 else 'OFF'}",
+        f"24 tiles {last:.0f} MB vs paper ~50 MB: {'OK' if 25 <= last <= 90 else 'OFF'}",
+        f"reduction {one/last:.1f}x vs paper ~8x: {'OK' if 5 <= one/last <= 14 else 'OFF'}",
+    ]
+    filt = [r["filter_mb"] for r in rows]
+    notes.append(
+        f"filter memory constant across tilings: {'OK' if max(filt) - min(filt) < 1e-6 else 'OFF'}"
+    )
+    return notes

@@ -1,0 +1,66 @@
+"""Paper Fig. 8 / S5.4: the grouping optimum flips on a comm-bound setup.
+
+2-tile Jetson Nano pair (GPU compute, 10 Gbps link, large per-sync
+latency): grouping (sync less often) beats per-layer sync - the opposite
+regime from the Pis.  Also evaluates the TPU-v5e profile: at 197 TFLOP/s
+vs 50 GB/s links, fine-grained tiles are even more comm-bound.
+"""
+from __future__ import annotations
+
+from repro.core.grouping import (
+    JETSON_PROFILE,
+    TPU_V5E_PROFILE,
+    optimize_grouping,
+    profile_cost,
+)
+from repro.core.tiling import no_grouping, single_group, uniform_grouping
+from repro.models.yolo import yolov2_16_layers
+
+HW = (416, 416)
+LAYERS = yolov2_16_layers()
+
+
+def run() -> list[dict]:
+    rows = []
+    for batch in (1, 2, 4, 8):
+        for pname, prof in (
+            ("none", no_grouping(len(LAYERS))),
+            ("group4", uniform_grouping(len(LAYERS), 4)),
+            ("one", single_group(len(LAYERS))),
+        ):
+            c = profile_cost(HW, LAYERS, prof, 1, 2, JETSON_PROFILE, batch=batch)
+            rows.append(
+                dict(
+                    name=f"fig8/jetson/b{batch}/{pname}",
+                    batch=batch, profile=pname, hw="jetson",
+                    compute_s=round(c["compute"], 4),
+                    boundary_s=round(c["boundary"], 4),
+                    sync_s=round(c["sync"], 4),
+                    total_s=round(c["total"], 4),
+                )
+            )
+    # TPU profile: optimizer's chosen profile vs none, 4x4 tiles on 64x64
+    dp = optimize_grouping((64, 64), LAYERS[:6], 4, 4, TPU_V5E_PROFILE)
+    c_dp = profile_cost((64, 64), LAYERS[:6], dp, 4, 4, TPU_V5E_PROFILE)
+    c_no = profile_cost((64, 64), LAYERS[:6], no_grouping(6), 4, 4, TPU_V5E_PROFILE)
+    rows.append(dict(name="fig8/tpu/dp", batch=1, profile=f"{len(dp)}groups",
+                     hw="tpu-v5e", total_s=c_dp["total"]))
+    rows.append(dict(name="fig8/tpu/none", batch=1, profile="none",
+                     hw="tpu-v5e", total_s=c_no["total"]))
+    return rows
+
+
+def check(rows) -> list[str]:
+    notes = []
+    ok = True
+    for batch in (1, 2, 4, 8):
+        rb = {r["profile"]: r["total_s"] for r in rows
+              if r.get("hw") == "jetson" and r["batch"] == batch}
+        ok &= rb["group4"] < rb["none"] or rb["one"] < rb["none"]
+    notes.append(f"grouping beats per-layer sync on Jetson (paper Fig. 8): {'OK' if ok else 'OFF'}")
+    tpu = {r["name"]: r["total_s"] for r in rows if r.get("hw") == "tpu-v5e"}
+    notes.append(
+        f"TPU profile: DP grouping {tpu['fig8/tpu/dp']:.2e}s <= none "
+        f"{tpu['fig8/tpu/none']:.2e}s: {'OK' if tpu['fig8/tpu/dp'] <= tpu['fig8/tpu/none'] else 'OFF'}"
+    )
+    return notes

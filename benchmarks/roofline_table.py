@@ -1,0 +1,71 @@
+"""S Roofline: aggregate dry-run artifacts into the 40-cell table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, useful-FLOPs ratio, roofline fraction and HBM fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[dict]:
+    rows = []
+    for c in load_cells():
+        base = dict(name=f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}")
+        if "error" in c:
+            rows.append({**base, "status": "ERROR", "detail": c["error"][:80]})
+            continue
+        if "skipped" in c:
+            rows.append({**base, "status": "SKIP", "detail": c["skipped"][:80]})
+            continue
+        if "compute_s" not in c or c.get("mesh") != "single":
+            # multi-pod cells prove sharding + memory fit only
+            rows.append({
+                **base, "status": "compile-ok",
+                "mem_gib": round(c["full"]["mem"]["total_bytes"] / 2**30, 2),
+                "fits_hbm": c["hbm_ok"],
+            })
+            continue
+        rows.append(
+            {
+                **base,
+                "status": "ok",
+                "compute_ms": round(c["compute_s"] * 1e3, 2),
+                "memory_ms": round(c["memory_s"] * 1e3, 2),
+                "collective_ms": round(c["collective_s"] * 1e3, 2),
+                "dominant": c["dominant"],
+                "useful_ratio": round(c["useful_ratio"], 3),
+                "roofline_frac": round(c["roofline_fraction"], 4),
+                "mem_gib": round(c["full"]["mem"]["total_bytes"] / 2**30, 2),
+                "fits_hbm": c["hbm_ok"],
+            }
+        )
+    return rows
+
+
+def check(rows) -> list[str]:
+    done = [r for r in rows if r.get("status") == "ok"]
+    errs = [r for r in rows if r.get("status") == "ERROR"]
+    skips = [r for r in rows if r.get("status") == "SKIP"]
+    notes = [f"cells ok={len(done)} skip={len(skips)} error={len(errs)}"]
+    if done:
+        worst = min(done, key=lambda r: r["roofline_frac"])
+        notes.append(f"worst roofline: {worst['name']} ({worst['roofline_frac']:.1%})")
+        nofit = [r["name"] for r in done if not r["fits_hbm"]]
+        notes.append(f"HBM fit violations: {nofit or 'none'}")
+    for e in errs[:5]:
+        notes.append(f"ERROR {e['name']}: {e['detail']}")
+    return notes

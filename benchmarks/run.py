@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure + roofline table.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]``
+
+Each module exposes ``run() -> list[dict]`` (rows) and ``check(rows) ->
+list[str]`` (claims vs the paper's numbers).  Output: CSV rows + claim
+verdicts; exits non-zero if any module raises.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig5_speedup",
+    "benchmarks.fig6_memory",
+    "benchmarks.fig7_batch_grouping",
+    "benchmarks.fig8_comm_bound",
+    "benchmarks.bench_tiled_step",
+    "benchmarks.roofline_table",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="", help="comma list, e.g. fig5,fig7")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    failures = 0
+    for modname in MODULES:
+        short = modname.split(".")[-1]
+        if only and not any(o in short for o in only):
+            continue
+        print(f"\n=== {short} ===", flush=True)
+        try:
+            mod = importlib.import_module(modname)
+            t0 = time.monotonic()
+            rows = mod.run()
+            dt = time.monotonic() - t0
+            if rows:
+                keys = list(rows[0].keys())
+                print(",".join(keys))
+                for r in rows:
+                    print(",".join(str(r.get(k, "")) for k in keys))
+            for note in mod.check(rows):
+                print(f"  [claim] {note}")
+            print(f"  ({len(rows)} rows in {dt:.1f}s)")
+        except Exception:
+            failures += 1
+            print(f"  FAILED:\n{traceback.format_exc()}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

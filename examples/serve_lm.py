@@ -1,0 +1,69 @@
+"""Batched LM serving example: continuous batching over request streams.
+
+Loads a reduced-config architecture (any of the 10 assigned ``--arch`` ids),
+spins up the slot-based engine, and pushes a bursty synthetic workload:
+requests arrive in waves, occupy decode slots, finish at different lengths
+(EOS or budget), and recycle their slots - printing engine utilisation.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.registry import ARCH_IDS, get_arch
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--per-wave", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch, reduced=True)
+    params = arch.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        arch, params, batch=args.slots, max_seq=128, temperature=args.temperature
+    )
+    rng = np.random.default_rng(0)
+
+    rid = 0
+    t0 = time.monotonic()
+    for wave in range(args.waves):
+        for _ in range(args.per_wave):
+            plen = int(rng.integers(3, 16))
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, arch.cfg.vocab, size=plen).astype(np.int32),
+                max_new_tokens=int(rng.integers(4, args.max_new + 1)),
+            ))
+            rid += 1
+        # drain part of the wave before the next burst arrives
+        ticks = 0
+        while ticks < 6 and (engine.queue or any(engine.slots)):
+            active = engine.tick()
+            ticks += 1
+            print(f"wave {wave} tick {ticks}: {active} active, "
+                  f"{len(engine.queue)} queued")
+    done = engine.run(max_ticks=2000)
+    dt = time.monotonic() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"\nserved {len(done)} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s on CPU, reduced config)")
+    for r in sorted(done, key=lambda r: r.rid)[:6]:
+        print(f"  req {r.rid}: {len(r.prompt)} prompt -> {len(r.out_tokens)} new: "
+              f"{r.out_tokens[:6]}")
+    assert len(done) == rid
+    print("serve example OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""Emit the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+import glob
+import json
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = [
+    "codeqwen1.5-7b", "stablelm-1.6b", "qwen2-7b", "command-r-35b",
+    "mamba2-780m", "mixtral-8x22b", "deepseek-v3-671b", "qwen2-vl-2b",
+    "jamba-v0.1-52b", "whisper-medium",
+]
+
+
+def fmt_s(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def load(d="artifacts/dryrun"):
+    cells = {}
+    for p in glob.glob(f"{d}/*.json"):
+        c = json.load(open(p))
+        cells[(c["arch"], c["shape"], c["mesh"])] = c
+    return cells
+
+
+def single_table(cells):
+    print("| arch | shape | compute | memory | collective | dominant | MODEL/HLO | roofline | mem/dev | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            c = cells.get((a, s, "single"))
+            if c is None:
+                print(f"| {a} | {s} | - | - | - | - | - | - | - | MISSING |")
+                continue
+            if "skipped" in c:
+                print(f"| {a} | {s} | skip | | | | | | | ({c['skipped'][:40]}...) |")
+                continue
+            if "error" in c:
+                print(f"| {a} | {s} | ERROR | | | | | | | {c['error'][:40]} |")
+                continue
+            mem = c["full"]["mem"]["total_bytes"] / 2**30
+            print(
+                f"| {a} | {s} | {fmt_s(c['compute_s'])} | {fmt_s(c['memory_s'])} "
+                f"| {fmt_s(c['collective_s'])} | {c['dominant']} "
+                f"| {c['useful_ratio']:.2f} | {c['roofline_fraction']:.1%} "
+                f"| {mem:.2f}GiB | {'Y' if c['hbm_ok'] else 'N'} |"
+            )
+
+
+def multi_table(cells):
+    print("| arch | shape | compile | mem/dev | fits |")
+    print("|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            c = cells.get((a, s, "multi"))
+            if c is None:
+                print(f"| {a} | {s} | MISSING | | |")
+                continue
+            if "skipped" in c:
+                print(f"| {a} | {s} | skip (per assignment) | | |")
+                continue
+            if "error" in c:
+                print(f"| {a} | {s} | ERROR {c['error'][:40]} | | |")
+                continue
+            mem = c["full"]["mem"]["total_bytes"] / 2**30
+            print(f"| {a} | {s} | ok ({c['full']['compile_s']}s) | {mem:.2f}GiB | {'Y' if c['hbm_ok'] else 'N'} |")
+
+
+if __name__ == "__main__":
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    if "--multi" in sys.argv:
+        multi_table(cells)
+    else:
+        single_table(cells)

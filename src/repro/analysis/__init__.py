@@ -1,0 +1,14 @@
+"""Roofline + HLO collective analysis over dry-run compiled artifacts."""
+from repro.analysis.hlo import CollectiveStats, collective_stats, collectives_with_loops
+from repro.analysis.roofline import (
+    V5E,
+    HardwareTarget,
+    RooflineTerms,
+    count_params_cfg,
+    embed_param_count,
+    fmt_bytes,
+    fmt_flops,
+    fmt_seconds,
+    model_flops,
+    terms_from_counts,
+)

@@ -1,0 +1,191 @@
+"""Collective-traffic extraction from post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but NOT
+collective traffic, so we parse ``compiled.as_text()``: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction carries its result shape and replica groups, from which we
+derive per-device link traffic under a ring/bidirectional model:
+
+    all-gather        recv = out_bytes * (g-1)/g       (out = gathered result)
+    all-reduce        ring = 2 * out_bytes * (g-1)/g
+    reduce-scatter    send = out_bytes * (g-1)          (operand = out * g)
+    all-to-all        send = out_bytes * (g-1)/g
+    collective-permute  out_bytes                       (one hop)
+
+Async pairs (``*-start`` / ``*-done``) are counted once (on start).  Both the
+naive "sum of result bytes" (the spec's metric) and the ring-model bytes are
+reported; the roofline uses the ring model, EXPERIMENTS.md records both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = TYPE op-name(...)` where TYPE is `dt[dims]{layout}` or a tuple.
+_INSTR_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>" + "|".join(_COLL_KINDS) + r")(?P<async>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(result: str) -> int:
+    """Total bytes of a result type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if dims else 1
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device collective traffic for one compiled module."""
+
+    count: dict                  # op kind -> #instructions
+    bytes_naive: dict            # op kind -> sum of result bytes
+    bytes_ring: dict             # op kind -> ring-model link bytes
+    per_op: list                 # (kind, result_bytes, group_size)
+
+    @property
+    def total_naive(self) -> int:
+        return sum(self.bytes_naive.values())
+
+    @property
+    def total_ring(self) -> int:
+        return sum(self.bytes_ring.values())
+
+
+def _ring_bytes(kind: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    count: dict = defaultdict(int)
+    naive: dict = defaultdict(int)
+    ring: dict = defaultdict(float)
+    per_op: list = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m.group("async") == "-done":
+            continue                      # counted at -start
+        kind = m.group("op")
+        out_bytes = _shape_bytes(m.group("result"))
+        if kind == "collective-permute":
+            # result of permute-start is a tuple (recv, send[, ...]); a plain
+            # permute result is just the payload.  group size unused.
+            g = 2
+            if m.group("async") == "-start":
+                out_bytes //= 2
+        else:
+            g = _group_size(line)
+        count[kind] += 1
+        naive[kind] += out_bytes
+        ring[kind] += _ring_bytes(kind, out_bytes, g)
+        per_op.append((kind, out_bytes, g))
+    return CollectiveStats(dict(count), dict(naive), dict(ring), per_op)
+
+
+def scan_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts of while loops (collectives inside loops execute
+    trip-count times; XLA unrolls scan bodies into while ops)."""
+    return [int(x) for x in re.findall(r"trip_count=(\d+)", hlo_text)]
+
+
+def collectives_with_loops(hlo_text: str) -> CollectiveStats:
+    """Like ``collective_stats`` but multiplies collectives inside while-loop
+    bodies by the loop trip count (lax.scan over layers!).
+
+    HLO text nests computations as named blocks; we attribute each collective
+    to the while loop whose body computation contains it by tracking
+    ``%body.N`` computation names referenced from while instructions.
+    """
+    # Map computation name -> trip count from while instructions.
+    body_trip: dict[str, int] = {}
+    for m in re.finditer(
+        r"while\([^)]*\).*?body=%?([\w.-]+).*?trip_count=(\d+)", hlo_text
+    ):
+        body_trip[m.group(1)] = int(m.group(2))
+    # Some HLO puts backend_config trip counts on the while line differently;
+    # also accept `known_trip_count={"n":"K"}`.
+    for m in re.finditer(
+        r"while\([^)]*\).*?body=%?([\w.-]+).*?known_trip_count=\{\"n\":\"(\d+)\"\}",
+        hlo_text,
+    ):
+        body_trip[m.group(1)] = int(m.group(2))
+
+    count: dict = defaultdict(int)
+    naive: dict = defaultdict(int)
+    ring: dict = defaultdict(float)
+    per_op: list = []
+    current_comp = ""
+    mult = 1
+    for line in hlo_text.splitlines():
+        comp = re.match(r"\s*%?([\w.-]+)\s*\(.*\)\s*->", line)
+        if comp or line.startswith("ENTRY"):
+            current_comp = comp.group(1) if comp else "entry"
+            mult = body_trip.get(current_comp, 1)
+            continue
+        m = _INSTR_RE.search(line)
+        if not m or m.group("async") == "-done":
+            continue
+        kind = m.group("op")
+        out_bytes = _shape_bytes(m.group("result"))
+        if kind == "collective-permute":
+            g = 2
+            if m.group("async") == "-start":
+                out_bytes //= 2
+        else:
+            g = _group_size(line)
+        count[kind] += mult
+        naive[kind] += out_bytes * mult
+        ring[kind] += _ring_bytes(kind, out_bytes, g) * mult
+        per_op.append((kind, out_bytes, g, mult))
+    return CollectiveStats(dict(count), dict(naive), dict(ring), per_op)

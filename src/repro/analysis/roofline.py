@@ -1,0 +1,258 @@
+"""Three-term roofline model over dry-run compiled artifacts.
+
+TPU v5e targets (per chip):  197 TFLOP/s bf16 MXU peak, 819 GB/s HBM
+bandwidth, ~50 GB/s per ICI link.  The container is CPU-only, so terms are
+*derived* from the compiled module (which IS the per-device program after
+SPMD partitioning):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = ring_collective_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` counts a ``lax.scan`` body ONCE, so per-cell numbers are
+measured on two shallow UNROLLED lowerings (depths p and 2p periods) and
+scaled:  total = F(p) + (R - R_p) * (F(2p) - F(p)).  The full-depth compile
+supplies ``memory_analysis`` (fits-in-HBM proof) and the collective schedule.
+
+The dominant term approximates step time on hardware that overlaps the other
+two; ``bound`` names it and ``model_flops`` provides the useful-work
+numerator for the roofline fraction MODEL_FLOPS/(chips*peak*dominant_term).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTarget:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per ICI link
+    ici_links: int = 1                # conservative: count one link
+    dcn_bw: float = 6.25e9            # bytes/s per host cross-pod (50 Gbps)
+    hbm_bytes: float = 16e9           # v5e HBM capacity
+
+
+V5E = HardwareTarget()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                      # per device
+    bytes_hbm: float                  # per device
+    bytes_coll: float                 # per device (ring model)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def terms_from_counts(
+    flops: float,
+    bytes_hbm: float,
+    bytes_coll: float,
+    hw: HardwareTarget = V5E,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops,
+        memory_s=bytes_hbm / hw.hbm_bw,
+        collective_s=bytes_coll / (hw.ici_bw * hw.ici_links),
+        flops=flops,
+        bytes_hbm=bytes_hbm,
+        bytes_coll=bytes_coll,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Useful-work model FLOPs (6ND and friends)
+# ---------------------------------------------------------------------------
+
+
+def count_params_cfg(abstract_params: Any, cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts from the abstract param tree.
+
+    Active discounts routed-expert weights by top_k/n_experts (a token's
+    forward touches only the selected experts); everything else is active.
+    """
+    from jax.tree_util import tree_flatten_with_path, keystr
+
+    leaves, _ = tree_flatten_with_path(abstract_params)
+    total = active = 0
+    ratio = cfg.moe.top_k / cfg.moe.n_experts if cfg.moe is not None else 1.0
+    for path, leaf in leaves:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        key = keystr(path, separator="/")
+        total += n
+        # stacked routed experts sit at ...["moe"]["w_gate"|"w_up"|"w_down"]
+        if cfg.moe is not None and "moe" in key and (
+            "w_gate" in key or "w_up" in key or "w_down" in key
+        ):
+            active += int(n * ratio)
+        else:
+            active += n
+    return total, active
+
+
+def embed_param_count(cfg: ModelConfig) -> int:
+    """Params that do no matmul work: the lookup-only input embedding.
+    (Tied embeddings serve as the LM head, whose matmul DOES count.)"""
+    return 0 if cfg.tie_embeddings else cfg.vocab * cfg.d_model
+
+
+def model_flops(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    n_active_params: int,
+    *,
+    embed_params: int = 0,
+) -> float:
+    """Useful training/serving FLOPs per global step.
+
+    train:   6 * N_active * tokens  + attention quadratic term
+    prefill: 2 * N_active * tokens  + attention quadratic term (fwd only)
+    decode:  2 * N_active * batch   + KV-cache attention reads (fwd, 1 token)
+
+    The quadratic attention term per layer: 12*B*T^2*d_qk (train, causal/2)
+    or 4*B*T^2*d (fwd) with window clamping for SWA; SSM layers contribute
+    their chunked-scan term instead (folded into 6ND via state dims, small).
+    """
+    b, t = shape.global_batch, shape.seq_len
+    tokens = b * t
+    n_mat = max(n_active_params - embed_params, 1)
+    dh = cfg.resolved_head_dim
+    d_attn = cfg.n_heads * dh
+
+    # attention-layer census
+    attn_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_attn_layer(i))
+
+    if shape.kind == "decode":
+        # one token, full-cache attention read: 2 matmul * cache_len * d_attn
+        flops = 2.0 * n_mat * b
+        cache = min(t, cfg.swa_window) if cfg.swa_window else t
+        if cfg.family in ("ssm",):
+            attn_flops = 0.0
+        else:
+            attn_flops = attn_layers * 4.0 * b * cache * d_attn
+        return flops + attn_flops
+
+    fwd_bwd = 6.0 if shape.kind == "train" else 2.0
+    flops = fwd_bwd * n_mat * tokens
+    # causal attention: ~T^2/2 effective pairs; SWA clamps to T*W
+    pairs = t * min(t, cfg.swa_window) if cfg.swa_window else t * t / 2
+    attn_mult = 2.0 * fwd_bwd                      # QK^T and AV, fwd(+bwd)
+    attn_flops = attn_layers * attn_mult * b * pairs * d_attn
+    return flops + attn_flops
+
+
+def flash_attention_terms(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    q_block: int = 1024,
+    remat: bool = True,
+) -> tuple[float, float]:
+    """Analytic (FLOPs, HBM bytes) of ALL attention layers per global step,
+    modelling the Pallas flash kernel (streaming KV, no T^2 HBM traffic).
+
+    The dry-run's counting lowerings replace attention with a zero-FLOP stub
+    (models.attention._sdpa_stub) and add these terms back, so the roofline
+    reflects the TPU kernel rather than an XLA materialisation the deployed
+    system never runs.
+
+    FLOPs per layer (fwd) = 4 * B * pairs * H * (d_qk + d_v)/2 ... computed
+    as 2*B*pairs*H*d_qk (QK^T) + 2*B*pairs*H*d_v (PV), pairs = attended (q,k)
+    pairs: causal T^2/2 (the kernel skips fully-masked blocks), window T*W,
+    bidirectional T^2.  Train multiplier: fwd + bwd(2x) + remat recompute.
+
+    HBM bytes per layer (fwd): Q+O streamed once; K/V streamed once per
+    query block (n_q passes; causal halves the average).  bwd ~ 2.5x fwd.
+    """
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return 0.0, 0.0                       # decode is measured directly
+
+    if cfg.mla is not None:
+        d_qk = cfg.n_heads * (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim)
+        d_v = cfg.n_heads * cfg.mla.v_head_dim
+        d_kv_store = d_qk + d_v               # materialised K/V per token
+    else:
+        d_qk = d_v = cfg.n_heads * cfg.resolved_head_dim
+        d_kv_store = (cfg.n_kv_heads * cfg.resolved_head_dim) * 2
+
+    train = shape.kind == "train"
+    fl_mult = (4.0 if remat else 3.0) if train else 1.0
+    by_mult = (4.5 if remat else 3.5) if train else 1.0   # fwd + 2.5 bwd (+1 remat)
+
+    def layer_terms(tq, tk, pairs):
+        fl = 2.0 * b * pairs * d_qk + 2.0 * b * pairs * d_v
+        n_q = max(1, -(-tq // q_block))
+        kv_passes = (n_q + 1) / 2 if pairs < tq * tk else n_q   # causal/window skip
+        by = 2.0 * b * (tq * (d_qk + d_v) + kv_passes * tk * d_kv_store)
+        return fl, by
+
+    flops = bytes_ = 0.0
+    if cfg.encoder_decoder:
+        n_enc = cfg.n_encoder_layers or cfg.n_layers
+        t_dec = max(8, t // 4)                # registry._whisper_input_specs
+        f, y = layer_terms(t, t, t * t)       # encoder self (bidirectional)
+        flops += n_enc * f
+        bytes_ += n_enc * y
+        f, y = layer_terms(t_dec, t_dec, t_dec * t_dec / 2)   # decoder self
+        flops += cfg.n_layers * f
+        bytes_ += cfg.n_layers * y
+        f, y = layer_terms(t_dec, t, t_dec * t)               # cross
+        flops += cfg.n_layers * f
+        bytes_ += cfg.n_layers * y
+        return flops * fl_mult, bytes_ * by_mult
+
+    for i in range(cfg.n_layers):
+        if not cfg.is_attn_layer(i):
+            continue
+        w = cfg.swa_window
+        pairs = t * min(t, w) if w else t * t / 2
+        f, y = layer_terms(t, t, pairs)
+        flops += f
+        bytes_ += y
+    return flops * fl_mult, bytes_ * by_mult
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024 or unit == "TiB":
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}TiB"
+
+
+def fmt_flops(f: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(f) < 1000 or unit == "E":
+            return f"{f:.2f}{unit}FLOP"
+        f /= 1000
+    return f"{f:.2f}EFLOP"

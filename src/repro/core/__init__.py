@@ -1,0 +1,33 @@
+"""Core: the paper's tiling / fusing / grouping technique in JAX."""
+from repro.core.tiling import (
+    ConvSpec,
+    Span,
+    TileBox,
+    Group,
+    dependent_region_1d,
+    forward_region_1d,
+    partition_1d,
+    partition_grid,
+    no_grouping,
+    single_group,
+    uniform_grouping,
+    build_tiling_plan,
+    group_halo_width,
+)
+from repro.core.spatial import LayerDef, init_stack_params, stack_reference
+from repro.core.fusion import (
+    StackPlan,
+    build_stack_plan,
+    apply_stack_local,
+    make_tiled_forward,
+    make_tiled_loss,
+    make_deferred_grad_step,
+)
+from repro.core.grouping import (
+    HardwareProfile,
+    PI3_PROFILE,
+    JETSON_PROFILE,
+    TPU_V5E_PROFILE,
+    profile_cost,
+    optimize_grouping,
+)

@@ -1,0 +1,310 @@
+"""Fused, grouped execution stacks (paper §4.2, Figs. 1/3/4).
+
+A *stack* is the sequence of conv/pool layers fused onto one tile: the tile's
+core never leaves its device; only group-input halos move.  A *grouping
+profile* chooses where halo exchanges happen: inside a group each tile
+carries a recursively-grown halo and recomputes boundary regions redundantly
+(paper eq. 1 growth), trading compute for synchronisation.
+
+``StackPlan`` precomputes all static geometry (group halo widths, per-layer
+remaining halos, shard extents) so the shard_map'd executor contains no
+Python-level geometry at trace time beyond table lookups.
+
+Halo-width algebra (derived from eq. 1 recursion, DESIGN.md §2):
+
+    group_halo_lo = sum_l P_l * prod_{l'<l in group} S_l'
+    group_halo_hi = sum_l (K_l - S_l - P_l) * prod_{l'<l in group} S_l'
+
+and the remaining halo after layer l shrinks as (h - P_l) / S_l (always
+integral by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.tiling import Group, no_grouping, validate_profile
+from repro.core.halo import halo_exchange_2d
+from repro.core.spatial import LayerDef, apply_layer_local, stack_reference
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    """Static geometry for an (n x m)-tiled, grouped conv stack."""
+
+    layers: tuple[LayerDef, ...]
+    groups: tuple[Group, ...]
+    n: int
+    m: int
+    input_hw: tuple[int, int]
+    map_hw: tuple[tuple[int, int], ...]          # extent at each layer input; [-1] = output
+    shard_hw: tuple[tuple[int, int], ...]        # core shard extent per layer input
+    group_halos: tuple[tuple[int, int, int, int], ...]   # (top,bot,left,right) @ group input
+    rem_halos: tuple[tuple[int, int, int, int], ...]     # remaining halo after each layer
+    group_of_layer: tuple[int, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def out_hw(self) -> tuple[int, int]:
+        return self.map_hw[-1]
+
+
+def build_stack_plan(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    n: int,
+    m: int,
+    groups: Sequence[Group] | None = None,
+) -> StackPlan:
+    layers = tuple(layers)
+    groups = tuple(groups) if groups is not None else tuple(no_grouping(len(layers)))
+    validate_profile(groups, len(layers))
+
+    # Map + shard extents per layer.
+    map_hw = [tuple(input_hw)]
+    for l in layers:
+        h, w = map_hw[-1]
+        map_hw.append((l.out_extent(h), l.out_extent(w)))
+    shard_hw = []
+    for (h, w) in map_hw:
+        if h % n or w % m:
+            raise ValueError(
+                f"map extent {(h, w)} not divisible by tile grid {(n, m)}; "
+                "pad the input or choose a different grid"
+            )
+        shard_hw.append((h // n, w // m))
+    for li, l in enumerate(layers):
+        sh, sw = shard_hw[li]
+        if sh % l.stride or sw % l.stride:
+            raise ValueError(f"shard extent {(sh, sw)} not divisible by stride of layer {li}")
+
+    # Group halos + per-layer remaining halos.
+    group_halos: list[tuple[int, int, int, int]] = []
+    rem_halos: list[tuple[int, int, int, int]] = [None] * len(layers)  # type: ignore
+    group_of_layer: list[int] = [0] * len(layers)
+    for gi, g in enumerate(groups):
+        hl = hh = 0
+        sprod = 1
+        for l in g.layers:
+            p = layers[l].padding
+            q = layers[l].kernel - layers[l].stride - p
+            hl += p * sprod
+            hh += q * sprod
+            sprod *= layers[l].stride
+        group_halos.append((hl, hh, hl, hh))
+        # remaining halo after each layer inside the group
+        cur_lo, cur_hi = hl, hh
+        for l in g.layers:
+            group_of_layer[l] = gi
+            p = layers[l].padding
+            q = layers[l].kernel - layers[l].stride - p
+            cur_lo = (cur_lo - p) // layers[l].stride
+            cur_hi = (cur_hi - q) // layers[l].stride
+            rem_halos[l] = (cur_lo, cur_hi, cur_lo, cur_hi)
+        assert cur_lo == 0 and cur_hi == 0, "halo must be consumed by group end"
+
+    return StackPlan(
+        layers=layers,
+        groups=groups,
+        n=n,
+        m=m,
+        input_hw=tuple(input_hw),
+        map_hw=tuple(map_hw),
+        shard_hw=tuple(shard_hw),
+        group_halos=tuple(group_halos),
+        rem_halos=tuple(rem_halos),
+        group_of_layer=tuple(group_of_layer),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shard-local executor (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def apply_stack_local(
+    params: Sequence[dict],
+    x: jax.Array,
+    plan: StackPlan,
+    *,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+    batch_global: int | None = None,
+) -> jax.Array:
+    """Forward through all groups on one tile.  ``x``: (b, h/n, w/m, c)."""
+    bg = batch_global if batch_global is not None else x.shape[0]
+    for gi, g in enumerate(plan.groups):
+        x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
+        for l in g.layers:
+            x = apply_layer_local(
+                x,
+                params[l],
+                plan.layers[l],
+                out_halo=plan.rem_halos[l],
+                shard_out_hw=plan.shard_hw[l + 1],
+                map_out_hw=plan.map_hw[l + 1],
+                row_axis=row_axis,
+                col_axis=col_axis,
+                batch_global=bg,
+                mask_offmap=(l != g.end),
+            )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Mesh-level wrappers
+# ---------------------------------------------------------------------------
+
+
+def make_tiled_forward(
+    plan: StackPlan,
+    mesh: Mesh,
+    *,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+    batch_axis: str | None = None,
+    batch_global: int | None = None,
+):
+    """shard_map'd forward: (params, x_global) -> y_global.
+
+    Params replicated (paper: every device holds a full filter copy);
+    activations sharded (batch?, H/th, W/tw, C).
+    """
+    aspec = P(batch_axis, row_axis, col_axis, None)
+    local = functools.partial(
+        apply_stack_local,
+        plan=plan,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        batch_global=batch_global,
+    )
+    return shard_map(
+        lambda params, x: local(params, x),
+        mesh=mesh,
+        in_specs=(P(), aspec),
+        out_specs=aspec,
+        check_rep=False,
+    )
+
+
+def make_tiled_loss(
+    plan: StackPlan,
+    mesh: Mesh,
+    loss_local,
+    *,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+    batch_axis: str | None = None,
+    batch_global: int | None = None,
+):
+    """shard_map'd scalar loss: mean over the *global* output map.
+
+    loss_local(y_local, t_local) -> (local_sum, local_count).  The cross-tile
+    psum makes the scalar identical to the untiled loss, so jax.grad of this
+    function reproduces the paper's tiled backward pass exactly (including
+    the weight-gradient partial-sum aggregation, inserted by shard_map
+    transposition for the replicated params operand).
+    """
+    aspec = P(batch_axis, row_axis, col_axis, None)
+    axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
+
+    def fn(params, x, target):
+        y = apply_stack_local(
+            params, x, plan, row_axis=row_axis, col_axis=col_axis, batch_global=batch_global
+        )
+        s, c = loss_local(y, target)
+        s = lax.psum(s, axes)
+        c = lax.psum(c, axes)
+        return s / c
+
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(), aspec, aspec),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+
+def make_deferred_grad_step(
+    plan: StackPlan,
+    mesh: Mesh,
+    loss_local,
+    *,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+    batch_axis: str | None = None,
+    microbatches: int = 1,
+):
+    """Paper §4.1 deferred weight aggregation: per-tile partial weight grads
+    accumulate locally across ``microbatches`` samples; ONE psum at the end
+    of the batch produces the final weight gradients.
+
+    Returns (loss_mean, grads) with grads already aggregated.  x/target are
+    (microbatches, b, H, W, C) globally.
+    """
+    aspec = P(None, batch_axis, row_axis, col_axis, None)
+    tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
+
+    def local_loss(params, x, t):
+        y = apply_stack_local(params, x, plan, row_axis=row_axis, col_axis=col_axis)
+        s, c = loss_local(y, t)
+        # Divide by the *global* count; the cross-tile sum is deferred to the
+        # gradient aggregation (linearity), matching the paper's schedule.
+        return s, c
+
+    def fn(params, xs, ts):
+        def step(carry, xt):
+            acc, loss_acc, cnt_acc = carry
+            x, t = xt
+            (s, c), g = jax.value_and_grad(local_loss, has_aux=True)(params, x, t)
+
+            def _upd(a, b):
+                return a + b
+
+            acc = jax.tree.map(_upd, acc, g)
+            return (acc, loss_acc + s, cnt_acc + c), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (acc, loss_sum, cnt), _ = lax.scan(step, (zeros, 0.0, 0.0), (xs, ts))
+        # The single end-of-batch aggregation (partial sums -> final grads).
+        cnt_g = lax.psum(cnt, tile_axes)
+        grads = jax.tree.map(lambda a: lax.psum(a, tile_axes) / cnt_g, acc)
+        loss = lax.psum(loss_sum, tile_axes) / cnt_g
+        return loss, grads
+
+    def grad_local_loss(params, x, t):
+        s, c = local_loss(params, x, t)
+        return s, c
+
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(), aspec, aspec),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference (untiled) counterparts for testing
+# ---------------------------------------------------------------------------
+
+
+def reference_forward(params, x, plan: StackPlan):
+    return stack_reference(x, params, plan.layers)
+
+
+def reference_loss(params, x, target, plan: StackPlan, loss_local):
+    y = reference_forward(params, x, plan)
+    s, c = loss_local(y, target)
+    return s / c

@@ -1,0 +1,206 @@
+"""Grouping cost model + optimizer (paper §3/§5.3/§5.4 and tech report [21]).
+
+Grouping trades redundant halo compute against communication/synchronisation
+frequency.  The optimum depends on the hardware ratio of compute rate to link
+bandwidth/latency: the paper measures no-grouping optimal on compute-bound
+Raspberry Pis (Fig. 7) and grouping optimal on comm-bound Jetson GPUs
+(Fig. 8).  This module provides the analytic cost model over a hardware
+profile and a DP optimizer for the grouping profile, and ships profiles for
+the paper's two testbeds plus the TPU-v5e target.
+
+Cost of one training cycle (batch of ``batch`` samples) under profile hw for
+a grouping (s..e are inclusive layer ranges):
+
+  compute   3x forward MACs over *extended* (halo-grown) tiles  / hw.flops
+            (fwd + delta backprop + weight grad each ~= the fwd MACs; §4.1)
+  boundary  2x per-group-input halo bytes / hw.link_bw (fwd + bwd)
+  sync      2x hw.sync_latency per group boundary
+  weights   once per batch: ring all-reduce of all filter bytes
+
+All terms scale with batch except the weight aggregation - exactly the
+paper's Fig. 7 observation that larger batches favour finer grouping on the
+Pis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.spatial import LayerDef
+from repro.core.tiling import Group
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops: float          # sustained MAC/s *per tile executor* (2 MAC = 1 FLOP pair)
+    link_bw: float        # bytes/s per link for boundary exchange
+    sync_latency: float   # seconds per synchronisation round
+    agg_bw: float         # bytes/s for the weight all-reduce
+    dtype_bytes: int = 4
+
+
+# The paper's testbeds (order-of-magnitude; calibrated so the measured
+# regimes reproduce: Pi => no grouping, Jetson => grouping).
+PI3_PROFILE = HardwareProfile(
+    name="pi3-core",
+    flops=0.0435e9,           # one Cortex-A53 core running darknet's naive
+                              # GEMM; calibrated so 1 tile x 1 sample takes
+                              # ~7 min on YOLOv2-16 (paper S5.1, Fig. 5)
+    link_bw=12.5e6 / 4,       # 100 Mbps Ethernet shared by 4 tile processes
+    sync_latency=2e-3,        # TCP round + process sync
+    agg_bw=12.5e6,
+)
+
+JETSON_PROFILE = HardwareProfile(
+    name="jetson-nano-gpu",
+    flops=235e9,              # Maxwell 128-core GPU, fp32 MAC/s
+    link_bw=1.25e9,           # 10 Gbps Ethernet
+    sync_latency=5e-3,        # kernel launch + D2H/H2D + TCP round
+    agg_bw=1.25e9,
+)
+
+TPU_V5E_PROFILE = HardwareProfile(
+    name="tpu-v5e-chip",
+    flops=98.5e12,            # 197 TFLOP/s bf16 = 98.5e12 MAC/s
+    link_bw=50e9,             # ICI per link
+    sync_latency=2e-6,        # ICI collective launch
+    agg_bw=50e9,
+    dtype_bytes=2,
+)
+
+PROFILES = {p.name: p for p in (PI3_PROFILE, JETSON_PROFILE, TPU_V5E_PROFILE)}
+
+
+# ---------------------------------------------------------------------------
+# Geometry helpers (cost-model view: interior tile, both-side halos)
+# ---------------------------------------------------------------------------
+
+
+def _map_extents(input_hw: tuple[int, int], layers: Sequence[LayerDef]):
+    ext = [tuple(input_hw)]
+    for l in layers:
+        h, w = ext[-1]
+        ext.append((l.out_extent(h), l.out_extent(w)))
+    return ext
+
+
+def _group_cost(
+    layers: Sequence[LayerDef],
+    ext: Sequence[tuple[int, int]],
+    s: int,
+    e: int,
+    n: int,
+    m: int,
+    hw: HardwareProfile,
+    batch: int,
+) -> tuple[float, float, float]:
+    """(compute_s, boundary_s, sync_s) for group [s, e] per training cycle."""
+    # Halo widths at the input of each layer of the group (interior tile =
+    # worst case: halo on both sides).  Built backwards per eq. (1).
+    halo_lo = [0] * (e - s + 2)
+    halo_hi = [0] * (e - s + 2)
+    for idx in range(e, s - 1, -1):
+        l = layers[idx]
+        p, q = l.padding, l.kernel - l.stride - l.padding
+        k = idx - s
+        halo_lo[k] = halo_lo[k + 1] * l.stride + p
+        halo_hi[k] = halo_hi[k + 1] * l.stride + q
+
+    compute = 0.0
+    for idx in range(s, e + 1):
+        l = layers[idx]
+        oh, ow = ext[idx + 1]
+        k = idx - s
+        ext_oh = oh // n + halo_lo[k + 1] + halo_hi[k + 1]
+        ext_ow = ow // m + halo_lo[k + 1] + halo_hi[k + 1]
+        if l.pool:
+            macs = ext_oh * ext_ow * max(l.in_channels, 1) * l.kernel * l.kernel
+        else:
+            macs = ext_oh * ext_ow * l.kernel * l.kernel * l.in_channels * l.out_channels
+        # fwd + delta backprop + weight grad ~= 3x fwd MACs (paper §4.1)
+        compute += (1.0 if l.pool else 3.0) * macs
+    compute_s = batch * compute / hw.flops
+
+    ih, iw = ext[s]
+    cin = max(layers[s].in_channels, 1)
+    core_h, core_w = ih // n, iw // m
+    halo_elems = (core_h + halo_lo[0] + halo_hi[0]) * (core_w + halo_lo[0] + halo_hi[0]) - core_h * core_w
+    # fwd boundary + bwd boundary (delta halo ~ same width; paper §4.2 notes
+    # wgrad reuses the fwd halo so it adds no traffic)
+    boundary_s = batch * 2 * halo_elems * cin * hw.dtype_bytes / hw.link_bw
+    sync_s = batch * 2 * hw.sync_latency
+    return compute_s, boundary_s, sync_s
+
+
+def profile_cost(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    groups: Sequence[Group],
+    n: int,
+    m: int,
+    hw: HardwareProfile,
+    batch: int = 1,
+) -> dict:
+    """Total cycle cost split by component for a grouping profile."""
+    ext = _map_extents(input_hw, layers)
+    compute = boundary = sync = 0.0
+    for g in groups:
+        c, b, s_ = _group_cost(layers, ext, g.start, g.end, n, m, hw, batch)
+        compute += c
+        boundary += b
+        sync += s_
+    # Weight aggregation: ring all-reduce of all filter bytes, once per batch.
+    tiles = n * m
+    wbytes = sum(
+        l.kernel * l.kernel * l.in_channels * l.out_channels * hw.dtype_bytes
+        for l in layers
+        if not l.pool
+    )
+    weights = 2.0 * wbytes * (tiles - 1) / tiles / hw.agg_bw + hw.sync_latency
+    total = compute + boundary + sync + weights
+    return {
+        "compute": compute,
+        "boundary": boundary,
+        "sync": sync,
+        "weights": weights,
+        "total": total,
+    }
+
+
+def optimize_grouping(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    n: int,
+    m: int,
+    hw: HardwareProfile,
+    batch: int = 1,
+    max_group: int | None = None,
+) -> list[Group]:
+    """DP over group boundaries minimising modelled cycle time.
+
+    dp[e] = min over s<=e of dp[s-1] + cost(group(s, e)).  O(L^2) evaluations
+    of the analytic model - instantaneous for real networks.
+    """
+    L = len(layers)
+    ext = _map_extents(input_hw, layers)
+    max_group = max_group or L
+    INF = float("inf")
+    dp = [INF] * (L + 1)
+    dp[0] = 0.0
+    choice = [0] * (L + 1)
+    for e in range(1, L + 1):
+        for s in range(max(1, e - max_group + 1), e + 1):
+            c, b, y = _group_cost(layers, ext, s - 1, e - 1, n, m, hw, batch)
+            cand = dp[s - 1] + c + b + y
+            if cand < dp[e]:
+                dp[e] = cand
+                choice[e] = s - 1
+    groups: list[Group] = []
+    e = L
+    while e > 0:
+        s = choice[e]
+        groups.append(Group(s, e - 1))
+        e = s
+    groups.reverse()
+    return groups

@@ -1,0 +1,283 @@
+"""Tiled spatial (H x W) convolution / pooling primitives (paper §4.1).
+
+Layout convention: NHWC activations, HWIO filters (TPU-native).  The global
+feature map is sharded over two named mesh axes (tile rows / tile cols) on the
+H and W dimensions; each device holds one tile, fused across layers (paper's
+"execution stacks" are simply SPMD shards that never migrate).
+
+Halo algebra (derivation recorded in DESIGN.md): for a layer with kernel K,
+stride S and symmetric padding P, when every shard satisfies
+``in_shard == out_shard * S`` the shard-level halo is
+
+    halo_lo = P            halo_hi = K - S - P
+
+and a local VALID convolution over the halo-extended tile reproduces the
+global padded convolution exactly.  ``ppermute`` delivers zeros to edge tiles,
+which *is* the zero padding of the global conv - no edge special-casing.
+
+The backward pass is never hand-written: ``jax.grad`` through these functions
+yields the paper's rotated-filter delta propagation (transposed conv), the
+reversed halo exchange (ppermute transpose), and the per-tile weight-gradient
+partial sums + cross-tile summation (psum inserted by shard_map transposition
+for replicated filter operands).  Tests assert exactness vs. the untiled
+oracle to float tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tiling import ConvSpec
+from repro.core.halo import halo_exchange_2d
+
+# ---------------------------------------------------------------------------
+# Layer definitions (geometry + compute attributes)
+# ---------------------------------------------------------------------------
+
+Activation = Callable[[jax.Array], jax.Array]
+
+_ACTIVATIONS: dict[str, Activation] = {
+    "linear": lambda x: x,
+    "relu": jax.nn.relu,
+    "leaky": lambda x: jnp.where(x > 0, x, 0.1 * x),  # darknet leaky slope
+    "gelu": jax.nn.gelu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    """One conv or pool layer of a spatial stack."""
+
+    kernel: int
+    stride: int = 1
+    in_channels: int = 0
+    out_channels: int = 0
+    pool: bool = False           # max-pool (no params) if True
+    pad: int | None = None       # symmetric padding; default K//2 conv, 0 pool
+    act: str = "leaky"
+    use_bias: bool = True
+    batch_norm: bool = False     # BN w/ exact cross-tile statistics
+
+    @property
+    def padding(self) -> int:
+        if self.pad is not None:
+            return self.pad
+        return 0 if self.pool else self.kernel // 2
+
+    @property
+    def halo(self) -> tuple[int, int]:
+        lo = self.padding
+        hi = self.kernel - self.stride - lo
+        if hi < 0:
+            raise ValueError(
+                f"unsupported geometry K={self.kernel} S={self.stride} P={lo}"
+            )
+        return lo, hi
+
+    def spec(self) -> ConvSpec:
+        return ConvSpec(
+            kernel=self.kernel,
+            stride=self.stride,
+            in_channels=self.in_channels,
+            out_channels=self.out_channels,
+            pool=self.pool,
+        )
+
+    def out_extent(self, h: int) -> int:
+        return (h + 2 * self.padding - self.kernel) // self.stride + 1
+
+
+def init_layer_params(key: jax.Array, layer: LayerDef, dtype=jnp.float32) -> dict:
+    """He-initialised conv params; empty dict for pools."""
+    if layer.pool:
+        return {}
+    k = layer.kernel
+    fan_in = k * k * layer.in_channels
+    wkey, _ = jax.random.split(key)
+    params = {
+        "w": jax.random.normal(wkey, (k, k, layer.in_channels, layer.out_channels), dtype)
+        * jnp.sqrt(2.0 / fan_in).astype(dtype)
+    }
+    if layer.use_bias:
+        params["b"] = jnp.zeros((layer.out_channels,), dtype)
+    if layer.batch_norm:
+        params["bn_scale"] = jnp.ones((layer.out_channels,), dtype)
+        params["bn_bias"] = jnp.zeros((layer.out_channels,), dtype)
+    return params
+
+
+def init_stack_params(key: jax.Array, layers: Sequence[LayerDef], dtype=jnp.float32) -> list[dict]:
+    keys = jax.random.split(key, len(layers))
+    return [init_layer_params(k, l, dtype) for k, l in zip(keys, layers)]
+
+
+# ---------------------------------------------------------------------------
+# Untiled reference (the oracle every tiled path is tested against)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_same(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool2d(x: jax.Array, kernel: int, stride: int, pad: int) -> jax.Array:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, kernel, kernel, 1),
+        window_strides=(1, stride, stride, 1),
+        padding=((0, 0), (pad, pad), (pad, pad), (0, 0)),
+    )
+
+
+def _bn_apply(x, mean, var, scale, bias, eps=1e-5):
+    inv = lax.rsqrt(var + eps)
+    return (x - mean) * inv * scale + bias
+
+
+def apply_layer_reference(x: jax.Array, params: dict, layer: LayerDef) -> jax.Array:
+    """Global (untiled) forward of one layer - the exactness oracle."""
+    p = layer.padding
+    if layer.pool:
+        return maxpool2d(x, layer.kernel, layer.stride, p)
+    y = conv2d_same(x, params["w"], layer.stride, p)
+    if layer.use_bias:
+        y = y + params["b"]
+    if layer.batch_norm:
+        mean = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.mean(jnp.square(y - mean), axis=(0, 1, 2))
+        y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+    return _ACTIVATIONS[layer.act](y)
+
+
+def stack_reference(x: jax.Array, params: Sequence[dict], layers: Sequence[LayerDef]) -> jax.Array:
+    for p, l in zip(params, layers):
+        x = apply_layer_reference(x, p, l)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Tiled (shard-local) compute.  Everything below runs INSIDE shard_map.
+# ---------------------------------------------------------------------------
+
+
+def _valid_conv(x, w, stride):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _valid_pool(x, kernel, stride):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, kernel, kernel, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def _offmap_mask(
+    ext_h: int,
+    ext_w: int,
+    halo: tuple[int, int, int, int],
+    shard_hw: tuple[int, int],
+    map_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+) -> jax.Array:
+    """(ext_h, ext_w) 0/1 mask of positions inside the true map bounds.
+
+    Grouped execution computes values at off-map positions of intermediate
+    layers; the untiled oracle treats those positions as zero padding, so we
+    zero them before they feed the next conv (exactness requirement discussed
+    in DESIGN.md §2).
+    """
+    i = lax.axis_index(row_axis)
+    j = lax.axis_index(col_axis)
+    row0 = i * shard_hw[0] - halo[0]
+    col0 = j * shard_hw[1] - halo[2]
+    rows = row0 + lax.iota(jnp.int32, ext_h)
+    cols = col0 + lax.iota(jnp.int32, ext_w)
+    rmask = (rows >= 0) & (rows < map_hw[0])
+    cmask = (cols >= 0) & (cols < map_hw[1])
+    return (rmask[:, None] & cmask[None, :]).astype(jnp.float32)
+
+
+def _core_mask(
+    ext_h: int,
+    ext_w: int,
+    halo: tuple[int, int, int, int],
+) -> jax.Array:
+    """Mask selecting the core (owned) region of a halo-extended tile."""
+    top, bottom, left, right = halo
+    rmask = (lax.iota(jnp.int32, ext_h) >= top) & (lax.iota(jnp.int32, ext_h) < ext_h - bottom)
+    cmask = (lax.iota(jnp.int32, ext_w) >= left) & (lax.iota(jnp.int32, ext_w) < ext_w - right)
+    return (rmask[:, None] & cmask[None, :]).astype(jnp.float32)
+
+
+def _bn_tiled(y, layer, params, core_halo, tile_axes, n_global):
+    """Exact cross-tile batch norm: statistics over core (owned) positions
+    only - overlap/halo regions are duplicated across tiles and must not be
+    double counted - reduced with psum over the tile axes."""
+    ext_h, ext_w = y.shape[1], y.shape[2]
+    mask = _core_mask(ext_h, ext_w, core_halo)[None, :, :, None]
+    s = lax.psum(jnp.sum(y * mask, axis=(0, 1, 2)), tile_axes)
+    ss = lax.psum(jnp.sum(jnp.square(y) * mask, axis=(0, 1, 2)), tile_axes)
+    mean = s / n_global
+    var = ss / n_global - jnp.square(mean)
+    return _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+
+
+def apply_layer_local(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    out_halo: tuple[int, int, int, int],
+    shard_out_hw: tuple[int, int],
+    map_out_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    mask_offmap: bool,
+) -> jax.Array:
+    """One layer on a halo-extended local tile (input halo already present).
+
+    out_halo: remaining halo on the produced output (0s when the layer is the
+    last of its group).  mask_offmap zeroes off-map positions when the output
+    still carries halo that a later layer will consume.
+    """
+    if layer.pool:
+        y = _valid_pool(x, layer.kernel, layer.stride)
+    else:
+        y = _valid_conv(x, params["w"], layer.stride)
+        if layer.use_bias:
+            y = y + params["b"]
+    if layer.batch_norm and not layer.pool:
+        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+        y = _bn_tiled(y, layer, params, out_halo, (row_axis, col_axis), n_global)
+    y = _ACTIVATIONS[layer.act](y)
+    if mask_offmap and any(h > 0 for h in out_halo):
+        m = _offmap_mask(
+            y.shape[1], y.shape[2], out_halo, shard_out_hw, map_out_hw, row_axis, col_axis
+        )
+        y = y * m[None, :, :, None].astype(y.dtype)
+    return y

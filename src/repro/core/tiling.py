@@ -1,0 +1,434 @@
+"""Tile/halo geometry for distributed CNN training (paper §4.2, eqs 1a-d / 2a-d).
+
+The paper partitions feature maps (forward) and delta-gradient maps (backward)
+into an N x M grid along height/width.  Each tile's convolution needs its core
+region plus a *halo* of boundary data owned by neighbouring tiles.  When layers
+are *grouped*, the halo at the group input is the recursively-grown dependent
+region of the tile's output span across every layer in the group (eqs 1a-d for
+the forward direction, 2a-d for backward).
+
+Everything in this module is pure integer geometry - no jax arrays - so it can
+run at trace time and feed static shapes into shard_map'd compute.
+
+Coordinate convention: a span is [x1, x2] *inclusive*, matching the paper's
+(x1, y1)-(x2, y2) tile representation.  Layer ``l`` maps input spans to output
+spans; ``dependent_region`` inverts that mapping (paper eq. 1), and
+``forward_region`` applies it (paper eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Layer descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry-relevant description of a conv or pool layer.
+
+    kernel: receptive field K (K x K filters).
+    stride: stride S.
+    pool:   True for pooling layers (geometry is identical; flag is kept so
+            cost models can weight FLOPs differently).
+    out_channels / in_channels: used only by the cost model.
+    """
+
+    kernel: int
+    stride: int = 1
+    in_channels: int = 0
+    out_channels: int = 0
+    pool: bool = False
+
+    @property
+    def half(self) -> int:
+        return self.kernel // 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """Inclusive 1-D span [lo, hi]."""
+
+    lo: int
+    hi: int
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo + 1
+
+    def clip(self, bound: int) -> "Span":
+        return Span(max(self.lo, 0), min(self.hi, bound - 1))
+
+    def shift(self, d: int) -> "Span":
+        return Span(self.lo + d, self.hi + d)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileBox:
+    """2-D tile box: row span x col span (paper's (x1,y1)-(x2,y2))."""
+
+    rows: Span
+    cols: Span
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows.size, self.cols.size)
+
+
+# ---------------------------------------------------------------------------
+# Paper equations (1a-d): dependent region one layer backwards (forward pass)
+# ---------------------------------------------------------------------------
+
+
+def dependent_region_1d(span: Span, layer: ConvSpec) -> Span:
+    """Input span of ``layer`` needed to produce output ``span``.
+
+    Paper eq. (1a-d) for convolutional layer l-1 (SAME-padded convolution of
+    stride S, kernel K):
+
+        x1_{l-1} = x1_l * S - floor(K/2)
+        x2_{l-1} = x2_l * S + floor(K/2) + (S - 1)
+    """
+    k2 = layer.half
+    s = layer.stride
+    return Span(span.lo * s - k2, span.hi * s + k2 + (s - 1))
+
+
+def forward_region_1d(span: Span, layer: ConvSpec) -> Span:
+    """Output span of ``layer`` computable from input ``span`` (paper eq. 2).
+
+        x1_{l+1} = ceil((x1_l - floor(K/2)) / S)
+        x2_{l+1} = floor((x2_l + floor(K/2)) / S)
+
+    This is the exact inverse direction of eq. (1): the set of outputs whose
+    dependent region lies fully inside ``span``.  The backward pass uses it to
+    grow delta-map tile spans layer by layer.
+    """
+    k2 = layer.half
+    s = layer.stride
+    lo = math.ceil((span.lo - k2) / s)
+    hi = math.floor((span.hi + k2) / s)
+    return Span(lo, hi)
+
+
+def dependent_region(box: TileBox, layer: ConvSpec) -> TileBox:
+    return TileBox(dependent_region_1d(box.rows, layer), dependent_region_1d(box.cols, layer))
+
+
+def forward_region(box: TileBox, layer: ConvSpec) -> TileBox:
+    return TileBox(forward_region_1d(box.rows, layer), forward_region_1d(box.cols, layer))
+
+
+# ---------------------------------------------------------------------------
+# Grid partitioning
+# ---------------------------------------------------------------------------
+
+
+def partition_1d(extent: int, parts: int) -> list[Span]:
+    """Split [0, extent) into ``parts`` near-equal inclusive spans."""
+    if parts <= 0:
+        raise ValueError(f"parts must be positive, got {parts}")
+    if extent < parts:
+        raise ValueError(f"cannot split extent {extent} into {parts} tiles")
+    base, rem = divmod(extent, parts)
+    spans = []
+    lo = 0
+    for i in range(parts):
+        size = base + (1 if i < rem else 0)
+        spans.append(Span(lo, lo + size - 1))
+        lo += size
+    return spans
+
+
+def partition_grid(height: int, width: int, n: int, m: int) -> list[list[TileBox]]:
+    """Paper Fig. 1: N x M grid-wise partition of an H x W map."""
+    rows = partition_1d(height, n)
+    cols = partition_1d(width, m)
+    return [[TileBox(r, c) for c in cols] for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    """Group (s, e): layers s..e inclusive; halo sync happens at the input of
+    layer ``s`` only (paper §4.2 tuple (s, e) convention, adapted to
+    inclusive layer indices)."""
+
+    start: int
+    end: int
+
+    @property
+    def layers(self) -> range:
+        return range(self.start, self.end + 1)
+
+
+def validate_profile(groups: Sequence[Group], n_layers: int) -> None:
+    """A grouping profile must tile 0..n_layers-1 contiguously."""
+    if not groups:
+        raise ValueError("empty grouping profile")
+    expect = 0
+    for g in groups:
+        if g.start != expect or g.end < g.start:
+            raise ValueError(f"profile not contiguous at group {g}")
+        expect = g.end + 1
+    if expect != n_layers:
+        raise ValueError(f"profile covers {expect} layers, model has {n_layers}")
+
+
+def no_grouping(n_layers: int) -> list[Group]:
+    """Sync every layer (paper's Pi-optimal profile)."""
+    return [Group(i, i) for i in range(n_layers)]
+
+
+def single_group(n_layers: int) -> list[Group]:
+    """One group for the whole network (max redundant compute, min syncs)."""
+    return [Group(0, n_layers - 1)]
+
+
+def uniform_grouping(n_layers: int, group_size: int) -> list[Group]:
+    groups = []
+    s = 0
+    while s < n_layers:
+        e = min(s + group_size - 1, n_layers - 1)
+        groups.append(Group(s, e))
+        s = e + 1
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Group halo growth (recursive application of eq. 1 across a group)
+# ---------------------------------------------------------------------------
+
+
+def group_input_region_1d(out_span: Span, layers: Sequence[ConvSpec]) -> Span:
+    """Dependent input span at the *group input* for an output span at the
+    group output, by recursing eq. (1) backwards through ``layers``
+    (ordered first..last)."""
+    span = out_span
+    for layer in reversed(layers):
+        span = dependent_region_1d(span, layer)
+    return span
+
+
+def group_halo_width(layers: Sequence[ConvSpec]) -> int:
+    """Halo width (per side, at unit stride product) the group input needs
+    beyond the core tile.  Equals the cumulative receptive-field growth."""
+    span = Span(0, 0)
+    for layer in reversed(list(layers)):
+        span = dependent_region_1d(span, layer)
+    return -span.lo
+
+
+def cumulative_stride(layers: Sequence[ConvSpec]) -> int:
+    s = 1
+    for layer in layers:
+        s *= layer.stride
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Full tiling plan: per-group, per-layer spans for every tile
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Static geometry of one layer inside one group for one tile.
+
+    in_box / out_box: spans (possibly exceeding map bounds before clipping)
+    of the data this tile holds at the layer input/output.  ``pad``: how much
+    of the in_box hangs off each map edge (top, bottom, left, right) and must
+    be zero-filled (SAME-conv boundary semantics).
+    """
+
+    layer_index: int
+    in_box: TileBox
+    out_box: TileBox
+    pad: tuple[int, int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    group: Group
+    # Span (per tile) of the data gathered at the group input, i.e. core tile
+    # + halo.  Unclipped; pad gives the off-edge zero fill.
+    gather_box: TileBox
+    pad: tuple[int, int, int, int]
+    layers: tuple[LayerPlan, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    tile: tuple[int, int]
+    groups: tuple[GroupPlan, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingPlan:
+    """Complete forward-pass geometry for an (n x m) tiling of a conv stack
+    under a grouping profile.  Backward geometry mirrors it (eq. 2) and is
+    derived by AD at runtime; `bwd_halo_widths` records the analytic widths
+    for the cost model."""
+
+    n: int
+    m: int
+    input_hw: tuple[int, int]
+    layer_hw: tuple[tuple[int, int], ...]  # map extent at each layer input
+    groups: tuple[Group, ...]
+    tiles: tuple[tuple[TilePlan, ...], ...]
+
+    def tile_plan(self, i: int, j: int) -> TilePlan:
+        return self.tiles[i][j]
+
+
+def _layer_extents(input_hw: tuple[int, int], layers: Sequence[ConvSpec]) -> list[tuple[int, int]]:
+    """Map extents at the input of each layer (and the final output)."""
+    h, w = input_hw
+    ext = [(h, w)]
+    for sp in layers:
+        h = -(-h // sp.stride)
+        w = -(-w // sp.stride)
+        ext.append((h, w))
+    return ext
+
+
+def build_tiling_plan(
+    input_hw: tuple[int, int],
+    layers: Sequence[ConvSpec],
+    n: int,
+    m: int,
+    groups: Sequence[Group] | None = None,
+) -> TilingPlan:
+    """Construct the complete forward tiling plan.
+
+    Per paper §4.2: for each group (s, e), the output of layer e is
+    partitioned equally among tiles, then eq. (1) recursively yields each
+    tile's dependent region at every intermediate layer down to the group
+    input, which defines the gather (core+halo) box.
+    """
+    layers = list(layers)
+    n_layers = len(layers)
+    groups = list(groups) if groups is not None else no_grouping(n_layers)
+    validate_profile(groups, n_layers)
+    extents = _layer_extents(input_hw, layers)
+
+    tiles: list[list[TilePlan]] = [[None] * m for _ in range(n)]  # type: ignore
+    for i in range(n):
+        for j in range(m):
+            gplans = []
+            for g in groups:
+                out_h, out_w = extents[g.end + 1]
+                out_rows = partition_1d(out_h, n)[i]
+                out_cols = partition_1d(out_w, m)[j]
+                # Recurse eq. (1) from group output back to group input,
+                # recording the (unclipped) in/out boxes of each layer.
+                boxes = [TileBox(out_rows, out_cols)]
+                for l in range(g.end, g.start - 1, -1):
+                    boxes.append(dependent_region(boxes[-1], layers[l]))
+                boxes.reverse()  # boxes[k] = input box of layer (s + k)
+                lplans = []
+                for k, l in enumerate(g.layers):
+                    ih, iw = extents[l]
+                    ib, ob = boxes[k], boxes[k + 1]
+                    pad = (
+                        max(0, -ib.rows.lo),
+                        max(0, ib.rows.hi - (ih - 1)),
+                        max(0, -ib.cols.lo),
+                        max(0, ib.cols.hi - (iw - 1)),
+                    )
+                    lplans.append(LayerPlan(l, ib, ob, pad))
+                gh, gw = extents[g.start]
+                gb = boxes[0]
+                gpad = (
+                    max(0, -gb.rows.lo),
+                    max(0, gb.rows.hi - (gh - 1)),
+                    max(0, -gb.cols.lo),
+                    max(0, gb.cols.hi - (gw - 1)),
+                )
+                gplans.append(GroupPlan(g, gb, gpad, tuple(lplans)))
+            tiles[i][j] = TilePlan((i, j), tuple(gplans))
+
+    return TilingPlan(
+        n=n,
+        m=m,
+        input_hw=tuple(input_hw),
+        layer_hw=tuple(extents),
+        groups=tuple(groups),
+        tiles=tuple(tuple(r) for r in tiles),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Derived quantities for the cost model / memory accounting
+# ---------------------------------------------------------------------------
+
+
+def halo_bytes_per_group(plan: TilingPlan, layers: Sequence[ConvSpec], dtype_bytes: int = 4) -> list[int]:
+    """Total boundary bytes exchanged at each group input across all tiles
+    (forward pass; backward is symmetrical, the paper notes, so x2 for a
+    training step)."""
+    layers = list(layers)
+    out = []
+    for gi, g in enumerate(plan.groups):
+        total = 0
+        ih, iw = plan.layer_hw[g.start]
+        ch = layers[g.start].in_channels
+        for i in range(plan.n):
+            for j in range(plan.m):
+                gp = plan.tiles[i][j].groups[gi]
+                core_rows = partition_1d(ih, plan.n)[i]
+                core_cols = partition_1d(iw, plan.m)[j]
+                gb = gp.gather_box
+                clipped = TileBox(gb.rows.clip(ih), gb.cols.clip(iw))
+                halo_elems = (
+                    clipped.rows.size * clipped.cols.size
+                    - core_rows.size * core_cols.size
+                )
+                total += max(0, halo_elems) * max(ch, 1) * dtype_bytes
+        out.append(total)
+    return out
+
+
+def redundant_flops(plan: TilingPlan, layers: Sequence[ConvSpec]) -> int:
+    """Extra MACs computed because grouped tiles redo halo regions locally."""
+    layers = list(layers)
+    total = 0
+    for gi, g in enumerate(plan.groups):
+        for l in g.layers:
+            sp = layers[l]
+            oh, ow = plan.layer_hw[l + 1]
+            per_out = 2 * sp.kernel * sp.kernel * max(sp.in_channels, 1) * max(sp.out_channels, 1)
+            tiled_outputs = 0
+            for i in range(plan.n):
+                for j in range(plan.m):
+                    ob = plan.tiles[i][j].groups[gi].layers[l - g.start].out_box
+                    clipped = TileBox(ob.rows.clip(oh), ob.cols.clip(ow))
+                    tiled_outputs += clipped.rows.size * clipped.cols.size
+            total += per_out * max(0, tiled_outputs - oh * ow)
+    return total
+
+
+def peak_tile_activation_elems(plan: TilingPlan, layers: Sequence[ConvSpec]) -> int:
+    """Peak per-tile activation footprint (elements), the paper's Fig. 6
+    memory metric: max over layers of (gathered input + produced output)."""
+    layers = list(layers)
+    peak = 0
+    for row in plan.tiles:
+        for tp in row:
+            for gp in tp.groups:
+                for lp in gp.layers:
+                    sp = layers[lp.layer_index]
+                    cin = max(sp.in_channels, 1)
+                    cout = max(sp.out_channels, 1)
+                    elems = lp.in_box.shape[0] * lp.in_box.shape[1] * cin
+                    elems += lp.out_box.shape[0] * lp.out_box.shape[1] * cout
+                    peak = max(peak, elems)
+    return peak

@@ -1,0 +1,113 @@
+"""Direct NHWC conv2d Pallas TPU kernel for the paper's tiled stacks.
+
+TPU adaptation of the paper's hot spot (DESIGN.md S2): the spatial tiling
+bounds each device's working set - one halo-extended tile - to VMEM scale
+*by construction*, so the kernel maps the entire local tile into VMEM and
+decomposes the KxK convolution into K^2 shifted (OH*OW, Cin) x (Cin, bCout)
+MXU matmuls, accumulating in fp32.  This is the paper's fused execution
+stack collapsed to the HBM->VMEM level: the halo is exchanged *between*
+devices by core/halo.py; *within* the device the kernel reuses the VMEM
+tile across all K^2 taps and the full Cout extent (grid-minor Cout blocks),
+so the input is read from HBM exactly once per layer.
+
+Grid: (N, n_cout_blocks), Cout minor so the x block stays resident.
+BlockSpecs:
+    x    (1, H, W, Cin)     - the halo-extended local tile
+    w    (K, K, Cin, bc)    - one Cout slab of the filter
+    out  (1, OH, OW, bc)
+bc defaults to 128 (MXU lane width); fp32 accumulation in VMEM scratch.
+
+Supports stride 1/2 and fused bias + activation (linear / relu / leaky 0.1,
+darknet's slope).  VALID padding: ops.py pre-pads, mirroring how the tiled
+runtime delivers halo-extended inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(
+    x_ref, w_ref, b_ref,
+    o_ref,
+    acc_ref,
+    *,
+    kernel: int,
+    stride: int,
+    act: str,
+    oh: int,
+    ow: int,
+):
+    x = x_ref[0]                                   # (H, W, Cin)
+    cin = x.shape[-1]
+    bc = o_ref.shape[-1]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for ki in range(kernel):
+        for kj in range(kernel):
+            xs = jax.lax.slice(
+                x,
+                (ki, kj, 0),
+                (ki + stride * (oh - 1) + 1, kj + stride * (ow - 1) + 1, cin),
+                (stride, stride, 1),
+            )                                      # (OH, OW, Cin)
+            wk = w_ref[ki, kj]                     # (Cin, bc)
+            acc_ref[...] += jax.lax.dot_general(
+                xs.reshape(oh * ow, cin).astype(jnp.float32),
+                wk.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "leaky":
+        y = jnp.where(y > 0, y, 0.1 * y)
+    o_ref[0] = y.reshape(oh, ow, bc).astype(o_ref.dtype)
+
+
+def conv2d_tile(
+    x: jax.Array,                # (N, H, W, Cin) halo-extended local tile
+    w: jax.Array,                # (K, K, Cin, Cout)
+    b: jax.Array | None = None,  # (Cout,)
+    *,
+    stride: int = 1,
+    act: str = "linear",
+    bc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, h, wdt, cin = x.shape
+    k = w.shape[0]
+    cout = w.shape[-1]
+    oh = (h - k) // stride + 1
+    ow = (wdt - k) // stride + 1
+    bc = min(bc, cout)
+    # pad Cout up to a block multiple
+    cout_p = -(-cout // bc) * bc
+    if cout_p != cout:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
+    if b is None:
+        b = jnp.zeros((cout_p,), x.dtype)
+    elif cout_p != cout:
+        b = jnp.pad(b, (0, cout_p - cout))
+
+    kernel_fn = functools.partial(
+        _conv_kernel, kernel=k, stride=stride, act=act, oh=oh, ow=ow
+    )
+    out = pl.pallas_call(
+        kernel_fn,
+        grid=(n, cout_p // bc),
+        in_specs=[
+            pl.BlockSpec((1, h, wdt, cin), lambda i, co: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, bc), lambda i, co: (0, 0, 0, co)),
+            pl.BlockSpec((bc,), lambda i, co: (co,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, bc), lambda i, co: (i, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout_p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((oh * ow, bc), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)
+    return out[..., :cout]

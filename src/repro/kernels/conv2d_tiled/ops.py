@@ -1,0 +1,48 @@
+"""jit'd wrapper for the tiled conv2d kernel.
+
+``conv2d`` applies SAME/explicit padding then the VALID Pallas kernel -
+the same decomposition the distributed runtime uses (halo exchange delivers
+the padding/halo; the kernel computes the VALID interior).  Backward falls
+back to XLA's conv transpose via custom_vjp (exact; the paper's rotated-
+filter convolution).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_tiled.kernel import conv2d_tile
+from repro.kernels.conv2d_tiled.ref import conv2d_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def conv2d(
+    x, w, b,
+    stride: int = 1,
+    pad: int = 0,
+    act: str = "linear",
+    interpret: bool = False,
+):
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    return conv2d_tile(xp, w, b, stride=stride, act=act, interpret=interpret)
+
+
+def _fwd(x, w, b, stride, pad, act, interpret):
+    return conv2d(x, w, b, stride, pad, act, interpret), (x, w, b)
+
+
+def _bwd(stride, pad, act, interpret, res, g):
+    x, w, b = res
+
+    def f(x_, w_, b_):
+        xp = jnp.pad(x_, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        return conv2d_ref(xp, w_, b_, stride=stride, act=act)
+
+    _, vjp = jax.vjp(f, x, w, b)
+    return vjp(g)
+
+
+conv2d.defvjp(_fwd, _bwd)

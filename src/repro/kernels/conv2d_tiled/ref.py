@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the tiled conv2d kernel (VALID conv + bias + act)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(
+    x: jax.Array,                # (N, H, W, Cin)
+    w: jax.Array,                # (K, K, Cin, Cout)
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    act: str = "linear",
+) -> jax.Array:
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "leaky":
+        y = jnp.where(y > 0, y, 0.1 * y)
+    return y.astype(x.dtype)

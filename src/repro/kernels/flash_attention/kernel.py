@@ -1,0 +1,144 @@
+"""FlashAttention-2 forward Pallas TPU kernel.
+
+Causal + sliding-window + GQA.  Grid (B, Hq, n_q, n_kv) with the KV axis
+minor-most: TPU grids execute sequentially over the minor axis, so the
+running-softmax state (max, denom, weighted accumulator) lives in VMEM
+scratch and is carried across KV steps; the output block is written once on
+the final KV step.
+
+BlockSpec tiling (VMEM working set per grid step):
+    q   (1, bq, 1, dh)   - one query block of one head
+    k/v (1, bk, 1, dh)   - one KV block of the matching KV head (GQA maps
+                           head h -> h // (Hq/Hkv) in the index_map)
+    o   (1, bq, 1, dh)
+    scratch: acc (bq, dh) f32, m (bq, 128) f32, l (bq, 128) f32
+
+bq/bk default 512/512: working set ~ (2*bq + 2*bk)*dh*bytes + bq*dh*4
+~= 1.4 MiB at dh=128/bf16 - comfortably inside v5e VMEM, MXU-aligned
+(bq, bk, dh multiples of 128).
+
+The backward pass deliberately stays on the XLA blocked-streaming path
+(models/attention._sdpa_blocked) - see ops.flash_attention's custom_vjp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    acc_ref, m_ref, l_ref,        # scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bk: int,
+    kv_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]                      # (bq, dh)
+    k = k_ref[0, :, 0, :]                      # (bk, dh)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(
+        (q * scale).astype(jnp.float32),
+        k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,                 # (B, Tq, Hq, Dh)
+    k: jax.Array,                 # (B, Tk, Hkv, Dh)
+    v: jax.Array,                 # (B, Tk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    # pad sequence lengths up to block multiples (masked out via kv_len)
+    tq_p = -(-tq // bq) * bq
+    tk_p = -(-tk // bk) * bk
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, tq_p - tq), (0, 0), (0, 0)))
+    if tk_p != tk:
+        k = jnp.pad(k, ((0, 0), (0, tk_p - tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tk_p - tk), (0, 0), (0, 0)))
+
+    grid = (b, hq, tq_p // bq, tk_p // bk)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, kv_len=tk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b_, h, iq, ik: (b_, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, iq, ik, rep=rep: (b_, ik, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b_, h, iq, ik, rep=rep: (b_, ik, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b_, h, iq, ik: (b_, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tq_p, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :tq]

@@ -1,0 +1,67 @@
+"""jit'd wrapper: Pallas flash-attention forward with an XLA blocked bwd.
+
+``flash_attention`` is a drop-in for models/attention._sdpa on the training
+forward path: custom_vjp runs the Pallas kernel forward and falls back to
+the XLA blocked-streaming implementation for the backward (FA2 backward on
+TPU is a second kernel; the blocked XLA path has identical math/memory
+behaviour and lets AD produce it - recorded in DESIGN.md).
+
+On CPU (tests / this container) pass interpret=True; on TPU leave False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q, k, v,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, causal, window, scale, bq, bk, interpret):
+    out = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, bq, bk, interpret, res, g):
+    q, k, v = res
+    # XLA blocked-streaming backward (recompute-based, no T^2 residency)
+    from repro.models.attention import _sdpa_blocked
+
+    def f(q_, k_, v_):
+        tq, tk = q_.shape[1], k_.shape[1]
+        qp = jnp.arange(tq, dtype=jnp.int32)
+        kp = jnp.arange(tk, dtype=jnp.int32)
+        return _sdpa_blocked(
+            q_, k_, v_, qp, kp, causal=causal, window=window, scale=scale,
+            q_chunk=bq, kv_chunk=bk,
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

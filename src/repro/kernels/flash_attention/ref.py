@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,                 # (B, Tq, Hq, Dh)
+    k: jax.Array,                 # (B, Tk, Hkv, Dh)
+    v: jax.Array,                 # (B, Tk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(b, tq, hkv, rep, dh)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(tq, dtype=jnp.int32)
+    k_pos = jnp.arange(tk, dtype=jnp.int32)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, tq, hq, dh).astype(q.dtype)

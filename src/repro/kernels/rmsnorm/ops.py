@@ -1,0 +1,27 @@
+"""jit'd wrapper for the fused rmsnorm kernel (XLA bwd via custom_vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm as _rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
+    return _rmsnorm_kernel(x, scale, eps=eps, interpret=interpret)
+
+
+def _fwd(x, scale, eps, interpret):
+    return rmsnorm(x, scale, eps, interpret), (x, scale)
+
+
+def _bwd(eps, interpret, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: rmsnorm_ref(x_, s_, eps), x, scale)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

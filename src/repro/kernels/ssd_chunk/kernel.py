@@ -1,0 +1,122 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+The XLA lowering of the SSD "dual" form materialises half a dozen
+(B, nc, H, Q, Q) fp32 tensors per layer (cb, decay segments, masked M, ...)
+- the dry-run measures the mamba2 train cell as memory-bound on exactly
+this traffic.  This kernel fuses the whole intra-chunk computation for one
+(batch, chunk, head) into VMEM: logits-like Q x Q tiles never touch HBM;
+per chunk the kernel reads x/dt/B/C once and writes y_intra + the chunk
+state summary once.
+
+Grid (B, nc, H); VMEM per step at Q=256, N=128, P=64 (mamba2-780m):
+  x (Q,P) + B/C (Q,N) + y (Q,P) + S (N,P) + QxQ scratch ~= 0.6 MiB.
+
+The tiny cross-chunk state recurrence (nc scalars/states per head) and the
+inter-chunk output correction stay in XLA - see ops.ssd_scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # (1, 1, Q, 1, P)
+    dt_ref,     # (1, 1, Q, 1)
+    a_ref,      # (1,)            A for this head
+    b_ref,      # (1, 1, Q, 1, N)
+    c_ref,      # (1, 1, Q, 1, N)
+    y_ref,      # (1, 1, Q, 1, P)   intra-chunk output
+    s_ref,      # (1, 1, 1, N, P)   chunk state
+    d_ref,      # (1, 1, 1)         total chunk decay
+    p_ref,      # (1, 1, Q, 1)      per-position prefix decay exp(cum)
+    *,
+    q: int,
+):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0]                                          # ()
+    bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)         # (Q, N)
+
+    da = dt * a                                           # log-decay per step
+    cum = jnp.cumsum(da)                                  # (Q,) inclusive
+
+    # M[i, j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j,  j <= i
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                     # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    dseg = cum[:, None] - cum[None, :]
+    m = jnp.where(ii >= jj, cb * jnp.exp(dseg) * dt[None, :], 0.0)
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                     # (Q, P)
+
+    # chunk state: S = sum_j exp(cum_Q - cum_j) * dt_j * B_j (x) x_j
+    w = jnp.exp(cum[-1] - cum) * dt                       # (Q,)
+    s = jax.lax.dot_general(
+        bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                     # (N, P)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    s_ref[0, 0, 0] = s
+    d_ref[0, 0, 0] = jnp.exp(cum[-1])
+    p_ref[0, 0, :, 0] = jnp.exp(cum)
+
+
+def ssd_chunk_fwd(
+    x: jax.Array,      # (B, T, H, P)
+    dt: jax.Array,     # (B, T, H) fp32 (softplus'd)
+    A: jax.Array,      # (H,) fp32 negative
+    Bm: jax.Array,     # (B, T, G, N)
+    Cm: jax.Array,     # (B, T, G, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    """-> (y_intra (B,T,H,P) f32, S (B,nc,H,N,P), decay (B,nc,H), pref (B,T,H))."""
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    rep = h // g
+
+    xs = x.reshape(b, nc, q, h, p)
+    dts = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bs = Bm.reshape(b, nc, q, g, n)
+    cs = Cm.reshape(b, nc, q, g, n)
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    y, s, d, pref = pl.pallas_call(
+        kernel,
+        grid=(b, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi, rep=rep: (bi, ci, 0, hi // rep, 0)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi, rep=rep: (bi, ci, 0, hi // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, ci, hi: (bi, ci, hi)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs, dts, A, bs, cs)
+    return y.reshape(b, t, h, p), s, d, pref.reshape(b, t, h)

@@ -1,0 +1,81 @@
+"""jit'd wrapper: full SSD scan = Pallas intra-chunk kernel + XLA
+cross-chunk associative recurrence (tiny: nc states per head).
+
+``ssd_scan`` is a drop-in for models.mamba2._ssd_chunk_scan's forward;
+custom_vjp backward falls back to the XLA reference (AD through the dual
+form), mirroring the flash-attention wrapper's structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_fwd
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+
+def _combine(y_intra, S, decay, pref, Cm, x_dtype, initial_state=None):
+    """Cross-chunk recurrence + inter-chunk output correction (XLA)."""
+    b, nc, h, n, p = S.shape
+    t = y_intra.shape[1]
+    q = t // nc
+    g = Cm.shape[2]
+    rep = h // g
+
+    def comb(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    dsc, ssc = lax.associative_scan(
+        comb, (decay.swapaxes(0, 1), S.swapaxes(0, 1)), axis=0
+    )
+    incl_decay, incl_state = dsc.swapaxes(0, 1), ssc.swapaxes(0, 1)
+    zeros = jnp.zeros_like(incl_state[:, :1])
+    S_in = jnp.concatenate([zeros, incl_state[:, :-1]], axis=1)   # (B,nc,H,N,P)
+    if initial_state is not None:
+        excl_decay = jnp.concatenate(
+            [jnp.ones_like(incl_decay[:, :1]), incl_decay[:, :-1]], axis=1
+        )
+        S_in = S_in + excl_decay[..., None, None] * initial_state[:, None]
+
+    Ch = jnp.repeat(Cm, rep, axis=2) if g != h else Cm            # (B,T,H,N)
+    Cc = Ch.reshape(b, nc, q, h, n).astype(jnp.float32)
+    prefc = pref.reshape(b, nc, q, h)
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp", prefc, Cc, S_in)
+    y = y_intra.reshape(b, nc, q, h, p) + y_inter
+    final = incl_state[:, -1]
+    if initial_state is not None:
+        final = final + incl_decay[:, -1][..., None, None] * initial_state
+    return y.reshape(b, t, h, p).astype(x_dtype), final
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256, interpret: bool = False):
+    """(B,T,H,P) Mamba2 SSD scan -> (y, final_state)."""
+    y_intra, S, decay, pref = ssd_chunk_fwd(
+        x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret
+    )
+    return _combine(y_intra, S, decay, pref, Cm, x.dtype)
+
+
+def _ref_scan(x, dt, A, Bm, Cm, chunk):
+    y_intra, S, decay, pref = ssd_chunk_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    return _combine(y_intra, S, decay, pref, Cm, x.dtype)
+
+
+def _fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    return ssd_scan(x, dt, A, Bm, Cm, chunk, interpret), (x, dt, A, Bm, Cm)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *a: _ref_scan(*a, chunk), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)

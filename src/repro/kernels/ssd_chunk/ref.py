@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors
+models.mamba2._ssd_chunk_scan's intra-chunk math, exposed per chunk)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """-> (y_intra, S, decay, pref) with the same shapes as kernel.ssd_chunk_fwd."""
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, t)
+    nc = t // q
+    rep = h // g
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3) if g != h else Bc
+    Ch = jnp.repeat(Cc, rep, axis=3) if g != h else Cc
+
+    dA = dtc * A
+    cum = jnp.cumsum(dA, axis=2)                       # (B,nc,Q,H)
+    ci = cum.transpose(0, 1, 3, 2)                     # (B,nc,H,Q)
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)
+    dseg = ci[..., :, None] - ci[..., None, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay_m = jnp.where(tri, jnp.exp(dseg), 0.0)
+    m = cb * decay_m * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y = jnp.einsum("bchqk,bckhp->bcqhp", m, xc)
+
+    tail = jnp.exp(ci[..., -1:] - ci)
+    w = tail * dtc.transpose(0, 1, 3, 2)
+    S = jnp.einsum("bchq,bcqhn,bcqhp->bchnp", w, Bh, xc)
+    decay = jnp.exp(ci[..., -1])                       # (B,nc,H)
+    pref = jnp.exp(cum).reshape(b, t, h)
+    return y.reshape(b, t, h, p), S, decay, pref

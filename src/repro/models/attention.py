@@ -1,0 +1,534 @@
+"""Attention: GQA / sliding-window / MLA, train + prefill + cached decode.
+
+Sharding: head dimensions carry the "heads"/"kv_heads" logical axes (TP);
+falls back to replication when head counts don't divide the TP axis (e.g.
+qwen2's 4 KV heads on a 16-way axis).  Long-context decode shards the KV
+cache along *sequence* and combines partial softmax (flash-decode style) -
+see ``decode_attend_seq_sharded``.
+
+Sliding-window attention is the paper's halo operator on the sequence dim:
+``core.sequence.swa_kv_halo`` ships exactly the window-width boundary data
+when the sequence is sharded (context parallelism).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, apply_mrope, dense_init, rms_norm
+from repro.parallel.api import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention implementation switch
+#
+# "naive":   materialise (B,H,Tq,Tk) logits - exact, cheapest to compile,
+#            fine for short sequences and the counting oracle.
+# "blocked": streaming-softmax over KV chunks (the flash-attention algorithm
+#            the Pallas kernel implements on TPU, expressed in XLA): peak
+#            memory per chunk pair only.  The full-depth dry-run uses this.
+# "stub":    shape-preserving near-zero-FLOP stand-in; the dry-run's shallow
+#            counting lowerings use it and add the flash kernel's analytic
+#            FLOP/byte terms instead (analysis/roofline.py) - this keeps the
+#            roofline honest to the TPU kernel rather than to an XLA
+#            materialisation the real system never runs.
+# "auto":    blocked for Tk >= 2048 else naive.
+# ---------------------------------------------------------------------------
+
+import contextlib as _contextlib
+import threading as _threading
+
+
+class _AttnMode(_threading.local):
+    def __init__(self):
+        self.mode = "auto"
+        self.q_chunk = 1024
+        self.kv_chunk = 1024
+
+
+_ATTN = _AttnMode()
+
+
+@_contextlib.contextmanager
+def attention_impl(mode: str, *, q_chunk: int = 1024, kv_chunk: int = 1024):
+    prev = (_ATTN.mode, _ATTN.q_chunk, _ATTN.kv_chunk)
+    _ATTN.mode, _ATTN.q_chunk, _ATTN.kv_chunk = mode, q_chunk, kv_chunk
+    try:
+        yield
+    finally:
+        _ATTN.mode, _ATTN.q_chunk, _ATTN.kv_chunk = prev
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p = {
+            "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+            "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+            "w_uq": dense_init(ks[1], (m.q_lora_rank, cfg.n_heads, qk_dim), dtype, fan_in=m.q_lora_rank),
+            "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+            "w_uk": dense_init(ks[3], (m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim), dtype, fan_in=m.kv_lora_rank),
+            "w_uv": dense_init(ks[4], (m.kv_lora_rank, cfg.n_heads, m.v_head_dim), dtype, fan_in=m.kv_lora_rank),
+            "w_o": dense_init(ks[5], (cfg.n_heads, m.v_head_dim, d), dtype, fan_in=cfg.n_heads * m.v_head_dim),
+        }
+        return p
+    p = {
+        "w_q": dense_init(ks[0], (d, cfg.n_heads, dh), dtype),
+        "w_k": dense_init(ks[1], (d, cfg.n_kv_heads, dh), dtype),
+        "w_v": dense_init(ks[2], (d, cfg.n_kv_heads, dh), dtype),
+        "w_o": dense_init(ks[3], (cfg.n_heads, dh, d), dtype, fan_in=cfg.n_heads * dh),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.n_heads, dh), dtype)
+        p["b_k"] = jnp.zeros((cfg.n_kv_heads, dh), dtype)
+        p["b_v"] = jnp.zeros((cfg.n_kv_heads, dh), dtype)
+    if cfg.attn_out_bias:
+        p["b_o"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (XLA path; the Pallas flash kernel swaps in via
+# kernels/flash_attention/ops.py when cfg asks for it on real TPU)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa_naive(
+    q: jax.Array,            # (B, Tq, Hq, Dh)
+    k: jax.Array,            # (B, Tk, Hkv, Dh)
+    v: jax.Array,            # (B, Tk, Hkv, Dv)
+    q_pos: jax.Array,        # (B, Tq) or (Tq,)
+    k_pos: jax.Array,        # (B, Tk) or (Tk,)
+    *,
+    causal: bool,
+    window: Optional[int],
+    k_valid: Optional[jax.Array] = None,   # (B, Tk) bool - cache validity
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = (q * scale).astype(jnp.float32)
+    # (B, Hkv, rep, Tq, Tk)
+    logits = jnp.einsum(
+        "bqhrd,bkhd->bhrqk",
+        qf.reshape(b, tq, hkv, rep, dh).transpose(0, 1, 2, 3, 4),
+        k.astype(jnp.float32),
+    )
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    mask = jnp.ones((b, tq, tk), dtype=bool) if not causal else (
+        q_pos[:, :, None] >= k_pos[:, None, :]
+    )
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, tq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def _pick_chunk(t: int, c: int) -> int:
+    while c > 16 and t % c:
+        c //= 2
+    return c if t % c == 0 else t
+
+
+def _sdpa_blocked(
+    q, k, v, q_pos, k_pos, *, causal, window, k_valid=None, scale=None,
+    q_chunk=1024, kv_chunk=1024,
+):
+    """Streaming-softmax (flash) attention over KV chunks.
+
+    The XLA expression of the Pallas flash kernel's algorithm: an outer scan
+    over query chunks, an inner scan over KV chunks carrying the running
+    (max, denom, weighted-acc).  Peak memory is one (qc x kc) logits tile per
+    (batch, head) instead of (Tq x Tk) - this is what lets the 32k prefill
+    and 4k train cells fit HBM in the dry-run, mirroring the kernel's VMEM
+    tiling on the real TPU.
+    """
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qc = _pick_chunk(tq, q_chunk)
+    kc = _pick_chunk(tk, kv_chunk)
+    nq, nk = tq // qc, tk // kc
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    q_pos = jnp.broadcast_to(q_pos, (b, tq))
+    k_pos = jnp.broadcast_to(k_pos, (b, tk))
+
+    qf = (q * scale).astype(jnp.float32).reshape(b, nq, qc, hkv, rep, dh)
+    ks = k.astype(jnp.float32).reshape(b, nk, kc, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.astype(jnp.float32).reshape(b, nk, kc, hkv, dv).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(b, nk, kc).transpose(1, 0, 2)
+    kvs = (
+        k_valid.reshape(b, nk, kc).transpose(1, 0, 2)
+        if k_valid is not None
+        else jnp.ones((nk, b, kc), bool)
+    )
+    qps = q_pos.reshape(b, nq, qc)
+
+    def q_block(qi, qp):
+        # qi: (b, qc, hkv, rep, dh); qp: (b, qc)
+        m0 = jnp.full((b, hkv, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, qc, dv), jnp.float32)
+
+        # checkpointed: otherwise the scan's backward saves every chunk's
+        # probs tile == the full (Tq x Tk) tensor blocking exists to avoid.
+        # FA2-style bwd: recompute s/p per chunk from (q, k) + running stats.
+        @jax.checkpoint
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kj, vj, kp, kv_ok = inp
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qi, kj)
+            mask = kv_ok[:, None, :]
+            if causal:
+                mask = mask & (qp[:, :, None] >= kp[:, None, :])
+            if window is not None:
+                mask = mask & (qp[:, :, None] - kp[:, None, :] < window)
+            s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            alpha = jnp.exp(m - m2)
+            l2 = l * alpha + jnp.sum(p, axis=-1)
+            acc2 = acc * alpha[..., None] + jnp.einsum("bhrqk,bkhd->bhrqd", p, vj)
+            return (m2, l2, acc2), None
+
+        (m, l, acc), _ = lax.scan(kv_block, (m0, l0, a0), (ks, vs, kps, kvs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,hkv,rep,qc,dv)
+        return out.transpose(0, 3, 1, 2, 4)                # (b,qc,hkv,rep,dv)
+
+    if nq == 1:
+        out = q_block(qf[:, 0], qps[:, 0])[:, None]
+    else:
+        out = lax.scan(
+            lambda _, x: (None, q_block(*x)),
+            None,
+            (qf.transpose(1, 0, 2, 3, 4, 5), qps.transpose(1, 0, 2)),
+        )[1].transpose(1, 0, 2, 3, 4, 5)                   # (b,nq,qc,hkv,rep,dv)
+    return out.reshape(b, tq, hq, dv).astype(q.dtype)
+
+
+def _sdpa_stub(q, k, v, q_pos, k_pos, **_kw):
+    """Near-zero-FLOP shape/grad-preserving stand-in (dry-run counting mode);
+    the analytic flash-kernel terms are added by analysis/roofline.py."""
+    b, tq, hq, dh = q.shape
+    hkv, dv = k.shape[2], v.shape[-1]
+    rep = hq // hkv
+    vm = jnp.mean(v.astype(jnp.float32), axis=1)           # (b, hkv, dv)
+    out = jnp.broadcast_to(vm[:, None, :, None, :], (b, tq, hkv, rep, dv))
+    out = out.reshape(b, tq, hq, dv)
+    # keep q/k on the grad path (zero contribution)
+    zero = (jnp.sum(q, axis=-1) + jnp.sum(k, axis=(1, 2, 3))[:, None, None]) * 0.0
+    return (out + zero[..., None]).astype(q.dtype)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, causal, window,
+          k_valid=None, scale=None) -> jax.Array:
+    mode = _ATTN.mode
+    if mode == "auto":
+        mode = "blocked" if (k.shape[1] >= 2048 and q.shape[1] > 1) else "naive"
+    if mode == "stub":
+        return _sdpa_stub(q, k, v, q_pos, k_pos)
+    if mode == "blocked":
+        return _sdpa_blocked(
+            q, k, v, q_pos, k_pos, causal=causal, window=window,
+            k_valid=k_valid, scale=scale,
+            q_chunk=_ATTN.q_chunk, kv_chunk=_ATTN.kv_chunk,
+        )
+    return _sdpa_naive(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        k_valid=k_valid, scale=scale,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    q = jnp.einsum("btd,dhe->bthe", x, params["w_q"])
+    k = jnp.einsum("btd,dhe->bthe", x, params["w_k"])
+    v = jnp.einsum("btd,dhe->bthe", x, params["w_v"])
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    if not cfg.use_rope:
+        return q, k
+    if cfg.mrope_sections is not None:
+        # positions: (3, B, T) multimodal streams
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        if cfg.rope_pct < 1.0:
+            rot = int(q.shape[-1] * cfg.rope_pct)
+            rot -= rot % 2
+            q = jnp.concatenate(
+                [apply_rope(q[..., :rot], positions, cfg.rope_theta), q[..., rot:]], axis=-1
+            )
+            k = jnp.concatenate(
+                [apply_rope(k[..., :rot], positions, cfg.rope_theta), k[..., rot:]], axis=-1
+            )
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_override: Optional[tuple[jax.Array, jax.Array]] = None,   # cross-attn
+) -> jax.Array:
+    """Full-sequence attention.  x: (B, T, D) -> (B, T, D)."""
+    if cfg.mla is not None:
+        return mla_attention(params, x, positions, cfg, causal=causal)
+    if positions is None:
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        rope_positions = None     # no rope (whisper-style learned/sinusoid)
+    else:
+        rope_positions = positions
+    q, k, v = _qkv(params, x, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    else:
+        if rope_positions is not None:
+            q, k = _rope_qk(q, k, rope_positions, cfg)
+        kpos = positions if positions.ndim <= 2 else positions[0]
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    qpos = positions if positions.ndim <= 2 else positions[0]
+    out = _sdpa(q, k, v, qpos, kpos, causal=causal, window=window)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bthe,hed->btd", out, params["w_o"])
+    if cfg.attn_out_bias:
+        y = y + params["b_o"]
+    return y
+
+
+def cross_attention_kv(params: dict, enc: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (whisper)."""
+    k = jnp.einsum("btd,dhe->bthe", enc, params["w_k"])
+    v = jnp.einsum("btd,dhe->bthe", enc, params["w_v"])
+    if cfg.qkv_bias:
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig, *, causal=True):
+    m = cfg.mla
+    b, t, _ = x.shape
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+    q = jnp.einsum("btr,rhe->bthe", cq, params["w_uq"])          # (B,T,H,dn+dr)
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    ckv_full = x @ params["w_dkv"]                               # (B,T,rank+dr)
+    c_kv, k_pe = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)  # 1 shared head
+    k_nope = jnp.einsum("btr,rhe->bthe", c_kv, params["w_uk"])
+    v = jnp.einsum("btr,rhe->bthe", c_kv, params["w_uv"])
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, t, cfg.n_heads, m.qk_rope_head_dim))], axis=-1)
+    q_full = constrain(q_full, "batch", "seq", "heads", None)
+    k_full = constrain(k_full, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = _sdpa(q_full, k_full, v, positions, positions, causal=causal, window=None, scale=scale)
+    out = constrain(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bthe,hed->btd", out, params["w_o"])
+
+
+# ---------------------------------------------------------------------------
+# KV caches + single-token decode
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Standard GQA cache.  k/v: (B, S, Hkv, Dh); length: () int32."""
+
+    k: jax.Array
+    v: jax.Array
+    lengths: jax.Array            # (B,) per-slot, for continuous batching
+
+    @classmethod
+    def init(cls, b, s, hkv, dh, dtype):
+        return cls(
+            jnp.zeros((b, s, hkv, dh), dtype),
+            jnp.zeros((b, s, hkv, dh), dtype),
+            jnp.zeros((b,), jnp.int32),
+        )
+
+
+class MLACache(NamedTuple):
+    """MLA compressed cache: c_kv (B, S, rank) + k_pe (B, S, dr)."""
+
+    c_kv: jax.Array
+    k_pe: jax.Array
+    lengths: jax.Array            # (B,)
+
+    @classmethod
+    def init(cls, b, s, rank, dr, dtype):
+        return cls(
+            jnp.zeros((b, s, rank), dtype),
+            jnp.zeros((b, s, dr), dtype),
+            jnp.zeros((b,), jnp.int32),
+        )
+
+
+def decode_attention(
+    params: dict,
+    x: jax.Array,               # (B, 1, D)
+    cache,
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    seq_sharded: bool = False,
+) -> tuple[jax.Array, object]:
+    """One-token decode.  Updates the cache in place (functionally)."""
+    if cfg.mla is not None:
+        return _decode_mla(params, x, cache, cfg)
+    b = x.shape[0]
+    pos = cache.lengths                            # (B,) per-slot positions
+    positions = pos[:, None]
+    q, k_new, v_new = _qkv(params, x, cfg)
+    if cfg.mrope_sections is not None:
+        mp = jnp.broadcast_to(positions, (3,) + positions.shape)
+        q, k_new = _rope_qk(q, k_new, mp, cfg)
+    else:
+        q, k_new = _rope_qk(q, k_new, positions, cfg)
+    s = cache.k.shape[1]
+    ring = window is not None and s <= window
+    slot = pos % s if ring else jnp.minimum(pos, s - 1)
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    new_cache = KVCache(k, v, pos + 1)
+    row = jnp.arange(s, dtype=jnp.int32)[None]     # (1, S)
+    if ring:
+        # absolute position of each ring slot, per batch row
+        wrap = ((pos // s) * s)[:, None]
+        kpos = jnp.where(row <= (pos % s)[:, None], wrap + row, wrap - s + row)
+    else:
+        kpos = jnp.broadcast_to(row, (b, s))
+    # kpos >= 0 excludes never-written ring slots: without it the zero keys
+    # count as valid at early positions and dilute the softmax denominator
+    valid = (kpos <= pos[:, None]) & (kpos >= 0)
+    if seq_sharded:
+        out = decode_attend_seq_sharded(q, k, v, positions, kpos, valid, window)
+    else:
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+        out = _sdpa(q, k, v, positions, kpos, causal=True, window=window, k_valid=valid)
+    y = jnp.einsum("bthe,hed->btd", out, params["w_o"])
+    if cfg.attn_out_bias:
+        y = y + params["b_o"]
+    return y, new_cache
+
+
+def decode_attend_seq_sharded(q, k, v, q_pos, k_pos, valid, window):
+    """Flash-decode: KV cache sharded along sequence; each shard computes a
+    partial softmax (max, sum, weighted value) and XLA combines via the
+    constraint-driven reduction.  Expressed at the XLA level: constrain the
+    cache to the seq_shard axis and let SPMD produce the partial-softmax
+    pattern from the einsum + max/sum decomposition below."""
+    k = constrain(k, "batch", "seq_shard", "kv_heads", None)
+    v = constrain(v, "batch", "seq_shard", "kv_heads", None)
+    b, tq, hq, dh = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qf = (q * dh ** -0.5).astype(jnp.float32)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf.reshape(b, tq, hkv, rep, dh), k.astype(jnp.float32))
+    mask = (q_pos[:, :, None] >= k_pos[:, None, :]) & valid[:, None, :]
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - lax.stop_gradient(mx))
+    den = jnp.sum(ex, axis=-1, keepdims=True)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", ex / den, v.astype(jnp.float32))
+    return out.reshape(b, tq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def _decode_mla(params, x, cache: MLACache, cfg: ModelConfig):
+    """Absorbed MLA decode: scores/values live in the compressed c_kv space;
+    per-token FLOPs scale with kv_lora_rank, and the cache is rank+dr wide
+    (DeepSeek's memory saving, key for decode_32k)."""
+    m = cfg.mla
+    b = x.shape[0]
+    pos = cache.lengths                            # (B,) per-slot positions
+    positions = pos[:, None]
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+    q = jnp.einsum("btr,rhe->bthe", cq, params["w_uq"])
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    ckv_full = x @ params["w_dkv"]
+    c_new, kpe_new = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, params["kv_norm"])
+    kpe_new = apply_rope(kpe_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    s = cache.c_kv.shape[1]
+    slot = jnp.minimum(pos, s - 1)
+    bidx = jnp.arange(b)
+    c_kv = cache.c_kv.at[bidx, slot].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_pe = cache.k_pe.at[bidx, slot].set(kpe_new[:, 0].astype(cache.k_pe.dtype))
+    new_cache = MLACache(c_kv, k_pe, pos + 1)
+    # absorption: q_abs[h] = q_nope[h] @ w_uk[h]^T  -> compressed space
+    q_abs = jnp.einsum("bthe,rhe->bthr", q_nope, params["w_uk"])   # (B,1,H,rank)
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (
+        jnp.einsum("bthr,bsr->bths", q_abs.astype(jnp.float32), c_kv.astype(jnp.float32))
+        + jnp.einsum("bthe,bse->bths", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))
+    ) * scale
+    mask = kpos[None, None, None, :] <= pos[:, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out_c = jnp.einsum("bths,bsr->bthr", probs, c_kv.astype(jnp.float32))  # compressed out
+    out = jnp.einsum("bthr,rhe->bthe", out_c.astype(x.dtype), params["w_uv"])
+    return jnp.einsum("bthe,hed->btd", out, params["w_o"]), new_cache

@@ -1,0 +1,112 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, activations, initialisers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = ((xf - mu) * lax.rsqrt(var + eps)).astype(dt) * scale
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def apply_norm(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p.get("bias"))
+    raise ValueError(kind)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh); positions: (B, T) or (T,) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the Dh/2 frequency slots are split into
+    ``sections`` (temporal, height, width), each rotated by its own position
+    stream.  positions: (3, B, T)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    assert sum(sections) == dh // 2, (sections, dh)
+    angs = []
+    off = 0
+    for si, sec in enumerate(sections):
+        pos = positions[si][..., None].astype(jnp.float32)    # (B, T, 1)
+        angs.append(pos * freqs[off : off + sec])
+        off += sec
+    ang = jnp.concatenate(angs, axis=-1)               # (B, T, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = jnp.sqrt(1.0 / max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD - state-space duality, arXiv:2405.21060).
+
+Chunked SSD scan: within a chunk the sequence mixing is a masked (Q x Q)
+matmul (MXU-friendly "dual" quadratic form); across chunks a tiny associative
+state recurrence carries (B, H, N, P) states.  Under sequence parallelism the
+cross-shard state handoff uses ``core.sequence.seq_scan_combine_hops`` - the
+paper's group-boundary exchange with the SSM state as the boundary data
+(O(H*N*P) bytes instead of O(T) activations).
+
+Decode: O(1) per token - the state IS the cache, which is why the ssm family
+runs the long_500k shape that full attention cannot.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+from repro.models.attention import NEG_INF
+from repro.parallel.api import constrain
+from repro.core.sequence import seq_halo_conv1d, seq_scan_combine_hops
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return s, d_in, nh
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, in_dim), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[2], (d_in, cfg.d_model), dtype, fan_in=d_in),
+    }
+
+
+def _ssd_chunk_scan(
+    x: jax.Array,      # (B, T, H, P)
+    dt: jax.Array,     # (B, T, H) softplus'd step sizes, fp32
+    A: jax.Array,      # (H,) negative, fp32
+    Bm: jax.Array,     # (B, T, G, N)
+    Cm: jax.Array,     # (B, T, G, N)
+    chunk: int,
+    seq_axis: Optional[str] = None,
+    initial_state: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,T,H,P), final_state: (B,H,N,P))."""
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rep = h // g
+
+    def cshape(v, d):
+        return v.reshape(v.shape[0], nc, chunk, *v.shape[2:])
+
+    xc = cshape(x, 2)                                   # (B,nc,Q,H,P)
+    dtc = cshape(dt, 2).astype(jnp.float32)             # (B,nc,Q,H)
+    Bc = cshape(Bm, 2).astype(jnp.float32)              # (B,nc,Q,G,N)
+    Cc = cshape(Cm, 2).astype(jnp.float32)
+
+    dA = dtc * A                                        # (B,nc,Q,H) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)                        # inclusive
+    # intra-chunk quadratic form: M[i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j, j<=i
+    Bh = jnp.repeat(Bc, rep, axis=3) if g != h else Bc  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3) if g != h else Cc
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)       # (B,nc,H,Q,Q)
+    ci = cum.transpose(0, 1, 3, 2)                      # (B,nc,H,Q)
+    dseg = ci[..., :, None] - ci[..., None, :]          # cum_i - cum_j
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_m = jnp.where(tri, jnp.exp(dseg), 0.0)
+    dt_j = dtc.transpose(0, 1, 3, 2)[..., None, :]      # (B,nc,H,1,Q)
+    M = cb * decay_m * dt_j                             # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xc.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(cum_Q - cum_j) * dt_j * B_j (x) x_j
+    tail = jnp.exp(ci[..., -1:] - ci)                   # (B,nc,H,Q)
+    w = tail * dtc.transpose(0, 1, 3, 2)                # (B,nc,H,Q)
+    S = jnp.einsum("bchq,bcqhn,bcqhp->bchnp", w, Bh, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence: S_in[c] = decay_c-1 * S_in[c-1] + S[c-1]
+    chunk_decay = jnp.exp(ci[..., -1])                  # (B,nc,H) total chunk decay
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    dsc, ssc = lax.associative_scan(combine, (chunk_decay.swapaxes(0, 1), S.swapaxes(0, 1)), axis=0)
+    incl_decay, incl_state = dsc.swapaxes(0, 1), ssc.swapaxes(0, 1)  # inclusive prefix per chunk
+    # exclusive: shift right by one chunk
+    zeros = jnp.zeros_like(incl_state[:, :1])
+    S_in = jnp.concatenate([zeros, incl_state[:, :-1]], axis=1)      # (B,nc,H,N,P)
+
+    if seq_axis is not None:
+        # cross-shard handoff: per-shard summary = (total decay, final state)
+        total_decay = incl_decay[:, -1]                 # (B,H)
+        final_state = incl_state[:, -1]                 # (B,H,N,P)
+        inc = seq_scan_combine_hops(total_decay, final_state, seq_axis)
+        initial_state = inc if initial_state is None else inc + initial_state
+    if initial_state is not None:
+        # fold the incoming state through each chunk's exclusive decay prefix
+        excl_decay = jnp.concatenate(
+            [jnp.ones_like(incl_decay[:, :1]), incl_decay[:, :-1]], axis=1
+        )
+        S_in = S_in + excl_decay[..., None, None] * initial_state[:, None]
+
+    # inter-chunk contribution: Y_inter[c,i] = exp(cum_i) * C_i . S_in[c]
+    pref = jnp.exp(ci)                                  # (B,nc,H,Q) decay from chunk start
+    y_inter = jnp.einsum(
+        "bchq,bcqhn,bchnp->bcqhp", pref, Ch, S_in
+    )
+    y = (y_intra + y_inter).reshape(b, t, h, p).astype(x.dtype)
+    final = incl_state[:, -1]
+    if initial_state is not None:
+        total = incl_decay[:, -1]
+        final = final + total[..., None, None] * initial_state
+    return y, final
+
+
+class MambaState(NamedTuple):
+    """Decode cache: SSM state + conv ring."""
+
+    ssm: jax.Array     # (B, H, N, P) fp32
+    conv: jax.Array    # (B, K-1, conv_dim)
+    length: jax.Array
+
+    @classmethod
+    def init(cls, b, cfg: ModelConfig, dtype):
+        s, d_in, nh = _dims(cfg)
+        conv_dim = d_in + 2 * s.n_groups * s.d_state
+        return cls(
+            jnp.zeros((b, nh, s.d_state, s.head_dim), jnp.float32),
+            jnp.zeros((b, s.d_conv - 1, conv_dim), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, nh = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, B, C, dt
+
+
+def mamba_block(
+    params: dict,
+    u: jax.Array,
+    cfg: ModelConfig,
+    *,
+    seq_axis: Optional[str] = None,
+) -> jax.Array:
+    """Full-sequence Mamba2 block.  u: (B, T, D) -> (B, T, D)."""
+    s, d_in, nh = _dims(cfg)
+    b, t, _ = u.shape
+    proj = u @ params["w_in"]
+    z, x, Bm, Cm, dt = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = seq_halo_conv1d(xbc, params["conv_w"], params["conv_b"], seq_axis)
+    xbc = jax.nn.silu(xbc)
+    gn = s.n_groups * s.d_state
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    x = constrain(x.reshape(b, t, nh, s.head_dim), "batch", "seq", "heads", None)
+    Bm = Bm.reshape(b, t, s.n_groups, s.d_state)
+    Cm = Cm.reshape(b, t, s.n_groups, s.d_state)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, _ = _ssd_chunk_scan(x, dtf, A, Bm, Cm, min(s.chunk, t), seq_axis=seq_axis)
+    y = y + x * params["D"][:, None].astype(x.dtype)
+    y = y.reshape(b, t, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["w_out"]
+
+
+def mamba_decode(
+    params: dict,
+    u: jax.Array,            # (B, 1, D)
+    state: MambaState,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, MambaState]:
+    """O(1) single-token step."""
+    s, d_in, nh = _dims(cfg)
+    b = u.shape[0]
+    proj = (u @ params["w_in"])[:, 0]                   # (B, in_dim)
+    z, x, Bm, Cm, dt = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)         # (B, conv_dim)
+    window = jnp.concatenate([state.conv, xbc[:, None]], axis=1)   # (B, K, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    gn = s.n_groups * s.d_state
+    x, Bm, Cm = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
+    x = x.reshape(b, nh, s.head_dim)
+    Bm = Bm.reshape(b, s.n_groups, s.d_state)
+    Cm = Cm.reshape(b, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1)                    # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B, H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dtf * A)                                # (B, H)
+    upd = dtf[..., None, None] * Bh[..., :, None].astype(jnp.float32) * x[..., None, :].astype(jnp.float32)
+    ssm = a[..., None, None] * state.ssm + upd          # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), ssm)
+    y = y + x.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), params["norm_scale"])
+    out = y @ params["w_out"]
+    return out, MambaState(ssm, new_conv, state.length + 1)

@@ -1,0 +1,226 @@
+"""MLPs and Mixture-of-Experts.
+
+MoE dispatch is scatter/gather based (no (T, E, C) one-hot tensors, which
+would be ~0.5 GB/device at deepseek's 256 experts): per-token top-k routing,
+position-in-expert via a cumsum over the (T, E) assignment matrix, capacity
+dropping, scatter-add into an (E, C, D) buffer, expert matmuls, gather +
+weighted combine.  Fully differentiable (scatter-add / gather transpose
+cleanly).
+
+Expert parallelism: the (E, C, D) buffer carries the "experts" logical axis;
+under the production mesh GSPMD lowers the resharding from token-sharded to
+expert-sharded layout into the canonical all-to-all pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import ACT, dense_init
+from repro.parallel.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True, bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = x @ params["w_up"]
+    if "b_up" in params:
+        up = up + params["b_up"]
+    up = constrain(up, "batch", "seq", "ff")
+    if "w_gate" in params:
+        gate = constrain(x @ params["w_gate"], "batch", "seq", "ff")
+        h = ACT[act](gate) * up
+    else:
+        h = ACT[act](up)
+    y = h @ params["w_down"]
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    e = m.n_experts
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, m.d_ff_expert), dtype),
+        "w_up": dense_init(ks[2], (e, d, m.d_ff_expert), dtype),
+        "w_down": dense_init(ks[3], (e, m.d_ff_expert, d), dtype, fan_in=m.d_ff_expert),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, m.d_ff_shared, dtype, gated=True)
+    return p
+
+
+def _route(router_w, x_flat, m: MoEConfig):
+    """(..., D) -> top-k (weights, expert ids), softmax over selected experts."""
+    logits = x_flat.astype(jnp.float32) @ router_w           # (..., E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(gates, m.top_k)                   # (..., k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    return topw, topi, gates
+
+
+def _dispatch_groups(batch: int) -> int:
+    """Token groups for shard-local dispatch: one per data shard.
+
+    Capacity/cumsum/scatter run independently per group (no cross-device
+    sequential dependency); expert buffers carry a leading group dim sharded
+    over the DP axes, so the dispatch buffer is (g, E, cap_local, D) with
+    cap_local ~ tokens_local * k * cf / E - the standard EP formulation.
+    GSPMD lowers the (group-sharded -> expert-sharded) resharding into the
+    canonical all-to-all pair.  Off-mesh (smoke tests): one group == the
+    original global dispatch.
+    """
+    import math
+
+    from repro.parallel.api import axis_size, _ACTIVE
+
+    dp = axis_size(_ACTIVE.rules.get("moe_groups"))
+    return math.gcd(dp, batch)
+
+
+def _expert_shards() -> int:
+    from repro.parallel.api import axis_size, _ACTIVE
+
+    return axis_size(_ACTIVE.rules.get("experts"))
+
+
+def moe(params: dict, x: jax.Array, cfg: ModelConfig, act: str = "silu") -> jax.Array:
+    """x: (B, T, D) -> (B, T, D).
+
+    Dispatch buffer layout: (groups, expert_shards, e_local*cap+1, D).  The
+    destination-shard dim is a *batch* dim of the token scatter, so GSPMD
+    keeps the buffer sharded (groups x expert-shards) and lowers the
+    dispatch into replicate-updates-over-EP + local scatter - without it
+    the (g, E*cap, D) buffer has no shardable expert dim and GSPMD
+    full-replicates ~150 GiB per deepseek layer (measured).
+    """
+    m = cfg.moe
+    b, t, d = x.shape
+    e = m.n_experts
+    gcount = _dispatch_groups(b)
+    ep = _expert_shards()
+    if e % ep:
+        ep = 1
+    e_loc = e // ep
+    n_loc = (b * t) // gcount
+    xf = x.reshape(gcount, n_loc, d)
+    xf = constrain(xf, "moe_groups", None, None)
+    topw, topi, gates = _route(params["router"], xf, m)      # (g, n, k)
+
+    cap = max(1, int(n_loc * m.top_k * m.capacity_factor) // e)
+    if n_loc * m.top_k <= 512:
+        # decode/small-batch scale: dropless dispatch (cap covers the worst
+        # case of every token routing to one expert).  Capacity dropping at
+        # serving time would make decode diverge from prefill; the buffer
+        # stays tiny at these sizes.  Training shapes are far above this.
+        cap = max(cap, n_loc)
+
+    # position of each (token, k) slot within its expert queue, per group
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)        # (g, n, k, E)
+    flat_oh = onehot.reshape(gcount, n_loc * m.top_k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=1) - flat_oh         # exclusive cumsum
+    pos = jnp.sum(pos_in_e * flat_oh, axis=-1).reshape(gcount, n_loc, m.top_k)
+    keep = pos < cap
+    dest = topi // e_loc                                     # (g, n, k) EP shard
+    lslot = (topi % e_loc) * cap + pos                       # slot within shard
+    lslot = jnp.where(keep, lslot, e_loc * cap)              # overflow row
+
+    # dispatch = scatter of int32 TOKEN INDICES (tiny) + a gather of rows.
+    # Scattering the (n*k, D) token payload itself makes GSPMD replicate a
+    # multi-GiB f32 updates tensor over the EP axis; the index inverse is
+    # 4 bytes/slot, and the row gather is local because xf (constrained to
+    # the moe_groups = DP axes) is replicated over the expert axis.
+    gi = jnp.broadcast_to(
+        jnp.arange(gcount)[:, None], (gcount, n_loc * m.top_k)
+    )
+    dest2 = dest.reshape(gcount, n_loc * m.top_k)
+    lslot2 = lslot.reshape(gcount, n_loc * m.top_k)
+    tok_idx = jnp.broadcast_to(
+        jnp.arange(n_loc, dtype=jnp.int32)[:, None], (n_loc, m.top_k)
+    ).reshape(1, n_loc * m.top_k)
+    tok_idx = jnp.broadcast_to(tok_idx, (gcount, n_loc * m.top_k))
+    inv = jnp.full((gcount, ep, e_loc * cap + 1), n_loc, jnp.int32)
+    inv = inv.at[gi, dest2, lslot2].set(tok_idx)             # unique slots
+    inv = constrain(inv, "moe_groups", "experts", None)
+    xf_pad = jnp.concatenate([xf, jnp.zeros((gcount, 1, d), xf.dtype)], axis=1)
+    gi3 = jnp.arange(gcount)[:, None, None]
+    xe = xf_pad[gi3, inv][:, :, : e_loc * cap]               # (g, EP, S, D)
+    xe = xe.reshape(gcount, ep, e_loc, cap, d)
+    xe = constrain(xe, "moe_groups", "experts", None, None, None)
+
+    # expert FFNs (batched over group + expert-shard + local-expert dims)
+    # keep the storage fsdp sharding on the hidden dims - constraining them
+    # None would demand replication (56 x full expert weights at decode)
+    wg = constrain(params["w_gate"].reshape(ep, e_loc, d, -1), "experts", None, "fsdp", None)
+    wu = constrain(params["w_up"].reshape(ep, e_loc, d, -1), "experts", None, "fsdp", None)
+    wd = constrain(params["w_down"].reshape(ep, e_loc, -1, d), "experts", None, None, "fsdp")
+    g_ = jnp.einsum("gsecd,sedf->gsecf", xe, wg)
+    u = jnp.einsum("gsecd,sedf->gsecf", xe, wu)
+    g_ = constrain(g_, "moe_groups", "experts", None, None, None)
+    h = ACT[act](g_) * u
+    ye = jnp.einsum("gsecf,sefd->gsecd", h, wd)
+    ye = constrain(ye, "moe_groups", "experts", None, None, None)
+
+    # combine: scatter-ADD from the expert side.  A token-side gather across
+    # the EP-sharded buffer makes GSPMD replicate the (g, n*k, D) result;
+    # scattering each shard's own outputs into a (g, n_loc, D) token buffer
+    # keeps updates local and lowers the cross-shard sum into one
+    # activation-sized all-reduce over the EP axis.
+    w = (topw * keep.astype(topw.dtype)).astype(x.dtype)     # (g, n, k)
+    wslot = jnp.zeros((gcount, ep, e_loc * cap + 1), x.dtype)
+    wslot = wslot.at[gi, dest2, lslot2].set(w.reshape(gcount, n_loc * m.top_k))
+    ye_flat = jnp.concatenate(
+        [ye.reshape(gcount, ep, e_loc * cap, d), jnp.zeros((gcount, ep, 1, d), ye.dtype)],
+        axis=2,
+    )
+    contrib = ye_flat * wslot[..., None]                     # (g, EP, S+1, D)
+    contrib = constrain(contrib, "moe_groups", "experts", None, None)
+    y = jnp.zeros((gcount, n_loc + 1, d), x.dtype)
+    y = y.at[gi3, inv].add(contrib)                          # batched over (g, EP)
+    y = y[:, :n_loc]
+    y = constrain(y, "moe_groups", None, None)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, act).reshape(gcount, n_loc, d)
+    return y.reshape(b, t, d)
+
+
+def moe_aux_loss(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style f*P)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, topi = lax.top_k(gates, m.top_k)
+    frac = jnp.mean(jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32), axis=(0, 1))
+    prob = jnp.mean(gates, axis=0)
+    return m.n_experts * jnp.sum(frac * prob)

@@ -1,0 +1,175 @@
+"""Architecture registry: --arch <id> -> config + model functions + specs.
+
+Every assigned architecture resolves here to an ``ArchBundle`` exposing a
+uniform surface: ``loss_fn`` (training), ``decode_fn`` + ``cache_specs``
+(serving), and ``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run;
+``data.synthetic`` materialises the same specs for smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+
+ARCH_MODULES = {
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+ARCH_IDS = list(ARCH_MODULES)
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., jax.Array]          # (params, batch, *, remat)
+    decode_fn: Optional[Callable[..., Any]]    # (params, token, caches)
+    make_caches: Optional[Callable[..., Any]]  # (batch, max_seq) -> caches
+    input_specs: Callable[[ShapeConfig], dict]
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.make_caches(batch, max_seq))
+
+
+def load_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCH_MODULES[name])
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def with_depth(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    """Depth-reduced copy: the irregular prefix + ``n_periods`` repeats of the
+    periodic block (see ``models.lm.plan_segments``).  Used by the dry-run's
+    per-layer cost measurement: ``cost_analysis`` counts a ``lax.scan`` body
+    once, so FLOP/byte/collective *rates* are measured on shallow UNROLLED
+    variants (depths p and 2p) and scaled analytically to the full depth."""
+    from repro.models.lm import plan_segments
+
+    segs = plan_segments(cfg)
+    prefix = 0 if len(segs) == 1 else len(segs[0].block)
+    period = len(segs[-1].block)
+    depth = prefix + n_periods * period
+    kw = {"n_layers": depth}
+    if cfg.encoder_decoder and cfg.n_encoder_layers:
+        # scale the encoder with the decoder (both scan over layers)
+        kw["n_encoder_layers"] = max(
+            1, cfg.n_encoder_layers * depth // cfg.n_layers
+        )
+    return dataclasses.replace(cfg, **kw)
+
+
+def period_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(prefix_layers, total_periods) of the periodic segment plan."""
+    from repro.models.lm import plan_segments
+
+    segs = plan_segments(cfg)
+    prefix = 0 if len(segs) == 1 else len(segs[0].block)
+    period = len(segs[-1].block)
+    return prefix, (cfg.n_layers - prefix) // period
+
+
+def _vision_tokens(seq: int) -> int:
+    # 25% of the context is vision patches (dynamic-resolution stand-in)
+    return max(4, seq // 4)
+
+
+def _lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, t), i32),
+        "labels": jax.ShapeDtypeStruct((b, t), i32),
+    }
+    if cfg.family == "vlm":
+        tv = _vision_tokens(t)
+        specs["patch_embeds"] = jax.ShapeDtypeStruct((b, tv, cfg.d_model), cfg.act_dtype)
+        specs["positions"] = jax.ShapeDtypeStruct((3, b, t), i32)
+    return specs
+
+
+def _whisper_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    td = max(8, t // 4)
+    return {
+        "frames": jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.act_dtype),
+        "tokens": jax.ShapeDtypeStruct((b, td), i32),
+        "labels": jax.ShapeDtypeStruct((b, td), i32),
+    }
+
+
+def get_arch(name: str, reduced: bool = False) -> ArchBundle:
+    return bundle_from_cfg(load_config(name, reduced))
+
+
+def bundle_from_cfg(cfg: ModelConfig) -> ArchBundle:
+    if cfg.encoder_decoder:
+        from repro.models import whisper as W
+
+        return ArchBundle(
+            cfg=cfg,
+            init=lambda key: W.init_whisper(key, cfg),
+            loss_fn=lambda params, batch, remat="full", **kw: W.whisper_loss(
+                params, batch, cfg, remat=remat, **kw
+            ),
+            decode_fn=lambda params, token, caches: W.whisper_decode_step(
+                params, token, caches, cfg
+            ),
+            make_caches=lambda b, s: W.init_whisper_caches(cfg, b, s, s, cfg.act_dtype),
+            input_specs=lambda shape: _whisper_input_specs(cfg, shape),
+        )
+
+    from repro.models import lm as L
+
+    return ArchBundle(
+        cfg=cfg,
+        init=lambda key: L.init_lm(key, cfg),
+        loss_fn=lambda params, batch, remat="full", **kw: L.lm_loss(
+            params, batch, cfg, remat=remat, **kw
+        ),
+        decode_fn=lambda params, token, caches, seq_sharded=False: L.decode_step(
+            params, token, caches, cfg, seq_sharded_cache=seq_sharded
+        ),
+        make_caches=lambda b, s: L.init_caches(cfg, b, s, cfg.act_dtype),
+        input_specs=lambda shape: _lm_input_specs(cfg, shape),
+    )
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Which (arch x shape) cells run; skips are recorded in DESIGN.md."""
+    if shape.name == "long_500k":
+        if not cfg.sub_quadratic():
+            return False, (
+                "long_500k needs sub-quadratic serving; "
+                f"{cfg.name} is pure full-attention (skip per assignment)"
+            )
+    return True, ""
+
+
+def all_cells(reduced: bool = False):
+    """Yield (arch, shape, supported, reason) for the 10 x 4 grid."""
+    for name in ARCH_IDS:
+        cfg = load_config(name, reduced)
+        for shape in SHAPES.values():
+            ok, why = cell_supported(cfg, shape)
+            yield name, shape, ok, why

@@ -1,0 +1,96 @@
+"""YOLOv2 first-16-layers (the paper's evaluation network, §5).
+
+Darknet-19 prefix: conv3x3(+BN+leaky) / maxpool stages, 416x416 -> 26x26x512
+feature maps.  The paper trains exactly these feature-map-dominated layers
+distributed over tiles; we reproduce that with ``core.fusion`` grouped
+stacks.
+
+Resolution note (DESIGN.md §2): the Pi experiments use 416x416 with ragged
+tiles per process.  TPU SPMD needs uniform shards, so mesh-wide runs use
+512x512 - a resolution inside YOLOv2's own multi-scale training set - which
+divides evenly on every layer for tile grids up to 16x16.  The 416 geometry
+is still exercised by the cost model and the 2x2-grid exactness tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import (
+    StackPlan,
+    build_stack_plan,
+    make_deferred_grad_step,
+    make_tiled_forward,
+    make_tiled_loss,
+)
+from repro.core.spatial import LayerDef, init_stack_params
+from repro.core.tiling import Group, no_grouping
+
+
+def yolov2_16_layers(in_ch: int = 3, batch_norm: bool = True) -> list[LayerDef]:
+    c = lambda cin, cout, k: LayerDef(
+        k, 1, cin, cout, act="leaky", batch_norm=batch_norm, use_bias=not batch_norm
+    )
+    p = lambda ch: LayerDef(2, 2, ch, ch, pool=True, act="linear")
+    return [
+        c(in_ch, 32, 3),     # 1
+        p(32),               # 2
+        c(32, 64, 3),        # 3
+        p(64),               # 4
+        c(64, 128, 3),       # 5
+        c(128, 64, 1),       # 6
+        c(64, 128, 3),       # 7
+        p(128),              # 8
+        c(128, 256, 3),      # 9
+        c(256, 128, 1),      # 10
+        c(128, 256, 3),      # 11
+        p(256),              # 12
+        c(256, 512, 3),      # 13
+        c(512, 256, 1),      # 14
+        c(256, 512, 3),      # 15
+        c(512, 256, 1),      # 16
+    ]
+
+
+def make_plan(
+    input_hw: tuple[int, int] = (512, 512),
+    n: int = 2,
+    m: int = 2,
+    groups=None,
+    batch_norm: bool = True,
+) -> StackPlan:
+    layers = yolov2_16_layers(batch_norm=batch_norm)
+    return build_stack_plan(input_hw, layers, n, m, groups)
+
+
+def init_yolo(key, plan: StackPlan, dtype=jnp.float32):
+    return init_stack_params(key, plan.layers, dtype)
+
+
+def l2_loss_local(y: jax.Array, t: jax.Array):
+    """Per-tile (sum, count) - the paper measures the training cycle, so a
+    dense regression target over the output feature map stands in for the
+    detection head (which lives beyond layer 16)."""
+    d = (y - t).astype(jnp.float32)
+    return jnp.sum(d * d), jnp.float32(d.size)
+
+
+def make_yolo_train_fns(
+    plan: StackPlan,
+    mesh,
+    microbatches: int = 1,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+):
+    """Returns (forward, loss, deferred_grad_step) shard_map'd over mesh.
+
+    On the production mesh the tile grid rides the ("data", "model") axes -
+    tile-row exchanges cross the data axis, tile-col exchanges the model
+    axis."""
+    ax = dict(row_axis=row_axis, col_axis=col_axis)
+    fwd = make_tiled_forward(plan, mesh, **ax)
+    loss = make_tiled_loss(plan, mesh, l2_loss_local, **ax)
+    step = make_deferred_grad_step(
+        plan, mesh, l2_loss_local, microbatches=microbatches, **ax
+    )
+    return fwd, loss, step

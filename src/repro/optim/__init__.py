@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    make_optimizer,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.compression import int8_compress, int8_decompress, CompressionState

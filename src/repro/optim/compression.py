@@ -1,0 +1,69 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 block-quantisation with error feedback: gradients are quantised per
+block of 256 values (per-block fp32 scale = max-abs / 127), the residual is
+carried in a local error buffer and re-added next step (EF-SGD), which keeps
+convergence unbiased in practice.  Applied ONLY to the inter-pod reduction
+(runtime/train wiring): the intra-pod reduce-scatter stays full precision,
+the 8x smaller payload rides the slow DCN hop.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any      # pytree of fp32 residuals, mirroring grads
+
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (q: int8 blocks, scale: fp32 per block)."""
+    blocks, _ = _pad_to_block(g.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error(params) -> CompressionState:
+    return CompressionState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_with_feedback(grads, state: CompressionState):
+    """Quantise (grads + error); return (quantised-dequantised grads for the
+    slow hop, new error).  The caller all-reduces the int8 payload; here we
+    model the round-trip so tests can assert the EF invariant
+    (sum of applied updates == sum of true grads up to fp32)."""
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = int8_compress(target)
+        deq = int8_decompress(q, scale, g.shape, jnp.float32)
+        return deq.astype(g.dtype), target - deq
+
+    out = jax.tree.map(one, grads, state.error)
+    newg = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newe = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newg, CompressionState(newe)

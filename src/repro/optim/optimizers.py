@@ -1,0 +1,162 @@
+"""Optimizers as pure (init, update) pairs over param pytrees.
+
+adamw:     fp32 moments; the default for <100B models.
+adafactor: factored second moment (row/col statistics) - the 671B config's
+           optimizer: state is O(rows+cols) per matrix instead of O(n),
+           which is what lets the dry-run fit 16 GB/chip HBM.
+sgd:       momentum SGD (the paper's own Darknet training uses SGD).
+
+All states are pytrees mirroring params, so the same sharding rules apply
+(FSDP shards optimizer state with its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adafactor(decay=0.99, eps=1e-30, clip_threshold=1.0, weight_decay=0.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), momentum-free."""
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(leaf, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rsq = (vr / jnp.maximum(denom, eps))[..., None] * vc[..., None, :]
+                step = g * jax.lax.rsqrt(jnp.maximum(rsq, eps))
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                step = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                news = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-12)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), news
+
+        leaves_is = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, grads, state["v"], params, is_leaf=None)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(momentum=0.9, weight_decay=0.0005) -> Optimizer:
+    """Momentum SGD - Darknet's optimizer for the YOLO reproduction."""
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m2 = momentum * m + g
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "t": state["t"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "sgd":
+        return sgd(**kw)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,15 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, base: float):
+    return base * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, warmup: int, total: int, base: float, floor: float = 0.1):
+    warm = linear_warmup(step, warmup, base)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, base * cos)

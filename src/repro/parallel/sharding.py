@@ -1,0 +1,180 @@
+"""Parameter / optimizer-state sharding rules.
+
+Maps every parameter leaf (by tree path + shape) to logical axes, resolved
+against the active mesh by ``parallel.api``.  The scheme is 2-D: tensor
+dimensions that carry heads/ff/experts/vocab shard over the TP axis
+("model"), one remaining large dimension shards over the FSDP axis ("data").
+Optimizer state mirrors its parameter (adafactor's factored moments drop the
+corresponding entry).
+
+Stacked layer segments (lax.scan) add a leading repeats dim, which stays
+unsharded (it is the scan axis) - handled by right-aligning the rule to the
+trailing dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path, keystr
+
+from repro.parallel.api import active_mesh, logical_spec
+
+# (substring match on path, trailing-dims logical axes)
+_RULES: list[tuple[str, tuple]] = [
+    ("embed", ("vocab", "fsdp")),
+    ("lm_head", ("vocab", "fsdp")),
+    ("dec_pos", (None, "fsdp")),
+    # attention
+    ("w_q", ("fsdp", "heads", None)),
+    ("w_k", ("fsdp", "kv_heads", None)),
+    ("w_v", ("fsdp", "kv_heads", None)),
+    ("w_o", ("heads", None, "fsdp")),
+    # mla
+    ("w_dq", ("fsdp", None)),
+    ("w_uq", ("fsdp", "heads", None)),
+    ("w_dkv", ("fsdp", None)),
+    ("w_uk", ("fsdp", "heads", None)),
+    ("w_uv", ("fsdp", "heads", None)),
+    # mlp
+    ("w_gate", ("fsdp", "ff")),
+    ("w_up", ("fsdp", "ff")),
+    ("w_down", ("ff", "fsdp")),
+    # moe (leading experts dim; longer patterns first would be nicer but the
+    # moe params sit under a "moe" subtree so we disambiguate by path)
+    ("moe/w_gate", ("experts", "fsdp", None)),
+    ("moe/w_up", ("experts", "fsdp", None)),
+    ("moe/w_down", ("experts", None, "fsdp")),
+    ("router", (None, None)),
+    # mamba
+    ("w_in", ("fsdp", "ff")),
+    ("w_out", ("ff", "fsdp")),
+    ("conv_w", (None, None)),
+    # mtp
+    ("mtp/proj", ("fsdp", None)),
+]
+
+
+def logical_for_param(path: str, ndim: int) -> tuple:
+    logical: Optional[tuple] = None
+    # longest pattern match wins (moe/w_up vs w_up)
+    best = -1
+    for pat, rule in _RULES:
+        if pat in path and len(pat) > best:
+            logical = rule
+            best = len(pat)
+    if logical is None:
+        logical = ()
+    if len(logical) > ndim:          # e.g. bias matched under attention
+        logical = logical[-ndim:] if ndim else ()
+    pad = (None,) * (ndim - len(logical))
+    return pad + tuple(logical)
+
+
+def param_logical_tree(params: Any) -> Any:
+    def leaf(path, p):
+        return logical_for_param(keystr(path, separator="/"), p.ndim)
+
+    return tree_map_with_path(leaf, params)
+
+
+def param_shardings(params: Any) -> Any:
+    """Pytree of NamedSharding for the active mesh (or None off-mesh)."""
+    mesh = active_mesh()
+
+    def leaf(path, p):
+        log = logical_for_param(keystr(path, separator="/"), p.ndim)
+        spec = logical_spec(log, p.shape)
+        return NamedSharding(mesh, spec) if mesh is not None else None
+
+    return tree_map_with_path(leaf, params)
+
+
+def state_shardings(opt_state: Any, params: Any) -> Any:
+    """Optimizer-state shardings derived from the parameter rules.
+
+    Moments with the parameter's shape inherit its spec; adafactor's factored
+    vr/vc drop the reduced dim; scalars replicate."""
+    mesh = active_mesh()
+    flat_params = {}
+
+    def record(path, p):
+        flat_params[keystr(path, separator="/")] = (p.shape, logical_for_param(keystr(path, separator="/"), p.ndim))
+        return p
+
+    tree_map_with_path(record, params)
+
+    def leaf(path, s):
+        key = keystr(path, separator="/")
+        # strip optimizer-state prefixes/suffixes to find the param path
+        base = key
+        for pre in ("m/", "v/", "vr", "vc"):
+            base = base.replace(pre, "")
+        match = None
+        for ppath, (shape, log) in flat_params.items():
+            if ppath and ppath in key:
+                match = (shape, log)
+                break
+        if match is None:
+            spec = P()
+        else:
+            shape, log = match
+            if s.shape == shape:
+                spec = logical_spec(log, s.shape)
+            elif s.shape == shape[:-1]:
+                spec = logical_spec(log[:-1], s.shape)
+            elif s.shape == tuple(shape[:-2]) + tuple(shape[-1:]):
+                spec = logical_spec(log[:-2] + log[-1:], s.shape)
+            else:
+                spec = P()
+        return NamedSharding(mesh, spec) if mesh is not None else None
+
+    return tree_map_with_path(leaf, opt_state)
+
+
+def batch_shardings(batch_specs: dict) -> dict:
+    """Input batch: dim 0 (or dim 1 for (3,B,T) positions) over the DP axes."""
+    mesh = active_mesh()
+    out = {}
+    for k, spec in batch_specs.items():
+        if k == "positions" and len(spec.shape) == 3:
+            log = (None, "batch", None)
+        else:
+            log = ("batch",) + (None,) * (len(spec.shape) - 1)
+        s = logical_spec(log, spec.shape)
+        out[k] = NamedSharding(mesh, s) if mesh is not None else None
+    return out
+
+
+def cache_shardings(cache_specs: Any, *, seq_sharded: bool = False) -> Any:
+    """KV/SSM cache sharding for serving.
+
+    Default: batch over DP axes, kv-heads over TP.  seq_sharded: the cache's
+    sequence dim rides the TP axis instead (flash-decode for long contexts /
+    kv-head counts that don't divide TP)."""
+    mesh = active_mesh()
+
+    def leaf(path, s):
+        key = keystr(path, separator="/")
+        nd = len(s.shape)
+        if nd == 0:
+            log: tuple = ()
+        elif "ssm" in key:                      # (B, H, N, P) state
+            log = ("batch", "heads", None, None)
+        elif "conv" in key:                     # (B, K-1, conv_dim) ring
+            log = ("batch",) + (None,) * (nd - 1)
+        elif nd == 4:                           # (B, S, Hkv, Dh) kv cache
+            log = (
+                ("batch", "seq_shard", None, None)
+                if seq_sharded
+                else ("batch", None, "kv_heads", None)
+            )
+        elif nd == 3:                           # MLA (B, S, rank) compressed
+            log = ("batch", "seq_shard" if seq_sharded else None, None)
+        else:
+            log = ("batch",) + (None,) * (nd - 1)
+        spec = logical_spec(log, s.shape)
+        return NamedSharding(mesh, spec) if mesh is not None else None
+
+    return tree_map_with_path(leaf, cache_specs)

@@ -1,0 +1,27 @@
+"""Shared test config.
+
+NOTE: no XLA_FLAGS here - smoke tests see the real single CPU device.
+SPMD exactness tests spawn subprocesses (scripts/check_*.py) that set their
+own fake-device counts before importing jax.
+"""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,113 @@
+"""Roofline math + HLO collective parser."""
+import pytest
+
+from repro.analysis.hlo import _group_size, _shape_bytes, collective_stats
+from repro.analysis.roofline import (
+    V5E,
+    count_params_cfg,
+    embed_param_count,
+    flash_attention_terms,
+    model_flops,
+    terms_from_counts,
+)
+from repro.configs.base import SHAPES
+from repro.models.registry import bundle_from_cfg, load_config
+
+HLO = """
+ENTRY %main () -> f32[] {
+  %ar = f32[128,1024]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = bf16[256,64]{1,0} all-gather(%x), channel_id=2, replica_groups=[1,8]<=[8], dimensions={0}
+  %rs = f32[32,32]{1,0} reduce-scatter(%y), channel_id=3, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %a2a = bf16[64,64]{1,0} all-to-all(%z), channel_id=4, replica_groups=[2,4]<=[8]
+  %cps = (f32[16,16]{1,0}, f32[16,16]{1,0}) collective-permute-start(%w), source_target_pairs={{0,1},{1,2}}
+  %cpd = f32[16,16]{1,0} collective-permute-done(%cps)
+  %ars = f32[8,8]{1,0} all-reduce-start(%q), channel_id=5, replica_groups=[1,8]<=[8], to_apply=%add
+  %ard = f32[8,8]{1,0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,1024]{1,0}") == 128 * 1024 * 4
+    assert _shape_bytes("bf16[256,64]") == 256 * 64 * 2
+    assert _shape_bytes("(f32[16,16]{1,0}, f32[16,16]{1,0})") == 2 * 16 * 16 * 4
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[2,4]<=[8]") == 4
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("replica_groups=[1,8]<=[8]") == 8
+
+
+def test_collective_stats_parses_all_kinds():
+    st = collective_stats(HLO)
+    assert st.count == {
+        "all-reduce": 2, "all-gather": 1, "reduce-scatter": 1,
+        "all-to-all": 1, "collective-permute": 1,
+    }
+    # -done ops not double counted; permute-start tuple halved
+    ar = 128 * 1024 * 4
+    assert st.bytes_naive["all-reduce"] == ar + 8 * 8 * 4
+    assert st.bytes_naive["collective-permute"] == 16 * 16 * 4
+    # ring model: AR = 2 N (g-1)/g
+    assert st.bytes_ring["all-reduce"] == pytest.approx(
+        2 * ar * 3 / 4 + 2 * (8 * 8 * 4) * 7 / 8
+    )
+    assert st.bytes_ring["reduce-scatter"] == pytest.approx(32 * 32 * 4 * 3)
+
+
+def test_roofline_terms_and_dominance():
+    t = terms_from_counts(flops=197e12, bytes_hbm=819e9 / 2, bytes_coll=50e9 / 4)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(0.25)
+    assert t.dominant == "compute"
+    assert t.bound_s == pytest.approx(1.0)
+
+
+def test_param_counts_dense_vs_moe():
+    cfg = load_config("qwen2-7b")
+    total, active = count_params_cfg(bundle_from_cfg(cfg).abstract_params(), cfg)
+    assert total == active
+    assert 7.0e9 < total < 8.5e9                     # ~7.6B published
+
+    cfg = load_config("mixtral-8x22b")
+    total, active = count_params_cfg(bundle_from_cfg(cfg).abstract_params(), cfg)
+    assert 1.3e11 < total < 1.5e11                   # ~141B published
+    assert 3.2e10 < active < 4.5e10                  # ~39B active published
+
+
+def test_deepseek_param_count():
+    cfg = load_config("deepseek-v3-671b")
+    total, active = count_params_cfg(bundle_from_cfg(cfg).abstract_params(), cfg)
+    assert 6.3e11 < total < 7.2e11                   # 671B published
+    assert 3.2e10 < active < 4.3e10                  # 37B active published
+
+
+def test_model_flops_train_vs_decode():
+    cfg = load_config("qwen2-7b")
+    total, active = count_params_cfg(bundle_from_cfg(cfg).abstract_params(), cfg)
+    tr = model_flops(cfg, SHAPES["train_4k"], active, embed_params=embed_param_count(cfg))
+    tokens = 4096 * 256
+    assert tr > 6.0 * (active - embed_param_count(cfg)) * tokens   # attn adds
+    de = model_flops(cfg, SHAPES["decode_32k"], active, embed_params=embed_param_count(cfg))
+    assert de < tr / 1000                            # one token vs 1M tokens
+
+
+def test_flash_terms_zero_for_decode_and_ssm():
+    cfg = load_config("qwen2-7b")
+    assert flash_attention_terms(cfg, SHAPES["decode_32k"]) == (0.0, 0.0)
+    ssm = load_config("mamba2-780m")
+    fl, by = flash_attention_terms(ssm, SHAPES["train_4k"])
+    assert fl == 0.0 and by == 0.0                   # attention-free
+
+
+def test_flash_terms_window_cheaper_than_full():
+    mix = load_config("mixtral-8x22b")               # SWA 4096
+    full = load_config("command-r-35b")
+    fl_sw, _ = flash_attention_terms(mix, SHAPES["prefill_32k"])
+    fl_full, _ = flash_attention_terms(full, SHAPES["prefill_32k"])
+    # per-layer-per-dim normalised: window 4096 << 32k full attention
+    per_sw = fl_sw / (mix.n_layers * mix.n_heads * mix.resolved_head_dim)
+    per_full = fl_full / (full.n_layers * full.n_heads * full.resolved_head_dim)
+    assert per_sw < per_full / 2

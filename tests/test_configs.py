@@ -1,0 +1,83 @@
+"""Config fidelity: every assigned architecture matches its published
+numbers exactly; cell-support rules follow the assignment."""
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.models.registry import ARCH_IDS, all_cells, cell_supported, load_config
+
+# (arch, layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "mamba2-780m": (48, 1536, None, None, 0, 50280),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_assigned_numbers(name):
+    cfg = load_config(name)
+    layers, d_model, heads, kv, d_ff, vocab = ASSIGNED[name]
+    assert cfg.n_layers == layers
+    assert cfg.d_model == d_model
+    assert cfg.vocab == vocab
+    if heads is not None:
+        assert cfg.n_heads == heads
+        assert cfg.n_kv_heads == kv
+    if d_ff is not None:
+        assert cfg.d_ff == d_ff
+
+
+def test_family_features():
+    assert load_config("mamba2-780m").ssm.d_state == 128
+    m = load_config("mixtral-8x22b").moe
+    assert (m.n_experts, m.top_k) == (8, 2)
+    d = load_config("deepseek-v3-671b")
+    assert (d.moe.n_experts, d.moe.top_k, d.moe.n_shared_experts) == (256, 8, 1)
+    assert d.mla is not None and d.mtp_depth == 1
+    assert d.moe.d_ff_expert == 2048
+    j = load_config("jamba-v0.1-52b")
+    assert (j.moe.n_experts, j.moe.top_k) == (16, 2)
+    assert j.attn_layer_period == 8                  # 1:7 mamba:attn
+    assert load_config("qwen2-7b").qkv_bias
+    assert load_config("qwen2-vl-2b").mrope_sections is not None
+    assert load_config("command-r-35b").parallel_block
+    assert not load_config("command-r-35b").qkv_bias
+    assert load_config("whisper-medium").encoder_decoder
+    assert load_config("stablelm-1.6b").rope_pct == 0.25
+
+
+def test_cell_grid_is_40():
+    cells = list(all_cells())
+    assert len(cells) == 40
+
+
+def test_long500k_support_rule():
+    """Sub-quadratic families run long_500k; pure full-attention skip it."""
+    runs = {name for name, s, ok, _ in all_cells() if s.name == "long_500k" and ok}
+    assert {"mamba2-780m", "jamba-v0.1-52b", "mixtral-8x22b"} <= runs
+    skips = {name for name, s, ok, _ in all_cells() if s.name == "long_500k" and not ok}
+    assert {"qwen2-7b", "codeqwen1.5-7b", "command-r-35b", "stablelm-1.6b",
+            "deepseek-v3-671b", "qwen2-vl-2b", "whisper-medium"} <= skips
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["decode_32k"].kind == "decode" and SHAPES["long_500k"].kind == "decode"
+
+
+def test_reduced_configs_are_small():
+    for name in ARCH_IDS:
+        cfg = load_config(name, reduced=True)
+        assert cfg.d_model <= 128
+        assert cfg.n_layers <= 8
+        assert cfg.vocab <= 512

@@ -1,0 +1,101 @@
+"""Grouping cost model + DP optimizer: reproduces the paper's two regimes."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grouping import (
+    JETSON_PROFILE,
+    PI3_PROFILE,
+    TPU_V5E_PROFILE,
+    HardwareProfile,
+    optimize_grouping,
+    profile_cost,
+)
+from repro.core.tiling import Group, no_grouping, single_group, validate_profile
+from repro.models.yolo import yolov2_16_layers
+
+LAYERS = yolov2_16_layers()
+HW = (416, 416)
+
+
+def test_pi_profile_prefers_no_grouping():
+    """Paper Fig. 7: compute-bound Pis are optimal at per-layer sync."""
+    best = optimize_grouping(HW, LAYERS, 4, 6, PI3_PROFILE, batch=1)
+    cost_best = profile_cost(HW, LAYERS, best, 4, 6, PI3_PROFILE)["total"]
+    cost_none = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE)["total"]
+    cost_one = profile_cost(HW, LAYERS, single_group(len(LAYERS)), 4, 6, PI3_PROFILE)["total"]
+    assert cost_none < cost_one                       # no grouping beats full fusion
+    assert cost_best <= cost_none * 1.0001            # DP at least as good
+    assert len(best) >= len(LAYERS) // 3              # fine-grained profile
+    # compute dominates on the Pi (paper S5.3: "computation limited")
+    comp = profile_cost(HW, LAYERS, best, 4, 6, PI3_PROFILE)
+    assert comp["compute"] > comp["boundary"] + comp["sync"]
+
+
+def test_jetson_profile_prefers_grouping():
+    """Paper Fig. 8 / S5.4: comm-bound GPUs favour less frequent sync."""
+    cost_none = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 1, 2, JETSON_PROFILE)["total"]
+    best = optimize_grouping(HW, LAYERS, 1, 2, JETSON_PROFILE, batch=1)
+    cost_best = profile_cost(HW, LAYERS, best, 1, 2, JETSON_PROFILE)["total"]
+    assert len(best) < len(LAYERS)                    # some grouping chosen
+    assert cost_best < cost_none
+
+
+def test_tpu_profile_strongly_comm_bound():
+    """197 TFLOP/s vs 50 GB/s/link: fine tiles => grouping wins on TPU too."""
+    best = optimize_grouping((64, 64), LAYERS[:6], 4, 4, TPU_V5E_PROFILE, batch=1)
+    assert len(best) < 6
+
+
+def test_batch_shifts_weight_amortisation():
+    """Paper S5.3: weight-update cost is per-batch, so its relative share
+    drops as batch grows (components scale as measured in Fig. 7)."""
+    c1 = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE, batch=1)
+    c8 = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE, batch=8)
+    assert c8["compute"] == pytest.approx(8 * c1["compute"], rel=1e-6)
+    assert c8["boundary"] == pytest.approx(8 * c1["boundary"], rel=1e-6)
+    assert c8["weights"] == pytest.approx(c1["weights"], rel=1e-6)
+    share1 = c1["weights"] / c1["total"]
+    share8 = c8["weights"] / c8["total"]
+    assert share8 < share1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(2, 5),
+    st.floats(1e8, 1e13),
+    st.floats(1e6, 1e11),
+)
+def test_dp_matches_bruteforce(n_layers, flops, link_bw):
+    """The DP grouping optimizer is exactly optimal under the cost model."""
+    layers = LAYERS[:n_layers]
+    hw = HardwareProfile("h", flops=flops, link_bw=link_bw, sync_latency=1e-3, agg_bw=link_bw)
+
+    def cost(groups):
+        return profile_cost((64, 64), layers, groups, 2, 2, hw)["total"]
+
+    # enumerate all contiguous partitions via composition bitmasks
+    best_cost = None
+    for bits in itertools.product([0, 1], repeat=n_layers - 1):
+        groups, s = [], 0
+        for i, b in enumerate(bits):
+            if b:
+                groups.append(Group(s, i))
+                s = i + 1
+        groups.append(Group(s, n_layers - 1))
+        validate_profile(groups, n_layers)
+        c = cost(groups)
+        best_cost = c if best_cost is None else min(best_cost, c)
+
+    dp = optimize_grouping((64, 64), layers, 2, 2, hw)
+    assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
+
+
+def test_cost_components_positive():
+    c = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE)
+    for k in ("compute", "boundary", "sync", "weights", "total"):
+        assert c[k] > 0
+    assert c["total"] == pytest.approx(
+        c["compute"] + c["boundary"] + c["sync"] + c["weights"]
+    )

@@ -1,0 +1,234 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv2d_tiled.kernel import conv2d_tile
+from repro.kernels.conv2d_tiled.ops import conv2d
+from repro.kernels.conv2d_tiled.ref import conv2d_ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm as rmsnorm_kernel
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _tol(dt):
+    return dict(atol=2e-3, rtol=2e-2) if dt == jnp.bfloat16 else dict(atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # b, tq, tk, hq, hkv, dh, causal, window, dtype
+    (2, 128, 128, 4, 4, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 2, 64, True, None, jnp.float32),      # GQA 4x
+    (1, 256, 256, 4, 1, 128, True, 96, jnp.float32),       # MQA + window
+    (2, 128, 128, 4, 4, 64, False, None, jnp.float32),     # bidirectional
+    (1, 192, 192, 4, 2, 64, True, None, jnp.float32),      # non-pow2 T
+    (1, 128, 128, 4, 4, 64, True, None, jnp.bfloat16),
+    (1, 128, 256, 4, 4, 64, False, None, jnp.float32),     # cross-length
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[str(c[:8]) for c in FA_CASES])
+def test_flash_attention_fwd(case):
+    b, tq, tk, hq, hkv, dh, causal, window, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, tq, hq, dh), dt)
+    k = jax.random.normal(ks[1], (b, tk, hkv, dh), dt)
+    v = jax.random.normal(ks[2], (b, tk, hkv, dh), dt)
+    out = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, bq=64, bk=64, interpret=True
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dt)
+    )
+
+
+def test_flash_attention_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, None, None, 64, 64, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)
+
+
+def test_flash_attention_jit_wrapper():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 4, 64))
+    v = jax.random.normal(ks[2], (1, 128, 4, 64))
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, True, None, None, 64, 64, True))
+    np.testing.assert_allclose(
+        np.asarray(f(q, k, v)),
+        np.asarray(attention_ref(q, k, v, causal=True)),
+        atol=2e-5, rtol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# conv2d tiled
+# ---------------------------------------------------------------------------
+
+CONV_CASES = [
+    # n, h, w, cin, cout, k, stride, act, dtype
+    (2, 18, 18, 16, 32, 3, 1, "leaky", jnp.float32),
+    (1, 17, 17, 3, 32, 3, 2, "linear", jnp.float32),
+    (2, 9, 9, 64, 100, 1, 1, "relu", jnp.float32),         # non-128 cout
+    (1, 20, 20, 32, 64, 5, 1, "leaky", jnp.float32),
+    (1, 18, 18, 16, 32, 3, 1, "leaky", jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES, ids=[str(c[:8]) for c in CONV_CASES])
+def test_conv2d_tile(case):
+    n, h, w_, cin, cout, k, s, act, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (n, h, w_, cin), dt)
+    w = jax.random.normal(ks[1], (k, k, cin, cout), dt) * 0.1
+    b = jax.random.normal(ks[2], (cout,), dt)
+    out = conv2d_tile(x, w, b, stride=s, act=act, bc=64, interpret=True)
+    ref = conv2d_ref(x, w, b, stride=s, act=act)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dt)
+    )
+
+
+def test_conv2d_padded_wrapper_matches_same_conv():
+    """conv2d(pad=k//2) == the model stack's SAME conv + act."""
+    from repro.core.spatial import LayerDef, apply_layer_reference, init_layer_params
+
+    layer = LayerDef(3, 1, 8, 16, act="leaky", batch_norm=False)
+    params = init_layer_params(jax.random.PRNGKey(3), layer)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 12, 12, 8))
+    ref = apply_layer_reference(x, params, layer)
+    out = conv2d(x, params["w"], params["b"], 1, 1, "leaky", True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_conv2d_grads_match_ref():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 10, 10, 8))
+    w = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 8, 16)) * 0.1
+    b = jnp.zeros((16,))
+
+    gk = jax.grad(lambda x, w, b: jnp.sum(conv2d(x, w, b, 1, 1, "leaky", True) ** 2),
+                  argnums=(0, 1, 2))(x, w, b)
+    def ref_loss(x, w, b):
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        return jnp.sum(conv2d_ref(xp, w, b, stride=1, act="leaky") ** 2)
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+RMS_CASES = [
+    ((4, 128, 512), jnp.float32),
+    ((1000, 256), jnp.float32),                # non-multiple rows
+    ((2, 64, 1024), jnp.bfloat16),
+    ((7, 384), jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", RMS_CASES, ids=[str(c) for c in RMS_CASES])
+def test_rmsnorm(case):
+    shape, dt = case
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dt)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), dt)
+    out = rmsnorm_kernel(x, s, block_rows=128, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dt)
+    )
+
+
+def test_rmsnorm_grads_match_ref():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 256))
+    s = jax.random.normal(jax.random.PRNGKey(3), (256,))
+    gk = jax.grad(lambda x, s: jnp.sum(rmsnorm(x, s, 1e-6, True) ** 2), argnums=(0, 1))(x, s)
+    gr = jax.grad(lambda x, s: jnp.sum(rmsnorm_ref(x, s) ** 2), argnums=(0, 1))(x, s)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)
+
+
+def test_rmsnorm_matches_model_norm():
+    from repro.models.common import rms_norm
+
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64, 128), jnp.bfloat16)
+    s = jnp.ones((128,), jnp.bfloat16)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm_kernel(x, s, interpret=True), np.float32),
+        np.asarray(rms_norm(x, s), np.float32),
+        atol=2e-3, rtol=2e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk kernel (mamba2)
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # b, t, h, p, g, n, chunk
+    (2, 128, 4, 16, 2, 8, 32),
+    (1, 64, 2, 8, 1, 4, 64),      # single chunk, no GQA-style groups
+    (1, 256, 8, 32, 2, 16, 64),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=[str(c) for c in SSD_CASES])
+def test_ssd_chunk_kernel(case):
+    from repro.kernels.ssd_chunk.kernel import ssd_chunk_fwd
+    from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+    b, t, h, p, g, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, g, n))
+    Cm = jax.random.normal(ks[4], (b, t, g, n))
+    out_k = ssd_chunk_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    out_r = ssd_chunk_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    for name, a, b_ in zip(("y", "S", "decay", "pref"), out_k, out_r):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b_), atol=2e-5, rtol=1e-4, err_msg=name
+        )
+
+
+def test_ssd_scan_matches_model_and_grads():
+    from repro.kernels.ssd_chunk.ops import ssd_scan
+    from repro.models.mamba2 import _ssd_chunk_scan
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    b, t, h, p, g, n, q = 2, 128, 4, 16, 2, 8, 32
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, g, n))
+    Cm = jax.random.normal(ks[4], (b, t, g, n))
+    y_k, fin_k = ssd_scan(x, dt, A, Bm, Cm, q, True)
+    y_m, fin_m = _ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=q)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin_k), np.asarray(fin_m), atol=2e-5, rtol=1e-4)
+    gk = jax.grad(lambda x_: jnp.sum(ssd_scan(x_, dt, A, Bm, Cm, q, True)[0] ** 2))(x)
+    gm = jax.grad(lambda x_: jnp.sum(_ssd_chunk_scan(x_, dt, A, Bm, Cm, chunk=q)[0] ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gm), atol=5e-4, rtol=1e-3)

@@ -1,0 +1,112 @@
+"""Optimizers, schedules, clipping, gradient compression (EF invariant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.compression import (
+    CompressionState,
+    compress_with_feedback,
+    init_error,
+    int8_compress,
+    int8_decompress,
+)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgd"])
+def test_optimizer_converges_quadratic(name):
+    """min ||Wx - y||^2: every optimizer must reduce loss substantially."""
+    opt = make_optimizer(name)
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (16, 16)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    params = {"W": W}
+
+    def loss(p):
+        return jnp.mean((x @ p["W"] - y) ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    lr = 0.05 if name != "adafactor" else 0.02
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.float32(lr))
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4, 8))}
+    st_ = opt.init(params)
+    assert set(st_["v"]["big"].keys()) == {"vr", "vc"}
+    assert st_["v"]["big"]["vr"].shape == (256,)
+    assert st_["v"]["big"]["vc"].shape == (512,)
+    assert set(st_["v"]["small"].keys()) == {"v"}     # too small to factor
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90 + 160), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # under the limit: untouched
+    small = {"a": jnp.full((4,), 0.01)}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(small["a"]), rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    warmup, steps, peak = 10, 100, 1e-3
+    lrs = [float(cosine_schedule(jnp.int32(s), warmup, steps, peak)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= peak * 1.0001           # warmup ramps
+    assert max(lrs) == pytest.approx(peak, rel=1e-3)
+    assert lrs[-1] <= 0.11 * peak                     # decays to the 0.1 floor
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4000), st.floats(0.01, 100.0))
+def test_int8_roundtrip_error_bound(n, scale_mag):
+    """Block-quantisation error is bounded by scale/2 = maxabs/254."""
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32) * scale_mag
+    q, s = int8_compress(jnp.asarray(x))
+    back = int8_decompress(q, s, x.shape, jnp.float32)
+    blocks = np.asarray(q).shape[0]
+    err = np.abs(np.asarray(back) - x)
+    per_block_bound = np.repeat(np.asarray(s) / 2 + 1e-6, 256)[: x.size]
+    assert np.all(err <= per_block_bound + 1e-5)
+
+
+def test_error_feedback_preserves_signal():
+    """EF invariant: over N steps, sum(applied) ~= sum(true grads): the
+    quantisation residual stays bounded instead of accumulating."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(1000) * 1e-3, jnp.float32)}
+    state = init_error(g)
+    applied = jnp.zeros(1000)
+    for _ in range(50):
+        out, state = compress_with_feedback(g, state)
+        applied = applied + out["w"]
+    want = g["w"] * 50
+    resid = float(jnp.max(jnp.abs(applied - want)))
+    bound = float(jnp.max(jnp.abs(g["w"]))) / 127 * 2   # <= one quantum
+    assert resid <= bound + 1e-6
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    opt = adamw(weight_decay=0.5)
+    params = {"w": jnp.full((4,), 10.0)}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros((4,))}
+    for _ in range(20):
+        params, state = opt.update(zeros, state, params, jnp.float32(0.1))
+    assert float(jnp.max(jnp.abs(params["w"]))) < 10.0 * 0.5

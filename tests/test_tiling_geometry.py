@@ -1,0 +1,183 @@
+"""Property tests of the paper's tile/halo geometry (eqs 1a-d / 2a-d)."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.tiling import (
+    ConvSpec,
+    Group,
+    Span,
+    TileBox,
+    build_tiling_plan,
+    cumulative_stride,
+    dependent_region_1d,
+    forward_region_1d,
+    group_halo_width,
+    group_input_region_1d,
+    halo_bytes_per_group,
+    no_grouping,
+    partition_1d,
+    partition_grid,
+    peak_tile_activation_elems,
+    redundant_flops,
+    single_group,
+    uniform_grouping,
+    validate_profile,
+)
+
+spans = st.builds(
+    lambda lo, size: Span(lo, lo + size - 1),
+    st.integers(0, 64),
+    st.integers(1, 64),
+)
+convs = st.builds(
+    ConvSpec,
+    kernel=st.sampled_from([1, 2, 3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+)
+
+
+@given(spans, convs)
+def test_eq1_matches_paper_formula(span, layer):
+    """dependent_region_1d must literally be eq. (1a-d)."""
+    dep = dependent_region_1d(span, layer)
+    k2, s = layer.kernel // 2, layer.stride
+    assert dep.lo == span.lo * s - k2                       # eq 1a/1b
+    assert dep.hi == span.hi * s + k2 + (s - 1)             # eq 1c/1d
+
+
+@given(spans, convs)
+def test_eq2_matches_paper_formula(span, layer):
+    """forward_region_1d must literally be eq. (2a-d)."""
+    fwd = forward_region_1d(span, layer)
+    k2, s = layer.kernel // 2, layer.stride
+    assert fwd.lo == math.ceil((span.lo - k2) / s)          # eq 2a/2b
+    assert fwd.hi == math.floor((span.hi + k2) / s)         # eq 2c/2d
+
+
+@given(spans, convs)
+def test_eq1_eq2_adjoint(span, layer):
+    """Outputs computable from the dependent region of ``span`` include
+    ``span`` itself: eq. (2) o eq. (1) is a superset (paper S4.2)."""
+    dep = dependent_region_1d(span, layer)
+    back = forward_region_1d(dep, layer)
+    assert back.lo <= span.lo and back.hi >= span.hi
+
+
+@given(spans, st.lists(convs, min_size=1, max_size=5))
+def test_group_recursion_monotone(span, layers):
+    """Recursing eq. (1) through more layers never shrinks the dependent
+    region (receptive-field growth, paper Fig. 3)."""
+    region = group_input_region_1d(span, layers)
+    sub = group_input_region_1d(span, layers[1:])
+    # sub is the region at layer-1 input; region must cover its pre-image
+    assert region.size >= sub.size or layers[0].stride > 1
+
+
+@given(st.lists(convs, min_size=1, max_size=6))
+def test_group_halo_width_formula(layers):
+    """Halo width equals the closed-form sum_l floor(K_l/2) * prod stride."""
+    w = group_halo_width(layers)
+    expect = 0
+    sprod = 1
+    for l in layers:
+        expect += (l.kernel // 2) * sprod
+        sprod *= l.stride
+    assert w == expect
+    assert cumulative_stride(layers) == sprod
+
+
+@given(st.integers(1, 256), st.integers(1, 16))
+def test_partition_covers_exactly(extent, parts):
+    if extent < parts:
+        with pytest.raises(ValueError):
+            partition_1d(extent, parts)
+        return
+    spans_ = partition_1d(extent, parts)
+    assert len(spans_) == parts
+    assert spans_[0].lo == 0 and spans_[-1].hi == extent - 1
+    for a, b in zip(spans_, spans_[1:]):
+        assert b.lo == a.hi + 1                      # contiguous, no overlap
+    sizes = [s.size for s in spans_]
+    assert max(sizes) - min(sizes) <= 1              # near-equal
+
+
+@given(st.integers(2, 32), st.integers(2, 32), st.integers(1, 4), st.integers(1, 4))
+def test_partition_grid_shape(h, w, n, m):
+    if h < n or w < m:
+        return
+    grid = partition_grid(h, w, n, m)
+    assert len(grid) == n and len(grid[0]) == m
+    total = sum(b.rows.size * b.cols.size for row in grid for b in row)
+    assert total == h * w
+
+
+@given(st.integers(1, 12), st.integers(1, 12))
+def test_grouping_profiles_valid(n_layers, gsize):
+    for prof in (no_grouping(n_layers), single_group(n_layers), uniform_grouping(n_layers, gsize)):
+        validate_profile(prof, n_layers)
+    with pytest.raises(ValueError):
+        validate_profile([Group(0, n_layers)], n_layers)     # overruns
+    with pytest.raises(ValueError):
+        validate_profile([], n_layers)
+
+
+def _yolo_head(n=6):
+    from repro.models.yolo import yolov2_16_layers
+
+    return [l.spec() for l in yolov2_16_layers()[:n]]
+
+
+@pytest.mark.parametrize("grid", [(2, 2), (4, 4), (2, 4)])
+@pytest.mark.parametrize("groups_of", [1, 2, 6])
+def test_full_plan_yolo_consistency(grid, groups_of):
+    layers = _yolo_head()
+    n, m = grid
+    groups = uniform_grouping(len(layers), groups_of)
+    plan = build_tiling_plan((64, 64), layers, n, m, groups)
+    # every tile's group output boxes tile the map exactly
+    for gi, g in enumerate(plan.groups):
+        oh, ow = plan.layer_hw[g.end + 1]
+        covered = 0
+        for i in range(n):
+            for j in range(m):
+                ob = plan.tiles[i][j].groups[gi].layers[-1].out_box
+                clipped = TileBox(ob.rows.clip(oh), ob.cols.clip(ow))
+                covered += clipped.rows.size * clipped.cols.size
+        assert covered == oh * ow
+
+
+def test_grouping_tradeoff_monotone():
+    """Paper S4.2: larger groups => more redundant compute, fewer halo
+    bytes exchanged in total across group inputs."""
+    layers = _yolo_head()
+    plans = {
+        g: build_tiling_plan((64, 64), layers, 2, 2, uniform_grouping(len(layers), g))
+        for g in (1, 2, 3, 6)
+    }
+    red = {g: redundant_flops(p, layers) for g, p in plans.items()}
+    syncs = {g: len(p.groups) for g, p in plans.items()}
+    assert red[1] == 0                                   # no grouping: no redundancy
+    assert red[2] > 0 and red[6] >= max(red[2], red[3])  # growth with group size
+    # (2 vs 3 is not strictly monotone: boundaries interact with pool strides)
+    assert syncs[1] > syncs[2] > syncs[6]
+
+
+def test_memory_decreases_with_tiles():
+    """Paper Fig. 6: peak per-tile activation memory shrinks with grid."""
+    layers = _yolo_head()
+    peaks = []
+    for n in (1, 2, 4):
+        plan = build_tiling_plan((64, 64), layers, n, n)
+        peaks.append(peak_tile_activation_elems(plan, layers))
+    assert peaks[0] > peaks[1] > peaks[2]
+
+
+def test_halo_bytes_positive_only_for_real_halos():
+    layers = [ConvSpec(1, 1, 8, 8)]                      # 1x1 conv: no halo
+    plan = build_tiling_plan((16, 16), layers, 2, 2)
+    assert halo_bytes_per_group(plan, layers) == [0]
+    layers = [ConvSpec(3, 1, 8, 8)]
+    plan = build_tiling_plan((16, 16), layers, 2, 2)
+    assert halo_bytes_per_group(plan, layers)[0] > 0
