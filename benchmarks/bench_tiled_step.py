@@ -2,9 +2,12 @@
 
 Real execution (not cost model): a reduced YOLO stack on a 1x1 tile mesh -
 the tiled machinery (halo exchange -> local VALID convs -> deferred psum)
-against the plain SAME-conv reference.  Checks the tiled path's overhead is
-bounded and its loss/grads match to float tolerance.  Multi-tile wall-clock
-runs live in scripts/check_core.py (4 fake devices, subprocess).
+against the plain SAME-conv reference, for each registered conv backend
+("xla" lowers to conv_general_dilated; "pallas" runs the MXU kernel in
+interpret mode off TPU, so its wall-clock here is a correctness probe, not
+a speed claim).  Checks each backend's loss/grads match the reference to
+float tolerance.  Multi-tile wall-clock runs live in scripts/check_*.py
+(4 fake devices, subprocess).
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import conv_backend_names
 from repro.core.fusion import (
     build_stack_plan,
     make_tiled_loss,
@@ -33,7 +37,7 @@ HW = (64, 64)
 
 
 def _time(f, *args, n=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         out = f(*args)
@@ -43,40 +47,53 @@ def _time(f, *args, n=5):
 
 def run() -> list[dict]:
     mesh = make_tile_mesh(1, 1)
-    plan = build_stack_plan(HW, LAYERS, 1, 1)
     params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
-    out_hw = plan.out_hw()
+    plan0 = build_stack_plan(HW, LAYERS, 1, 1)
+    out_hw = plan0.out_hw()
     t = jax.random.normal(jax.random.PRNGKey(2), (2, *out_hw, LAYERS[-1].out_channels))
 
-    tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
-    ref_loss = jax.jit(lambda p, x, t: reference_loss(p, x, t, plan, l2_loss_local))
-    tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
+    ref_loss = jax.jit(lambda p, x, t: reference_loss(p, x, t, plan0, l2_loss_local))
     ref_grad = jax.jit(jax.grad(lambda p: ref_loss(p, x, t)))
-
-    lt, lr = float(tiled_loss(params, x, t)), float(ref_loss(params, x, t))
-    gt, gr = tiled_grad(params), ref_grad(params)
-    gerr = max(
-        float(jnp.max(jnp.abs(a - b)))
-        for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
-    )
-
-    t_tiled = _time(lambda: tiled_grad(params))
+    lr = float(ref_loss(params, x, t))
+    gr = ref_grad(params)
     t_ref = _time(lambda: ref_grad(params))
-    return [
-        dict(
-            name="tiled_step/fwd_loss_err", value=abs(lt - lr),
-            tiled_us=round(t_tiled * 1e6, 1), ref_us=round(t_ref * 1e6, 1),
-            grad_maxerr=gerr,
-            overhead=round(t_tiled / max(t_ref, 1e-9), 2),
+
+    rows = []
+    for backend in conv_backend_names():
+        plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend)
+        tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+        tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
+        lt = float(tiled_loss(params, x, t))
+        gt = tiled_grad(params)
+        gerr = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
         )
-    ]
+        t_tiled = _time(lambda: tiled_grad(params))
+        rows.append(
+            dict(
+                name=f"tiled_step/{backend}/fwd_loss_err", value=abs(lt - lr),
+                backend=backend,
+                tiled_us=round(t_tiled * 1e6, 1), ref_us=round(t_ref * 1e6, 1),
+                grad_maxerr=gerr,
+                overhead=round(t_tiled / max(t_ref, 1e-9), 2),
+            )
+        )
+    return rows
 
 
 def check(rows) -> list[str]:
-    r = rows[0]
-    return [
-        f"tiled loss == reference: {'OK' if r['value'] < 1e-4 else 'OFF'} (err {r['value']:.2e})",
-        f"tiled grads == reference: {'OK' if r['grad_maxerr'] < 1e-4 else 'OFF'} (err {r['grad_maxerr']:.2e})",
-        f"1x1-tile overhead {r['overhead']}x (halo machinery cost)",
-    ]
+    out = []
+    for r in rows:
+        be = r["backend"]
+        out.append(
+            f"[{be}] tiled loss == reference: "
+            f"{'OK' if r['value'] < 1e-4 else 'OFF'} (err {r['value']:.2e})"
+        )
+        out.append(
+            f"[{be}] tiled grads == reference: "
+            f"{'OK' if r['grad_maxerr'] < 1e-4 else 'OFF'} (err {r['grad_maxerr']:.2e})"
+        )
+        out.append(f"[{be}] 1x1-tile overhead {r['overhead']}x (halo machinery cost)")
+    return out

@@ -7,6 +7,11 @@ Jetson Nano pair, TPU v5e pod) plus a parametric scan, and prints the
 DP-optimal profile + modelled cycle time for each - the tool an operator
 would run before launching a distributed edge-training job.
 
+(The same optimizer is wired into the planner itself: pass
+``groups="auto", hw=<profile>`` to ``core.fusion.build_stack_plan`` and the
+selection flows straight into plan construction - this example is the
+*sweep* view across hardware.)
+
 Run:  PYTHONPATH=src python examples/grouping_advisor.py
 """
 import dataclasses

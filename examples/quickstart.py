@@ -1,27 +1,35 @@
-"""Quickstart: the paper's technique in ~60 lines.
+"""Quickstart: the paper's technique in ~70 lines.
 
-Builds a small conv stack, tiles it 1x1 (single device - the same code runs
-NxM on a device grid), picks a grouping profile with the cost-model
-optimizer, and runs a few training steps with the deferred weight
-aggregation - asserting tiled == untiled exactness along the way.
+Builds a small conv stack and runs it through the unified
+planner -> executor -> trainer pipeline: the planner picks the grouping
+profile straight from the cost model (``groups="auto"``) and the conv
+backend ("xla" here; "pallas" selects the MXU kernel, interpret-mode off
+TPU), the executor runs the shard_map'd halo-exchange stacks, and the
+trainer wraps it all in TrainState with clipping + LR schedule - asserting
+tiled == untiled exactness along the way.
+
+Tiles are 1x1 here (single device); the same code runs NxM on a device
+grid.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ParallelConfig, TrainConfig
 from repro.core import (
     LayerDef,
     PI3_PROFILE,
     build_stack_plan,
     init_stack_params,
     make_tiled_loss,
-    optimize_grouping,
     profile_cost,
 )
 from repro.core.fusion import reference_loss
 from repro.launch.mesh import make_tile_mesh
+from repro.models.tiled_cnn import TiledCNNArch
 from repro.models.yolo import l2_loss_local
+from repro.train.trainer import make_train_step
 
 # 1. A feature-map-dominated conv stack (paper's regime: early CNN layers).
 LAYERS = [
@@ -32,16 +40,16 @@ LAYERS = [
 ]
 HW = (64, 64)
 
-# 2. Ask the cost model for the grouping profile this hardware wants.
-groups = optimize_grouping(HW, LAYERS, 2, 2, PI3_PROFILE)
-cost = profile_cost(HW, LAYERS, groups, 2, 2, PI3_PROFILE)
-print(f"grouping profile: {[(g.start, g.end) for g in groups]}")
+# 2. Planner: grouping straight from the cost-model DP ("auto") and a
+#    selectable conv backend - swap backend="pallas" for the MXU kernel.
+plan = build_stack_plan(HW, LAYERS, 1, 1, "auto", hw=PI3_PROFILE, backend="xla")
+cost = profile_cost(HW, LAYERS, plan.groups, 1, 1, PI3_PROFILE)
+print(f"grouping profile: {[(g.start, g.end) for g in plan.groups]}")
 print(f"modelled cycle: {cost['total']:.2f}s "
       f"(compute {cost['compute']:.2f}s, boundary {cost['boundary']*1e3:.1f}ms)")
 
-# 3. Build the tiling plan + tiled loss (shard_map'd halo-exchange stacks).
+# 3. Executor: shard_map'd halo-exchange stacks over the tile mesh.
 mesh = make_tile_mesh(1, 1)          # 1x1 here; (n, m) on a real device grid
-plan = build_stack_plan(HW, LAYERS, 1, 1, None)
 params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
 loss_fn = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
 
@@ -54,11 +62,15 @@ tiled = loss_fn(params, x, tgt)
 print(f"tiled loss {float(tiled):.6f} == reference {float(ref):.6f}")
 assert abs(float(tiled) - float(ref)) < 1e-3 * max(1.0, abs(float(ref)))
 
-# 5. Train a few steps (AD through the tiled stack derives the paper's
-#    backward halo exchange + per-tile weight-gradient partial sums).
-grad_fn = jax.jit(jax.grad(lambda p: loss_fn(p, x, tgt)))
+# 5. Trainer: the unified train step - deferred per-batch weight aggregation
+#    (one psum per batch, paper §4.1) + clipping + cosine/warmup schedule.
+arch = TiledCNNArch(plan=plan, mesh=mesh, loss_local=l2_loss_local)
+init_state, train_step = make_train_step(
+    arch, ParallelConfig(grad_accum=2), TrainConfig(lr=0.05, optimizer="sgd", warmup=0, steps=5)
+)
+state = init_state(jax.random.PRNGKey(0))
+step_fn = jax.jit(train_step)
 for step in range(5):
-    g = grad_fn(params)
-    params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
-    print(f"step {step}: loss {float(loss_fn(params, x, tgt)):.6f}")
+    state, metrics = step_fn(state, {"x": x, "t": tgt})
+    print(f"step {step}: loss {float(metrics['loss']):.6f}")
 print("quickstart OK")

@@ -1,12 +1,19 @@
 """End-to-end driver: distributed tiled training of the paper's network.
 
-Trains the YOLOv2-16 stack (~17M params at full width; a width-reduced
-# ~100M-activation variant by default so a few hundred steps run on CPU)
-with the paper's full pipeline:
+Trains a YOLOv2-16 prefix with the paper's full pipeline through the
+unified planner -> executor -> trainer stack:
 
-  spatial tiling -> halo exchange -> fused grouped stacks -> deferred
-  per-batch weight aggregation -> SGD(momentum), under the fault-tolerant
-  runtime driver (checkpoint/restart + straggler tracking).
+  planner  build_stack_plan picks the grouping profile (--groups auto runs
+           the cost-model DP against --profile) and the conv backend
+           (--backend pallas uses the MXU kernel, interpret-mode off TPU);
+  executor shard_map'd fused grouped stacks with ppermute halo exchange;
+  trainer  make_train_step supplies TrainState, deferred per-batch weight
+           aggregation (one psum per batch, paper §4.1), global-norm
+           clipping, cosine/warmup LR, and optional int8 error-feedback
+           compression of the weight all-reduce (--compress int8);
+
+all under the fault-tolerant runtime driver (checkpoint/restart +
+straggler tracking).
 
 On a 4-device grid this runs 2x2 tiles (set XLA_FLAGS before launch or run
 on real hardware); on one device it runs the identical 1x1-tiled code.
@@ -19,77 +26,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fusion import build_stack_plan, make_deferred_grad_step
-from repro.core.tiling import no_grouping, uniform_grouping
-from repro.launch.mesh import make_tile_mesh
-from repro.models.yolo import l2_loss_local, yolov2_16_layers, init_yolo
-from repro.optim import make_optimizer
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.tiling import uniform_grouping
+from repro.models.yolo import make_yolo_tiled_arch, yolov2_16_layers
 from repro.runtime.driver import DriverConfig, run_training
+from repro.train.trainer import make_train_step
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--hw", type=int, default=64, help="input H=W")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4, help="global batch (all microbatches)")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--layers", type=int, default=8, help="YOLO prefix depth")
     ap.add_argument("--grid", type=int, default=1, help="tile grid (n=m)")
-    ap.add_argument("--group", type=int, default=0, help="0 = per-layer sync")
+    ap.add_argument("--group", default="0",
+                    help="'auto' = cost-model DP; 0 = per-layer sync; K = uniform size K")
+    ap.add_argument("--profile", default="pi3-core",
+                    help="hardware profile for --group auto")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--ckpt-dir", default="/tmp/yolo_tiled_ckpt")
+    # new dir name: the unified TrainState checkpoint layout is incompatible
+    # with the pre-refactor {"params","opt","step"} dict checkpoints
+    ap.add_argument("--ckpt-dir", default="/tmp/yolo_tiled_unified_ckpt")
     args = ap.parse_args()
 
-    layers = yolov2_16_layers()[: args.layers]
-    groups = (
-        no_grouping(len(layers)) if args.group == 0
-        else uniform_grouping(len(layers), args.group)
+    depth = len(yolov2_16_layers()[: args.layers])
+    if args.group == "auto":
+        groups = "auto"
+    elif int(args.group) == 0:
+        groups = None
+    else:
+        groups = uniform_grouping(depth, int(args.group))
+
+    arch = make_yolo_tiled_arch(
+        input_hw=(args.hw, args.hw),
+        depth=depth,
+        n=args.grid,
+        m=args.grid,
+        groups=groups,
+        backend=args.backend,
+        hw=args.profile,
+        batch=args.batch,
     )
-    n = m = args.grid
-    mesh = make_tile_mesh(n, m)
-    plan = build_stack_plan((args.hw, args.hw), layers, n, m, groups)
-    out_hw = plan.out_hw()
-    cout = layers[-1].out_channels
+    print(
+        f"plan: backend={arch.plan.backend} "
+        f"groups={[(g.start, g.end) for g in arch.plan.groups]}"
+    )
 
-    step_fn = jax.jit(make_deferred_grad_step(
-        plan, mesh, l2_loss_local, microbatches=args.microbatches
-    ))
-    opt = make_optimizer("sgd")          # darknet's optimizer
-
-    def init_state(key):
-        params = init_yolo(key, plan)
-        return {"params": params, "opt": opt.init(params), "step": jnp.int32(0)}
+    pcfg = ParallelConfig(grad_accum=args.microbatches)
+    tcfg = TrainConfig(
+        lr=args.lr, optimizer="sgd",          # darknet's optimizer
+        warmup=min(20, args.steps // 10), steps=args.steps,
+        grad_compression=args.compress,
+    )
+    init_state, train_step = make_train_step(arch, pcfg, tcfg)
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+    tgt = arch.target_shape(args.batch)
 
     def make_batch(step):
         rng = np.random.default_rng([7, step])
-        x = rng.standard_normal(
-            (args.microbatches, args.batch, args.hw, args.hw, 3), np.float32
-        )
+        x = rng.standard_normal((args.batch, args.hw, args.hw, 3), np.float32)
         # regression target: a fixed random linear map of the input stats
-        t = rng.standard_normal(
-            (args.microbatches, args.batch, *out_hw, cout), np.float32
-        ) * 0.05
+        t = 0.05 * rng.standard_normal(tgt, np.float32)
         return {"x": jnp.asarray(x), "t": jnp.asarray(t)}
-
-    def train_step(state, batch):
-        loss, grads = step_fn(state["params"], batch["x"], batch["t"])
-        params, opt_state = opt.update(grads, state["opt"], state["params"], jnp.float32(args.lr))
-        return (
-            {"params": params, "opt": opt_state, "step": state["step"] + 1},
-            {"loss": loss},
-        )
 
     report = run_training(
         init_state=init_state,
-        train_step=train_step,
+        train_step=step_fn,
         make_batch=make_batch,
         steps=args.steps,
-        cfg=DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50),
+        cfg=DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=25),
     )
+    warm = report.step_times[5:] or report.step_times
     print(
         f"done: steps={report.steps_done} restarts={report.restarts} "
         f"final loss={report.last_metrics['loss']:.6f} "
-        f"mean step {np.mean(report.step_times[5:]) * 1e3:.1f}ms"
+        f"mean step {np.mean(warm) * 1e3:.1f}ms"
     )
     return 0
 

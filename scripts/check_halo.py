@@ -6,13 +6,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P, AxisType
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.halo import halo_exchange_1d, halo_exchange_2d, send_boundary_sum_1d
 
-mesh1 = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
-mesh2 = jax.make_mesh((4, 2), ("r", "c"), axis_types=(AxisType.Auto,) * 2)
+mesh1 = jax.make_mesh((8,), ("x",))
+mesh2 = jax.make_mesh((4, 2), ("r", "c"))
 
 
 def check_1d():

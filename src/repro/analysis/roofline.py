@@ -90,7 +90,8 @@ def count_params_cfg(abstract_params: Any, cfg: ModelConfig) -> tuple[int, int]:
     Active discounts routed-expert weights by top_k/n_experts (a token's
     forward touches only the selected experts); everything else is active.
     """
-    from jax.tree_util import tree_flatten_with_path, keystr
+    from jax.tree_util import tree_flatten_with_path
+    from repro.compat import keystr_slash
 
     leaves, _ = tree_flatten_with_path(abstract_params)
     total = active = 0
@@ -99,7 +100,7 @@ def count_params_cfg(abstract_params: Any, cfg: ModelConfig) -> tuple[int, int]:
         n = 1
         for s in leaf.shape:
             n *= s
-        key = keystr(path, separator="/")
+        key = keystr_slash(path)
         total += n
         # stacked routed experts sit at ...["moe"]["w_gate"|"w_up"|"w_down"]
         if cfg.moe is not None and "moe" in key and (

@@ -23,7 +23,9 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
-from jax.tree_util import keystr, tree_map_with_path
+from jax.tree_util import tree_map_with_path
+
+from repro.compat import keystr_slash as _keystr
 
 
 def _sanitize(path: str) -> str:
@@ -62,10 +64,10 @@ class CheckpointManager:
         manifest = {"step": step, "leaves": []}
 
         def leaf(path, x):
-            name = _sanitize(keystr(path, separator="/")) or "root"
+            name = _sanitize(_keystr(path)) or "root"
             np.save(os.path.join(tmp, name + ".npy"), x)
             manifest["leaves"].append(
-                {"path": keystr(path, separator="/"), "file": name + ".npy"}
+                {"path": _keystr(path), "file": name + ".npy"}
             )
             return x
 
@@ -107,7 +109,7 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step:08d}")
 
         def leaf(path, x, s=None):
-            name = _sanitize(keystr(path, separator="/")) or "root"
+            name = _sanitize(_keystr(path)) or "root"
             arr = np.load(os.path.join(d, name + ".npy"))
             if s is not None:
                 return jax.device_put(arr, s)

@@ -1,0 +1,31 @@
+"""Small jax version-compat shims (the container pins an older jax).
+
+Centralised so every module spells compat the same way:
+  - ``keystr_slash``: bare-name, slash-separated key paths
+    (``params/0/moe/w_gate``) on every jax version.  Newer jax spells this
+    ``keystr(path, simple=True, separator="/")``; older jax has neither
+    kwarg, so join the raw key entries by hand in the identical format.
+    The output is load-bearing: checkpoint manifests (ckpt/manager.py) and
+    the sharding-rule substring patterns (parallel/sharding.py, e.g.
+    ``"moe/w_gate"``) both key on this exact spelling, so it must not vary
+    with the installed jax.
+(``core.halo.axis_size`` is the shard_map-side shim for ``lax.axis_size``.)
+"""
+from __future__ import annotations
+
+from jax.tree_util import keystr
+
+
+def keystr_slash(path) -> str:
+    try:
+        return keystr(path, simple=True, separator="/")
+    except TypeError:
+        parts = []
+        for k in path:
+            for attr in ("key", "idx", "name"):
+                if hasattr(k, attr):
+                    parts.append(str(getattr(k, attr)))
+                    break
+            else:
+                parts.append(str(k))
+        return "/".join(parts)

@@ -15,6 +15,12 @@ from repro.core.tiling import (
     group_halo_width,
 )
 from repro.core.spatial import LayerDef, init_stack_params, stack_reference
+from repro.core.backend import (
+    ConvBackend,
+    conv_backend_names,
+    get_conv_backend,
+    register_conv_backend,
+)
 from repro.core.fusion import (
     StackPlan,
     build_stack_plan,
@@ -22,12 +28,14 @@ from repro.core.fusion import (
     make_tiled_forward,
     make_tiled_loss,
     make_deferred_grad_step,
+    resolve_hw_profile,
 )
 from repro.core.grouping import (
     HardwareProfile,
     PI3_PROFILE,
     JETSON_PROFILE,
     TPU_V5E_PROFILE,
+    PROFILES,
     profile_cost,
     optimize_grouping,
 )

@@ -1,0 +1,132 @@
+"""Pluggable conv-compute backends for the tiled executor (DESIGN.md §4).
+
+The distributed pipeline separates *where* data lives (planner: tiling,
+grouping, halo widths) and *how* boundary data moves (executor: ppermute
+halo exchange, off-map masking, cross-tile BN) from *how the conv math
+runs on one tile*.  That last piece is this registry: a backend computes
+the VALID (un-padded) 2-D convolution of a halo-extended NHWC tile with an
+HWIO filter, adds the bias when one is given, and may fuse the activations
+listed in its ``fused_acts`` - the executor applies any activation a
+backend cannot fuse, and always applies batch norm itself (BN needs
+cross-tile psums the backend never sees).
+
+Contract (DESIGN.md §4):
+  fn(x, w, b, *, stride, act) -> y
+    x: (N, H, W, Cin) halo-extended local tile     w: (K, K, Cin, Cout)
+    b: (Cout,) or None                             y: (N, OH, OW, Cout)
+  - VALID padding only; halo delivery is the executor's job.
+  - Must be differentiable: ``jax.grad`` through the executor derives the
+    paper's backward pass (rotated-filter delta conv, reversed halo
+    exchange, per-tile weight-grad partial sums), so a custom backend must
+    ship a VJP.  The Pallas backend reuses the XLA transpose-conv VJP
+    (kernels/conv2d_tiled/ops.py).
+  - Must be exact vs. the ``xla`` oracle to float tolerance; the tiled
+    exactness suites run against every registered backend.
+
+``xla`` (default) lowers to ``lax.conv_general_dilated``.  ``pallas`` runs
+the direct MXU kernel in ``kernels/conv2d_tiled`` - compiled on TPU,
+interpret-mode everywhere else so CI exercises the same code path on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Activation = Callable[[jax.Array], jax.Array]
+
+ACTIVATIONS: dict[str, Activation] = {
+    "linear": lambda x: x,
+    "relu": jax.nn.relu,
+    "leaky": lambda x: jnp.where(x > 0, x, 0.1 * x),  # darknet leaky slope
+    "gelu": jax.nn.gelu,
+}
+
+ConvFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvBackend:
+    """One registered conv compute path (see module docstring contract)."""
+
+    name: str
+    fn: ConvFn
+    fused_acts: frozenset[str]
+
+    def __call__(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        b: Optional[jax.Array],
+        *,
+        stride: int,
+        act: str,
+    ) -> jax.Array:
+        return self.fn(x, w, b, stride=stride, act=act)
+
+
+_REGISTRY: dict[str, ConvBackend] = {}
+
+
+def register_conv_backend(
+    name: str, fn: ConvFn, *, fused_acts: tuple[str, ...] = ("linear",)
+) -> ConvBackend:
+    be = ConvBackend(name, fn, frozenset(fused_acts))
+    _REGISTRY[name] = be
+    return be
+
+
+def get_conv_backend(name: str) -> ConvBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown conv backend {name!r}; registered: {conv_backend_names()}"
+        ) from None
+
+
+def conv_backend_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# xla: the oracle path (lax.conv_general_dilated)
+# ---------------------------------------------------------------------------
+
+
+def _xla_conv(x, w, b, *, stride: int, act: str) -> jax.Array:
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return ACTIVATIONS[act](y)
+
+
+register_conv_backend("xla", _xla_conv, fused_acts=tuple(ACTIVATIONS))
+
+
+# ---------------------------------------------------------------------------
+# pallas: the direct MXU kernel (kernels/conv2d_tiled)
+# ---------------------------------------------------------------------------
+
+
+def _pallas_conv(x, w, b, *, stride: int, act: str) -> jax.Array:
+    from repro.kernels.conv2d_tiled.ops import conv2d
+
+    if b is None:
+        # custom_vjp differentiates (x, w, b); a zero bias keeps the
+        # signature uniform and its (discarded) gradient costs nothing.
+        b = jnp.zeros((w.shape[-1],), x.dtype)
+    interpret = jax.default_backend() != "tpu"
+    return conv2d(x, w, b, stride, 0, act, interpret)
+
+
+register_conv_backend("pallas", _pallas_conv, fused_acts=("linear", "relu", "leaky"))

@@ -31,8 +31,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.tiling import Group, no_grouping, validate_profile
-from repro.core.halo import halo_exchange_2d
+from repro.core.halo import axis_size, halo_exchange_2d
+from repro.core.backend import get_conv_backend
 from repro.core.spatial import LayerDef, apply_layer_local, stack_reference
+from repro.core.grouping import (
+    HardwareProfile,
+    PI3_PROFILE,
+    PROFILES,
+    optimize_grouping,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +56,7 @@ class StackPlan:
     group_halos: tuple[tuple[int, int, int, int], ...]   # (top,bot,left,right) @ group input
     rem_halos: tuple[tuple[int, int, int, int], ...]     # remaining halo after each layer
     group_of_layer: tuple[int, ...]
+    backend: str = "xla"                         # conv compute path (core.backend)
 
     @property
     def n_layers(self) -> int:
@@ -58,15 +66,53 @@ class StackPlan:
         return self.map_hw[-1]
 
 
+def resolve_hw_profile(hw: HardwareProfile | str | None) -> HardwareProfile:
+    """Profile object from a profile, a registered name, or None (Pi default)."""
+    if hw is None:
+        return PI3_PROFILE
+    if isinstance(hw, str):
+        try:
+            return PROFILES[hw]
+        except KeyError:
+            raise KeyError(
+                f"unknown hardware profile {hw!r}; available: {sorted(PROFILES)}"
+            ) from None
+    return hw
+
+
 def build_stack_plan(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
     n: int,
     m: int,
-    groups: Sequence[Group] | None = None,
+    groups: Sequence[Group] | str | None = None,
+    *,
+    backend: str = "xla",
+    hw: HardwareProfile | str | None = None,
+    batch: int = 1,
 ) -> StackPlan:
+    """Planner: all static geometry + compute-path choices for a tiled stack.
+
+    groups: explicit profile, None (= sync every layer), or ``"auto"`` - run
+    the DP cost-model optimizer (core.grouping) against ``hw`` (a
+    HardwareProfile, a registered profile name, or None for the Pi default)
+    at batch size ``batch``, so grouping selection flows into the plan
+    instead of living in a side tool.  backend: registered conv compute path
+    ("xla" | "pallas"); validated here so a typo fails at plan time, not
+    inside shard_map tracing.
+    """
+    get_conv_backend(backend)   # fail fast on unknown backends
     layers = tuple(layers)
-    groups = tuple(groups) if groups is not None else tuple(no_grouping(len(layers)))
+    if isinstance(groups, str):
+        if groups != "auto":
+            raise ValueError(f"groups must be a profile, None, or 'auto'; got {groups!r}")
+        groups = tuple(
+            optimize_grouping(input_hw, layers, n, m, resolve_hw_profile(hw), batch=batch)
+        )
+    elif groups is None:
+        groups = tuple(no_grouping(len(layers)))
+    else:
+        groups = tuple(groups)
     validate_profile(groups, len(layers))
 
     # Map + shard extents per layer.
@@ -123,12 +169,25 @@ def build_stack_plan(
         group_halos=tuple(group_halos),
         rem_halos=tuple(rem_halos),
         group_of_layer=tuple(group_of_layer),
+        backend=backend,
     )
 
 
 # ---------------------------------------------------------------------------
 # Shard-local executor (runs inside shard_map)
 # ---------------------------------------------------------------------------
+
+
+def _global_batch(
+    local_batch: int, batch_axis: str | None, batch_global: int | None
+) -> int:
+    """Global batch for exact cross-tile BN statistics: explicit override, or
+    local batch scaled by the batch mesh axis when one is present."""
+    if batch_global is not None:
+        return batch_global
+    if batch_axis is None:
+        return local_batch
+    return local_batch * axis_size(batch_axis)
 
 
 def apply_stack_local(
@@ -138,10 +197,11 @@ def apply_stack_local(
     *,
     row_axis: str = "th",
     col_axis: str = "tw",
+    batch_axis: str | None = None,
     batch_global: int | None = None,
 ) -> jax.Array:
     """Forward through all groups on one tile.  ``x``: (b, h/n, w/m, c)."""
-    bg = batch_global if batch_global is not None else x.shape[0]
+    bg = _global_batch(x.shape[0], batch_axis, batch_global)
     for gi, g in enumerate(plan.groups):
         x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
         for l in g.layers:
@@ -156,6 +216,8 @@ def apply_stack_local(
                 col_axis=col_axis,
                 batch_global=bg,
                 mask_offmap=(l != g.end),
+                backend=plan.backend,
+                batch_axis=batch_axis,
             )
     return x
 
@@ -185,6 +247,7 @@ def make_tiled_forward(
         plan=plan,
         row_axis=row_axis,
         col_axis=col_axis,
+        batch_axis=batch_axis,
         batch_global=batch_global,
     )
     return shard_map(
@@ -219,7 +282,9 @@ def make_tiled_loss(
 
     def fn(params, x, target):
         y = apply_stack_local(
-            params, x, plan, row_axis=row_axis, col_axis=col_axis, batch_global=batch_global
+            params, x, plan,
+            row_axis=row_axis, col_axis=col_axis,
+            batch_axis=batch_axis, batch_global=batch_global,
         )
         s, c = loss_local(y, target)
         s = lax.psum(s, axes)
@@ -243,6 +308,7 @@ def make_deferred_grad_step(
     row_axis: str = "th",
     col_axis: str = "tw",
     batch_axis: str | None = None,
+    batch_global: int | None = None,
     microbatches: int = 1,
 ):
     """Paper §4.1 deferred weight aggregation: per-tile partial weight grads
@@ -256,7 +322,11 @@ def make_deferred_grad_step(
     tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
 
     def local_loss(params, x, t):
-        y = apply_stack_local(params, x, plan, row_axis=row_axis, col_axis=col_axis)
+        y = apply_stack_local(
+            params, x, plan,
+            row_axis=row_axis, col_axis=col_axis,
+            batch_axis=batch_axis, batch_global=batch_global,
+        )
         s, c = loss_local(y, t)
         # Divide by the *global* count; the cross-tile sum is deferred to the
         # gradient aggregation (linearity), matching the paper's schedule.
@@ -281,10 +351,6 @@ def make_deferred_grad_step(
         grads = jax.tree.map(lambda a: lax.psum(a, tile_axes) / cnt_g, acc)
         loss = lax.psum(loss_sum, tile_axes) / cnt_g
         return loss, grads
-
-    def grad_local_loss(params, x, t):
-        s, c = local_loss(params, x, t)
-        return s, c
 
     return shard_map(
         fn,

@@ -21,6 +21,18 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def axis_size(axis_name: str) -> int:
+    """Size of a named mesh axis, callable inside shard_map.
+
+    ``lax.axis_size`` only exists on newer jax; ``psum`` of the literal 1 is
+    the portable spelling (constant-folded to the axis size at trace time).
+    """
+    fn = getattr(lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return lax.psum(1, axis_name)
+
+
 def _shift_perm(n: int, direction: int) -> list[tuple[int, int]]:
     """Permutation sending shard i -> i+direction (no wraparound: edge tiles
     simply receive zeros, which matches SAME zero padding)."""
@@ -44,7 +56,7 @@ def halo_exchange_1d(
 
     Returns an array whose ``dim`` extent is ``x.shape[dim]+halo_lo+halo_hi``.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     parts = []
     if halo_lo > 0:
         # strip the *previous* shard must send us: its last halo_lo rows
@@ -96,7 +108,7 @@ def send_boundary_sum_1d(
     accumulated onto the neighbour's interior.  (JAX AD derives exactly this
     for the backward pass - provided here for explicit schedules and tests.)
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     core_lo, core_hi = overlap_lo, x.shape[dim] - overlap_hi
     core = lax.slice_in_dim(x, core_lo, core_hi, axis=dim)
     if overlap_lo > 0:

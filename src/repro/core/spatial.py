@@ -34,19 +34,11 @@ from jax import lax
 
 from repro.core.tiling import ConvSpec
 from repro.core.halo import halo_exchange_2d
+from repro.core.backend import ACTIVATIONS as _ACTIVATIONS, Activation, get_conv_backend
 
 # ---------------------------------------------------------------------------
 # Layer definitions (geometry + compute attributes)
 # ---------------------------------------------------------------------------
-
-Activation = Callable[[jax.Array], jax.Array]
-
-_ACTIVATIONS: dict[str, Activation] = {
-    "linear": lambda x: x,
-    "relu": jax.nn.relu,
-    "leaky": lambda x: jnp.where(x > 0, x, 0.1 * x),  # darknet leaky slope
-    "gelu": jax.nn.gelu,
-}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,16 +165,6 @@ def stack_reference(x: jax.Array, params: Sequence[dict], layers: Sequence[Layer
 # ---------------------------------------------------------------------------
 
 
-def _valid_conv(x, w, stride):
-    return lax.conv_general_dilated(
-        x,
-        w,
-        window_strides=(stride, stride),
-        padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
-
-
 def _valid_pool(x, kernel, stride):
     return lax.reduce_window(
         x,
@@ -258,23 +240,35 @@ def apply_layer_local(
     col_axis: str,
     batch_global: int,
     mask_offmap: bool,
+    backend: str = "xla",
+    batch_axis: str | None = None,
 ) -> jax.Array:
     """One layer on a halo-extended local tile (input halo already present).
 
     out_halo: remaining halo on the produced output (0s when the layer is the
     last of its group).  mask_offmap zeroes off-map positions when the output
-    still carries halo that a later layer will consume.
+    still carries halo that a later layer will consume.  ``backend`` names
+    the registered conv compute path (core.backend); BN and any activation
+    the backend cannot fuse stay here, since BN needs cross-tile psums (over
+    the batch mesh axis too, when one is present).
     """
+    fused = False
     if layer.pool:
         y = _valid_pool(x, layer.kernel, layer.stride)
     else:
-        y = _valid_conv(x, params["w"], layer.stride)
-        if layer.use_bias:
-            y = y + params["b"]
-    if layer.batch_norm and not layer.pool:
-        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
-        y = _bn_tiled(y, layer, params, out_halo, (row_axis, col_axis), n_global)
-    y = _ACTIVATIONS[layer.act](y)
+        be = get_conv_backend(backend)
+        fused = (not layer.batch_norm) and layer.act in be.fused_acts
+        b = params["b"] if layer.use_bias else None
+        y = be(x, params["w"], b, stride=layer.stride,
+               act=layer.act if fused else "linear")
+        if layer.batch_norm:
+            n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+            bn_axes = (row_axis, col_axis)
+            if batch_axis is not None:
+                bn_axes = (batch_axis,) + bn_axes
+            y = _bn_tiled(y, layer, params, out_halo, bn_axes, n_global)
+    if not fused:
+        y = _ACTIVATIONS[layer.act](y)
     if mask_offmap and any(h > 0 for h in out_halo):
         m = _offmap_mask(
             y.shape[1], y.shape[2], out_halo, shard_out_hw, map_out_hw, row_axis, col_axis

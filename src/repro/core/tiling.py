@@ -194,6 +194,8 @@ def single_group(n_layers: int) -> list[Group]:
 
 
 def uniform_grouping(n_layers: int, group_size: int) -> list[Group]:
+    if group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
     groups = []
     s = 0
     while s < n_layers:

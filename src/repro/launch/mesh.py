@@ -7,11 +7,17 @@ constants, so importing never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
 
 def _make(shape, axes) -> Mesh:
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        # older jax: no AxisType / axis_types kwarg; meshes are Auto already
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -5,25 +5,36 @@ watchdog) over the pure ``train_step`` on whatever devices exist locally.
 ``--reduced`` (default) trains the smoke-scale variant so the launcher is
 exercisable on CPU; on a real TPU slice drop ``--full`` in with the
 production mesh (same code path the dry-run lowers).
+
+``--arch yolov2-tiled`` launches the paper's distributed tiled-CNN training
+through the same unified pipeline: the planner picks the grouping profile
+(``--groups auto`` runs the cost-model DP against ``--hw-profile``) and the
+conv backend (``--backend pallas`` uses the MXU kernel; interpret-mode off
+TPU), and ``make_train_step`` supplies the deferred per-batch weight
+aggregation plus the full trainer tail (clipping, schedule, optional
+``--compress int8`` error-feedback compression of the weight all-reduce).
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ParallelConfig, SHAPES, ShapeConfig, TrainConfig
 from repro.data.synthetic import SyntheticStream, place, synth_batch
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import make_local_mesh, make_production_mesh, make_tile_mesh
 from repro.models.registry import ARCH_IDS, get_arch
 from repro.parallel.api import sharding_ctx
 from repro.runtime.driver import DriverConfig, run_training
 from repro.train.trainer import make_train_step
 
+TILED_ARCH = "yolov2-tiled"
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
+
+def _add_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--arch", choices=ARCH_IDS + [TILED_ARCH], default="stablelm-1.6b")
     ap.add_argument("--full", action="store_true", help="full config (TPU-scale)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--batch", type=int, default=8)
@@ -32,12 +43,96 @@ def main() -> int:
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor", "sgd"])
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--compress", default=None, choices=[None, "int8"],
+                    help="gradient compression for the weight all-reduce")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--mesh", choices=["local", "single", "multi"], default="local")
     ap.add_argument("--seed", type=int, default=0)
+    # tiled-CNN (planner) options
+    ap.add_argument("--grid", type=int, default=1, help="tiled: n=m tile grid")
+    ap.add_argument("--input-hw", type=int, default=64, help="tiled: input H=W")
+    ap.add_argument("--depth", type=int, default=8, help="tiled: YOLO prefix depth")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
+                    help="tiled: conv compute backend")
+    ap.add_argument("--groups", default="none",
+                    help="tiled: grouping profile - 'none', 'auto', or group size int")
+    ap.add_argument("--hw-profile", default="pi3-core",
+                    help="tiled: hardware profile for --groups auto")
+
+
+def _resolve_groups(spec: str, n_layers: int):
+    if spec in ("none", "0"):        # 0 = per-layer sync, like the example
+        return None
+    if spec == "auto":
+        return "auto"
+    from repro.core.tiling import uniform_grouping
+
+    return uniform_grouping(n_layers, int(spec))
+
+
+def _run_tiled(args) -> int:
+    from repro.models.yolo import make_yolo_tiled_arch, yolov2_16_layers
+
+    n_layers = len(yolov2_16_layers()[: args.depth])
+    arch = make_yolo_tiled_arch(
+        input_hw=(args.input_hw, args.input_hw),
+        depth=args.depth,
+        n=args.grid,
+        m=args.grid,
+        groups=_resolve_groups(args.groups, n_layers),
+        backend=args.backend,
+        hw=args.hw_profile,
+        batch=args.batch,
+    )
+    print(
+        f"plan: backend={arch.plan.backend} grid={args.grid}x{args.grid} "
+        f"groups={[(g.start, g.end) for g in arch.plan.groups]}"
+    )
+    pcfg = ParallelConfig(grad_accum=args.grad_accum)
+    tcfg = TrainConfig(
+        lr=args.lr, optimizer=args.optimizer, steps=args.steps,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+        grad_compression=args.compress,
+    )
+    init_state, train_step = make_train_step(arch, pcfg, tcfg)
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+    tgt = arch.target_shape(args.batch)
+
+    def make_batch(step: int) -> dict:
+        rng = np.random.default_rng([args.seed, step])
+        x = rng.standard_normal((args.batch, args.input_hw, args.input_hw, 3), np.float32)
+        t = 0.05 * rng.standard_normal(tgt, np.float32)
+        return {"x": jnp.asarray(x), "t": jnp.asarray(t)}
+
+    dcfg = DriverConfig(
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=args.log_every
+    )
+    report = run_training(
+        init_state=init_state,
+        train_step=step_fn,
+        make_batch=make_batch,
+        steps=args.steps,
+        cfg=dcfg,
+        seed=args.seed,
+    )
+    m = report.last_metrics or {}
+    print(
+        f"done: steps={report.steps_done} restarts={report.restarts} "
+        f"stragglers={report.straggler_steps} "
+        f"loss={m.get('loss', float('nan')):.4f} gnorm={m.get('grad_norm', 0):.3f}"
+    )
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    _add_args(ap)
     args = ap.parse_args()
+
+    if args.arch == TILED_ARCH:
+        return _run_tiled(args)
 
     arch = get_arch(args.arch, reduced=not args.full)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
@@ -45,6 +140,7 @@ def main() -> int:
     tcfg = TrainConfig(
         lr=args.lr, optimizer=args.optimizer, steps=args.steps,
         ckpt_every=args.ckpt_every, seed=args.seed,
+        grad_compression=args.compress,
     )
     mesh = (
         make_local_mesh()
@@ -60,7 +156,9 @@ def main() -> int:
         def make_batch(step: int) -> dict:
             return place(synth_batch(specs, arch.cfg, args.seed, step))
 
-        dcfg = DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+        dcfg = DriverConfig(
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=args.log_every
+        )
         report = run_training(
             init_state=init_state,
             train_step=step_fn,

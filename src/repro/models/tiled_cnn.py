@@ -1,0 +1,54 @@
+"""Tiled-CNN architecture bundle for the unified trainer (DESIGN.md §3).
+
+Wraps a ``StackPlan`` + tile mesh + shard-local loss into the same surface
+``train.trainer.make_train_step`` consumes for the LM architectures, so the
+paper's distributed CNN training gets the full trainer machinery
+(TrainState, grad clipping, cosine/warmup schedule, optional int8-EF
+compression of the per-batch weight all-reduce) instead of hand-wired SGD.
+
+``kind == "tiled_cnn"`` routes ``make_train_step`` onto the deferred-
+aggregation path (paper §4.1): ``pcfg.grad_accum`` microbatches accumulate
+per-tile weight-gradient partial sums locally inside shard_map; ONE psum at
+batch end produces the final gradients the trainer tail consumes.
+
+Batches are dicts ``{"x": (B, H, W, C), "t": (B, OH, OW, Cout)}`` with the
+global batch B divisible by ``grad_accum`` - the same splitting convention
+as the LM path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.fusion import StackPlan
+from repro.core.spatial import init_stack_params
+
+LossLocal = Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass
+class TiledCNNArch:
+    """Planner output + mesh + loss: everything the trainer needs."""
+
+    plan: StackPlan
+    mesh: object                      # jax.sharding.Mesh
+    loss_local: LossLocal
+    row_axis: str = "th"
+    col_axis: str = "tw"
+    batch_axis: Optional[str] = None
+    kind: str = "tiled_cnn"
+
+    def init(self, key: jax.Array):
+        return init_stack_params(key, self.plan.layers)
+
+    @property
+    def out_channels(self) -> int:
+        return self.plan.layers[-1].out_channels
+
+    def target_shape(self, batch: int) -> tuple[int, ...]:
+        return (batch, *self.plan.out_hw(), self.out_channels)
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))

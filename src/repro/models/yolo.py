@@ -23,8 +23,10 @@ from repro.core.fusion import (
     make_tiled_forward,
     make_tiled_loss,
 )
+from repro.core.grouping import HardwareProfile
 from repro.core.spatial import LayerDef, init_stack_params
 from repro.core.tiling import Group, no_grouping
+from repro.models.tiled_cnn import TiledCNNArch
 
 
 def yolov2_16_layers(in_ch: int = 3, batch_norm: bool = True) -> list[LayerDef]:
@@ -73,6 +75,36 @@ def l2_loss_local(y: jax.Array, t: jax.Array):
     detection head (which lives beyond layer 16)."""
     d = (y - t).astype(jnp.float32)
     return jnp.sum(d * d), jnp.float32(d.size)
+
+
+def make_yolo_tiled_arch(
+    input_hw: tuple[int, int] = (64, 64),
+    depth: int = 8,
+    n: int = 2,
+    m: int = 2,
+    groups=None,
+    *,
+    backend: str = "xla",
+    hw: HardwareProfile | str | None = None,
+    batch: int = 1,
+    batch_norm: bool = True,
+    mesh=None,
+    loss_local=l2_loss_local,
+) -> TiledCNNArch:
+    """Planner -> arch bundle for the unified trainer: a YOLOv2 prefix of
+    ``depth`` layers tiled n x m, with the conv backend and grouping profile
+    (including ``groups="auto"`` cost-model selection) chosen at plan time."""
+    from repro.launch.mesh import make_tile_mesh
+
+    layers = yolov2_16_layers(batch_norm=batch_norm)[:depth]
+    plan = build_stack_plan(
+        input_hw, layers, n, m, groups, backend=backend, hw=hw, batch=batch
+    )
+    return TiledCNNArch(
+        plan=plan,
+        mesh=mesh if mesh is not None else make_tile_mesh(n, m),
+        loss_local=loss_local,
+    )
 
 
 def make_yolo_train_fns(

@@ -120,7 +120,9 @@ def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict[str, Axis]] = None):
     _ACTIVE.rules = {**DEFAULT_RULES, **(rules or {})}
     try:
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            # jax.set_mesh is newer-jax; `with mesh:` is the portable spelling
+            ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+            with ctx:
                 yield
         else:
             yield
@@ -196,10 +198,11 @@ def gather_for_compute(params):
     the loop slice, so XLA cannot hoist it: peak memory stays one layer."""
     if _ACTIVE.mesh is None or not _ACTIVE.rules.get("zero3"):
         return params
-    from jax.tree_util import keystr, tree_map_with_path
+    from jax.tree_util import tree_map_with_path
+    from repro.compat import keystr_slash
 
     def leaf(path, p):
-        key = keystr(path, separator="/")
+        key = keystr_slash(path)
         # routed expert weights stay in their EP (experts-axis) layout:
         # the MoE einsum is batched over the expert dim, never gathered
         if "moe" in key and p.ndim == 3:

@@ -17,7 +17,9 @@ from typing import Any, Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.tree_util import tree_map_with_path, keystr
+from jax.tree_util import tree_map_with_path
+
+from repro.compat import keystr_slash
 
 from repro.parallel.api import active_mesh, logical_spec
 
@@ -74,7 +76,7 @@ def logical_for_param(path: str, ndim: int) -> tuple:
 
 def param_logical_tree(params: Any) -> Any:
     def leaf(path, p):
-        return logical_for_param(keystr(path, separator="/"), p.ndim)
+        return logical_for_param(keystr_slash(path), p.ndim)
 
     return tree_map_with_path(leaf, params)
 
@@ -84,7 +86,7 @@ def param_shardings(params: Any) -> Any:
     mesh = active_mesh()
 
     def leaf(path, p):
-        log = logical_for_param(keystr(path, separator="/"), p.ndim)
+        log = logical_for_param(keystr_slash(path), p.ndim)
         spec = logical_spec(log, p.shape)
         return NamedSharding(mesh, spec) if mesh is not None else None
 
@@ -100,13 +102,13 @@ def state_shardings(opt_state: Any, params: Any) -> Any:
     flat_params = {}
 
     def record(path, p):
-        flat_params[keystr(path, separator="/")] = (p.shape, logical_for_param(keystr(path, separator="/"), p.ndim))
+        flat_params[keystr_slash(path)] = (p.shape, logical_for_param(keystr_slash(path), p.ndim))
         return p
 
     tree_map_with_path(record, params)
 
     def leaf(path, s):
-        key = keystr(path, separator="/")
+        key = keystr_slash(path)
         # strip optimizer-state prefixes/suffixes to find the param path
         base = key
         for pre in ("m/", "v/", "vr", "vc"):
@@ -156,7 +158,7 @@ def cache_shardings(cache_specs: Any, *, seq_sharded: bool = False) -> Any:
     mesh = active_mesh()
 
     def leaf(path, s):
-        key = keystr(path, separator="/")
+        key = keystr_slash(path)
         nd = len(s.shape)
         if nd == 0:
             log: tuple = ()

@@ -42,6 +42,7 @@ class DriverConfig:
     straggler_factor: float = 2.0
     hang_timeout: float = 300.0
     async_ckpt: bool = True
+    log_every: int = 0               # 0 = no periodic metric logging
 
 
 @dataclasses.dataclass
@@ -127,6 +128,15 @@ def run_training(
                 watchdog.beat()
                 report.step_times.append(dt)
                 report.last_metrics = jax.tree.map(float, metrics)
+                if cfg.log_every and (step + 1) % cfg.log_every == 0:
+                    log.info(
+                        "step %d: %s (%.3fs)",
+                        step,
+                        " ".join(
+                            f"{k}={v:.5g}" for k, v in sorted(report.last_metrics.items())
+                        ),
+                        dt,
+                    )
                 if len(report.step_times) >= 5:
                     med = statistics.median(report.step_times[-50:])
                     if dt > cfg.straggler_factor * med:

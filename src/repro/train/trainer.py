@@ -5,15 +5,26 @@ optimizer update, optional int8-EF gradient compression for the DCN hop.
 step_fn is pure and jit-able with explicit in/out shardings - the same
 callable the dry-run lowers and the runtime driver executes.
 
-The paper's deferred weight aggregation (§4.1) corresponds to
-``grad_accum > 1``: per-microbatch gradients accumulate locally (no
-collective inside the scan); XLA places ONE all-reduce after the loop -
-verified in the lowered HLO by tests/test_hlo_schedule.py.
+Two arch families share one pipeline (DESIGN.md §3):
+
+  - LM/whisper bundles (``models.registry.ArchBundle``): grads come from
+    ``jax.value_and_grad`` over ``arch.loss_fn``, with ``pcfg.grad_accum``
+    microbatches accumulated in a local scan.  The paper's deferred weight
+    aggregation (§4.1) corresponds to that scan: no collective inside the
+    loop; XLA places ONE all-reduce after it.
+  - Tiled-CNN bundles (``models.tiled_cnn.TiledCNNArch``, kind
+    "tiled_cnn"): grads come from ``core.fusion.make_deferred_grad_step``,
+    the shard_map'd executor whose microbatch scan accumulates per-tile
+    weight-gradient *partial sums* and psums once per batch - the paper's
+    schedule, explicit.
+
+Both paths then run the identical trainer tail: optional int8
+error-feedback compression, global-norm clipping, cosine/warmup schedule,
+optimizer update.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +47,45 @@ class TrainState(NamedTuple):
     ef: Optional[Any] = None      # error-feedback buffers (compression)
 
 
-def make_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
-    opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
-
+def _make_init_state(arch, opt, tcfg: TrainConfig):
     def init_state(key) -> TrainState:
         params = arch.init(key)
         ef = init_error(params).error if tcfg.grad_compression == "int8" else None
         return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32), ef)
+
+    return init_state
+
+
+def _apply_updates(
+    state: TrainState, loss, grads, opt, tcfg: TrainConfig
+) -> tuple[TrainState, dict]:
+    """Shared trainer tail: EF compression -> clip -> schedule -> update."""
+    ef = state.ef
+    if ef is not None:
+        grads, st = compress_with_feedback(grads, compression.CompressionState(ef))
+        ef = st.error
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    lr = cosine_schedule(state.step, tcfg.warmup, tcfg.steps, tcfg.lr)
+    params, opt_state = opt.update(grads, state.opt, state.params, lr)
+    new_state = TrainState(params, opt_state, state.step + 1, ef)
+    metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+    return new_state, metrics
+
+
+def make_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
+    if getattr(arch, "kind", None) == "tiled_cnn":
+        return _make_tiled_cnn_train_step(arch, pcfg, tcfg)
+    return _make_lm_train_step(arch, pcfg, tcfg)
+
+
+# ---------------------------------------------------------------------------
+# LM / whisper path (value_and_grad over arch.loss_fn)
+# ---------------------------------------------------------------------------
+
+
+def _make_lm_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
+    opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
+    init_state = _make_init_state(arch, opt, tcfg)
 
     def loss_fn(params, batch):
         return arch.loss_fn(
@@ -84,17 +127,43 @@ def make_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
         else:
             loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
 
-        ef = state.ef
-        if ef is not None:
-            grads, st = compress_with_feedback(grads, compression.CompressionState(ef))
-            ef = st.error
+        return _apply_updates(state, loss, grads, opt, tcfg)
 
-        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
-        lr = cosine_schedule(state.step, tcfg.warmup, tcfg.steps, tcfg.lr)
-        params, opt_state = opt.update(grads, state.opt, state.params, lr)
-        new_state = TrainState(params, opt_state, state.step + 1, ef)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
-        return new_state, metrics
+    return init_state, train_step
+
+
+# ---------------------------------------------------------------------------
+# Tiled-CNN path (deferred per-batch weight aggregation, paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+def _make_tiled_cnn_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
+    from repro.core.fusion import make_deferred_grad_step
+
+    opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
+    init_state = _make_init_state(arch, opt, tcfg)
+    accum = max(pcfg.grad_accum, 1)
+    grad_step = make_deferred_grad_step(
+        arch.plan,
+        arch.mesh,
+        arch.loss_local,
+        row_axis=arch.row_axis,
+        col_axis=arch.col_axis,
+        batch_axis=arch.batch_axis,
+        microbatches=accum,
+    )
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        def split(v):
+            if v.shape[0] % accum:
+                raise ValueError(
+                    f"global batch {v.shape[0]} not divisible by "
+                    f"grad_accum={accum} (tiled-CNN microbatch split)"
+                )
+            return v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+
+        loss, grads = grad_step(state.params, split(batch["x"]), split(batch["t"]))
+        return _apply_updates(state, loss, grads, opt, tcfg)
 
     return init_state, train_step
 

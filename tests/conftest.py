@@ -3,9 +3,16 @@
 NOTE: no XLA_FLAGS here - smoke tests see the real single CPU device.
 SPMD exactness tests spawn subprocesses (scripts/check_*.py) that set their
 own fake-device counts before importing jax.
+
+``hypothesis`` is an *optional* test dependency (declared in pyproject.toml
+under the ``test`` extra).  When it is absent we install a minimal stub so
+test modules that use ``from hypothesis import given, settings, strategies``
+still import, and every ``@given`` property test is skipped instead of
+killing collection for the whole suite.
 """
 import os
 import sys
+import types
 
 import pytest
 
@@ -14,10 +21,51 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    class _Settings:
+        """Accepts the decorator-factory and profile-registry call shapes."""
+
+        def __init__(self, *_a, **_k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*_a, **_k):
+            pass
+
+        @staticmethod
+        def load_profile(*_a, **_k):
+            pass
+
+    def _strategy(*_a, **_k):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__dict__["__getattr__"] = lambda name: _strategy
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    _hyp.__dict__["__getattr__"] = lambda name: _strategy
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -92,6 +92,74 @@ def test_dp_matches_bruteforce(n_layers, flops, link_bw):
     assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
 
 
+def _enumerate_profiles(n_layers):
+    """All contiguous grouping profiles via composition bitmasks."""
+    for bits in itertools.product([0, 1], repeat=n_layers - 1):
+        groups, s = [], 0
+        for i, b in enumerate(bits):
+            if b:
+                groups.append(Group(s, i))
+                s = i + 1
+        groups.append(Group(s, n_layers - 1))
+        validate_profile(groups, n_layers)
+        yield groups
+
+
+@pytest.mark.parametrize(
+    "hw", [PI3_PROFILE, JETSON_PROFILE], ids=["pi-compute-bound", "jetson-comm-bound"]
+)
+@pytest.mark.parametrize("n_layers", [3, 4, 5])
+def test_dp_matches_bruteforce_paper_profiles(hw, n_layers):
+    """Deterministic (no hypothesis) DP-vs-enumeration check on the paper's
+    two testbed profiles - the compute-bound and comm-bound regimes both
+    must be exactly optimal."""
+    layers = LAYERS[:n_layers]
+
+    def cost(groups):
+        return profile_cost((64, 64), layers, groups, 2, 2, hw)["total"]
+
+    best_cost = min(cost(g) for g in _enumerate_profiles(n_layers))
+    dp = optimize_grouping((64, 64), layers, 2, 2, hw)
+    assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
+
+
+def test_auto_groups_flow_into_plan():
+    """groups="auto" runs the DP inside the planner and yields a valid,
+    regime-correct profile (paper Figs. 7/8): per-layer sync for the
+    compute-bound Pi, fused groups for the comm-bound Jetson."""
+    from repro.core.fusion import build_stack_plan
+    from repro.core.spatial import LayerDef
+
+    convs = [LayerDef(3, 1, 32, 32) for _ in range(5)]
+    plan_pi = build_stack_plan((64, 64), convs, 2, 2, "auto", hw=PI3_PROFILE)
+    validate_profile(plan_pi.groups, len(convs))
+    assert len(plan_pi.groups) == len(convs)          # Fig. 7: no grouping
+
+    plan_jn = build_stack_plan((64, 64), convs, 2, 2, "auto", hw="jetson-nano-gpu")
+    validate_profile(plan_jn.groups, len(convs))
+    assert len(plan_jn.groups) < len(convs)           # Fig. 8: grouping
+    assert plan_jn.groups == tuple(
+        optimize_grouping((64, 64), convs, 2, 2, JETSON_PROFILE)
+    )
+
+
+def test_auto_groups_profile_name_and_errors():
+    from repro.core.fusion import build_stack_plan, resolve_hw_profile
+    from repro.core.spatial import LayerDef
+
+    convs = [LayerDef(3, 1, 8, 8) for _ in range(3)]
+    # registered profile names resolve; None defaults to the Pi testbed
+    assert resolve_hw_profile("pi3-core") is PI3_PROFILE
+    assert resolve_hw_profile(None) is PI3_PROFILE
+    assert resolve_hw_profile(JETSON_PROFILE) is JETSON_PROFILE
+    plan = build_stack_plan((16, 16), convs, 2, 2, "auto", hw="tpu-v5e-chip")
+    validate_profile(plan.groups, len(convs))
+    with pytest.raises(KeyError, match="unknown hardware profile"):
+        build_stack_plan((16, 16), convs, 2, 2, "auto", hw="gameboy")
+    with pytest.raises(ValueError, match="groups must be"):
+        build_stack_plan((16, 16), convs, 2, 2, "automatic")
+
+
 def test_cost_components_positive():
     c = profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE)
     for k in ("compute", "boundary", "sync", "weights", "total"):

@@ -1,0 +1,176 @@
+"""Unified planner -> executor -> trainer pipeline (single-device slice).
+
+Multi-tile exactness runs in a subprocess (scripts/check_pipeline.py via
+test_spmd.py); here the 1x1-tile code path covers the backend registry,
+planner validation, backend interchangeability, and the tiled-CNN trainer
+path with the full trainer tail.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core import (
+    LayerDef,
+    build_stack_plan,
+    conv_backend_names,
+    get_conv_backend,
+    init_stack_params,
+    make_tiled_loss,
+    register_conv_backend,
+)
+from repro.core.backend import ACTIVATIONS, _xla_conv
+from repro.core.fusion import reference_loss
+from repro.launch.mesh import make_tile_mesh
+from repro.models.tiled_cnn import TiledCNNArch
+from repro.models.yolo import l2_loss_local, make_yolo_tiled_arch
+from repro.train.trainer import TrainState, make_train_step
+
+LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(3, 1, 8, 16, act="leaky", batch_norm=True, use_bias=False),
+    LayerDef(1, 1, 16, 8, act="gelu"),   # act the pallas kernel cannot fuse
+]
+HW = (32, 32)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_xla_and_pallas():
+    names = conv_backend_names()
+    assert "xla" in names and "pallas" in names
+    be = get_conv_backend("xla")
+    assert be.fused_acts == frozenset(ACTIVATIONS)
+    assert get_conv_backend("pallas").fused_acts <= frozenset(ACTIVATIONS)
+
+
+def test_unknown_backend_fails_at_plan_time():
+    with pytest.raises(KeyError, match="unknown conv backend"):
+        build_stack_plan(HW, LAYERS, 1, 1, backend="cudnn")
+
+
+def test_custom_backend_registers_and_runs():
+    register_conv_backend("xla-test-alias", _xla_conv, fused_acts=("linear",))
+    plan = build_stack_plan(HW, LAYERS, 1, 1, backend="xla-test-alias")
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jnp.zeros((2, *plan.out_hw(), LAYERS[-1].out_channels))
+    got = float(make_tiled_loss(plan, mesh, l2_loss_local)(params, x, t))
+    ref = float(reference_loss(params, x, t, plan, l2_loss_local))
+    assert got == pytest.approx(ref, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backend interchangeability (pallas kernel = selectable executor path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_backend_matches_untiled_reference(backend):
+    plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jax.random.normal(
+        jax.random.PRNGKey(2), (2, *plan.out_hw(), LAYERS[-1].out_channels)
+    )
+    loss_fn = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+    ref = float(reference_loss(params, x, t, plan, l2_loss_local))
+    assert float(loss_fn(params, x, t)) == pytest.approx(ref, rel=1e-5)
+    g = jax.jit(jax.grad(lambda p: loss_fn(p, x, t)))(params)
+    gr = jax.grad(lambda p: reference_loss(p, x, t, plan, l2_loss_local))(params)
+    err = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr))
+    )
+    assert err < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# trainer path
+# ---------------------------------------------------------------------------
+
+
+def _make_arch(backend="xla", groups=None):
+    plan = build_stack_plan(HW, LAYERS, 1, 1, groups, backend=backend)
+    return TiledCNNArch(plan=plan, mesh=make_tile_mesh(1, 1), loss_local=l2_loss_local)
+
+
+def _batch(arch, batch=4):
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, *HW, 3))
+    t = 0.05 * jax.random.normal(jax.random.PRNGKey(2), arch.target_shape(batch))
+    return {"x": x, "t": t}
+
+
+def test_unified_train_step_trains():
+    arch = _make_arch()
+    tcfg = TrainConfig(lr=1e-2, optimizer="sgd", warmup=0, steps=50)
+    init_state, step = make_train_step(arch, ParallelConfig(grad_accum=2), tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    assert isinstance(state, TrainState) and state.ef is None
+    batch = _batch(arch)
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(5):
+        state, m = jstep(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert {"loss", "grad_norm", "lr"} <= set(m)
+    assert int(state.step) == 5
+
+
+def test_unified_train_step_int8_ef_compression():
+    arch = _make_arch()
+    tcfg = TrainConfig(
+        lr=1e-2, optimizer="sgd", warmup=0, steps=50, grad_compression="int8"
+    )
+    init_state, step = make_train_step(arch, ParallelConfig(), tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    assert state.ef is not None          # error-feedback buffers allocated
+    state, m = jax.jit(step)(state, _batch(arch))
+    assert jnp.isfinite(m["loss"])
+    # EF residual must be populated (quantisation error is nonzero)
+    assert any(float(jnp.max(jnp.abs(e))) > 0 for e in jax.tree.leaves(state.ef))
+
+
+def test_grad_accum_invariant_to_split():
+    """accum=1 vs accum=2 on the same global batch: identical update (the
+    deferred schedule sums partial grads, normalisation is global).  BN-free
+    stack: batch-norm statistics are *per microbatch* by design, so only
+    BN-free stacks are split-invariant."""
+    layers = [
+        LayerDef(3, 1, 3, 8, act="leaky"),
+        LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+        LayerDef(3, 1, 8, 16, act="leaky"),
+    ]
+    plan = build_stack_plan(HW, layers, 1, 1)
+    arch = TiledCNNArch(plan=plan, mesh=make_tile_mesh(1, 1), loss_local=l2_loss_local)
+    tcfg = TrainConfig(lr=1e-2, optimizer="sgd", warmup=0, steps=50)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, *HW, 3))
+    t = 0.05 * jax.random.normal(jax.random.PRNGKey(2), arch.target_shape(4))
+    batch = {"x": x, "t": t}
+    states = []
+    for accum in (1, 2):
+        init_state, step = make_train_step(arch, ParallelConfig(grad_accum=accum), tcfg)
+        s = init_state(jax.random.PRNGKey(0))
+        s, _ = jax.jit(step)(s, batch)
+        states.append(s)
+    err = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(states[0].params), jax.tree.leaves(states[1].params))
+    )
+    assert err < 1e-6
+
+
+def test_make_yolo_tiled_arch_end_to_end():
+    arch = make_yolo_tiled_arch(input_hw=(32, 32), depth=4, n=1, m=1, groups="auto")
+    tcfg = TrainConfig(lr=1e-3, optimizer="sgd", warmup=0, steps=10)
+    init_state, step = make_train_step(arch, ParallelConfig(), tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    state, m = jax.jit(step)(state, _batch(arch, batch=2))
+    assert jnp.isfinite(m["loss"])

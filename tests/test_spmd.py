@@ -4,10 +4,13 @@ in-process test run must keep seeing the real single CPU device).
 
 Each script asserts tiled-vs-untiled exactness to float tolerance and exits
 non-zero on failure:
-  check_core.py  - paper-native 2x2 spatial tiling: fwd/grad exactness under
-                   4 grouping profiles + deferred weight aggregation
-  check_ssd.py   - Mamba2 SSD chunked scan + 4-shard sequence parallelism
-  check_halo.py  - halo exchange 1d/2d incl. corners + adjoint/AD identity
+  check_core.py     - paper-native 2x2 spatial tiling: fwd/grad exactness
+                      under 4 grouping profiles + deferred weight aggregation
+  check_ssd.py      - Mamba2 SSD chunked scan + 4-shard sequence parallelism
+  check_halo.py     - halo exchange 1d/2d incl. corners + adjoint/AD identity
+  check_pipeline.py - unified planner->executor->trainer: tiled YOLO train
+                      step == untiled reference for xla AND pallas backends,
+                      groups="auto" regimes, batch-axis BN statistics
 """
 import os
 import subprocess
@@ -42,3 +45,8 @@ def test_ssd_sequence_parallel_exact():
 def test_halo_exchange_exact():
     out = _run("check_halo.py")
     assert "HALO CHECK OK" in out
+
+
+def test_unified_pipeline_exact():
+    out = _run("check_pipeline.py")
+    assert "PIPELINE CHECK OK" in out
