@@ -5,9 +5,15 @@ the tiled machinery (halo exchange -> local VALID convs -> deferred psum)
 against the plain SAME-conv reference, for each registered conv backend
 ("xla" lowers to conv_general_dilated; "pallas" runs the MXU kernel in
 interpret mode off TPU, so its wall-clock here is a correctness probe, not
-a speed claim).  Checks each backend's loss/grads match the reference to
-float tolerance.  Multi-tile wall-clock runs live in scripts/check_*.py
-(4 fake devices, subprocess).
+a speed claim) and each executor schedule ("sync" eager halo exchange vs
+"overlap" packed collectives + interior/boundary split).  Checks each
+backend x schedule's loss/grads match the reference to float tolerance.
+Multi-tile wall-clock runs live in scripts/check_*.py (4 fake devices,
+subprocess).
+
+``run(quick=True)`` (CI smoke) keeps the exactness checks but trims the
+timing loop.  Rows feed the persisted BENCH_tiled.json trajectory written
+by benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ LAYERS = [
     LayerDef(3, 1, 16, 16, act="leaky"),
 ]
 HW = (64, 64)
+SCHEDULES = ("sync", "overlap")
 
 
 def _time(f, *args, n=5):
@@ -45,7 +52,8 @@ def _time(f, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run() -> list[dict]:
+def run(quick: bool = False) -> list[dict]:
+    iters = 2 if quick else 5
     mesh = make_tile_mesh(1, 1)
     params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
@@ -57,43 +65,46 @@ def run() -> list[dict]:
     ref_grad = jax.jit(jax.grad(lambda p: ref_loss(p, x, t)))
     lr = float(ref_loss(params, x, t))
     gr = ref_grad(params)
-    t_ref = _time(lambda: ref_grad(params))
+    t_ref = _time(lambda: ref_grad(params), n=iters)
 
     rows = []
     for backend in conv_backend_names():
-        plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend)
-        tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
-        tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
-        lt = float(tiled_loss(params, x, t))
-        gt = tiled_grad(params)
-        gerr = max(
-            float(jnp.max(jnp.abs(a - b)))
-            for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
-        )
-        t_tiled = _time(lambda: tiled_grad(params))
-        rows.append(
-            dict(
-                name=f"tiled_step/{backend}/fwd_loss_err", value=abs(lt - lr),
-                backend=backend,
-                tiled_us=round(t_tiled * 1e6, 1), ref_us=round(t_ref * 1e6, 1),
-                grad_maxerr=gerr,
-                overhead=round(t_tiled / max(t_ref, 1e-9), 2),
+        for schedule in SCHEDULES:
+            plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend, schedule=schedule)
+            tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+            tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
+            lt = float(tiled_loss(params, x, t))
+            gt = tiled_grad(params)
+            gerr = max(
+                float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
             )
-        )
+            t_tiled = _time(lambda: tiled_grad(params), n=iters)
+            rows.append(
+                dict(
+                    name=f"tiled_step/{backend}/{schedule}/fwd_loss_err",
+                    value=abs(lt - lr),
+                    backend=backend,
+                    schedule=schedule,
+                    tiled_us=round(t_tiled * 1e6, 1), ref_us=round(t_ref * 1e6, 1),
+                    grad_maxerr=gerr,
+                    overhead=round(t_tiled / max(t_ref, 1e-9), 2),
+                )
+            )
     return rows
 
 
 def check(rows) -> list[str]:
     out = []
     for r in rows:
-        be = r["backend"]
+        tag = f"{r['backend']}/{r['schedule']}"
         out.append(
-            f"[{be}] tiled loss == reference: "
+            f"[{tag}] tiled loss == reference: "
             f"{'OK' if r['value'] < 1e-4 else 'OFF'} (err {r['value']:.2e})"
         )
         out.append(
-            f"[{be}] tiled grads == reference: "
+            f"[{tag}] tiled grads == reference: "
             f"{'OK' if r['grad_maxerr'] < 1e-4 else 'OFF'} (err {r['grad_maxerr']:.2e})"
         )
-        out.append(f"[{be}] 1x1-tile overhead {r['overhead']}x (halo machinery cost)")
+        out.append(f"[{tag}] 1x1-tile overhead {r['overhead']}x (halo machinery cost)")
     return out

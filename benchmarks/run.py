@@ -1,15 +1,29 @@
 """Benchmark harness: one module per paper table/figure + roofline table.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...] [--quick]
+[--strict] [--json BENCH_tiled.json]``
 
 Each module exposes ``run() -> list[dict]`` (rows) and ``check(rows) ->
-list[str]`` (claims vs the paper's numbers).  Output: CSV rows + claim
-verdicts; exits non-zero if any module raises.
+list[str]`` (claims vs the paper's numbers).  Modules whose ``run`` accepts
+a ``quick`` keyword get ``quick=True`` under ``--quick`` (CI smoke: keep
+exactness checks, trim timing loops).  Output: CSV rows + claim verdicts;
+exits non-zero if any module raises, or - under ``--strict`` - if any
+claim verdict reads OFF (exactness/limit regression).
+
+The measured tiled-step rows are persisted to ``--json`` (default
+``BENCH_tiled.json`` at the repo root) as a per-commit trajectory: one
+entry per git SHA with the per-backend/per-schedule timings and errors, so
+the perf history survives across PRs instead of living in CI logs.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import importlib
+import inspect
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -23,14 +37,61 @@ MODULES = [
     "benchmarks.roofline_table",
 ]
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# module whose rows form the persisted perf trajectory
+TRAJECTORY_MODULE = "bench_tiled_step"
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=REPO, text=True
+        ).strip()
+    except Exception:
+        return "unknown"
+
+
+def write_trajectory(rows: list[dict], path: str) -> None:
+    """Append/replace this commit's entry in the benchmark trajectory."""
+    sha = _git_sha()
+    entry = {
+        "sha": sha,
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "rows": rows,
+    }
+    data = {"trajectory": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    traj = [e for e in data.get("trajectory", []) if e.get("sha") != sha]
+    traj.append(entry)
+    data["trajectory"] = traj
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"  [trajectory] {len(rows)} rows for {sha[:12]} -> {path}")
+
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="", help="comma list, e.g. fig5,fig7")
+    ap.add_argument("--quick", action="store_true",
+                    help="trim timing loops (modules that support quick=)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on any OFF claim verdict (exactness regression)")
+    ap.add_argument("--json", default=os.path.join(REPO, "BENCH_tiled.json"),
+                    help="perf-trajectory output path")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
     failures = 0
+    off_claims: list[str] = []
     for modname in MODULES:
         short = modname.split(".")[-1]
         if only and not any(o in short for o in only):
@@ -38,8 +99,11 @@ def main() -> int:
         print(f"\n=== {short} ===", flush=True)
         try:
             mod = importlib.import_module(modname)
+            kwargs = {}
+            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+                kwargs["quick"] = True
             t0 = time.monotonic()
-            rows = mod.run()
+            rows = mod.run(**kwargs)
             dt = time.monotonic() - t0
             if rows:
                 keys = list(rows[0].keys())
@@ -48,10 +112,19 @@ def main() -> int:
                     print(",".join(str(r.get(k, "")) for k in keys))
             for note in mod.check(rows):
                 print(f"  [claim] {note}")
+                if "OFF" in note:
+                    off_claims.append(f"{short}: {note}")
             print(f"  ({len(rows)} rows in {dt:.1f}s)")
+            if short == TRAJECTORY_MODULE:
+                write_trajectory(rows, args.json)
         except Exception:
             failures += 1
             print(f"  FAILED:\n{traceback.format_exc()}", flush=True)
+    if args.strict and off_claims:
+        print(f"\n--strict: {len(off_claims)} OFF claim(s):", flush=True)
+        for c in off_claims:
+            print(f"  {c}")
+        return 1
     return 1 if failures else 0
 
 

@@ -9,10 +9,18 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.halo import halo_exchange_1d, halo_exchange_2d, send_boundary_sum_1d
+from repro.core.halo import (
+    halo_exchange_1d,
+    halo_exchange_1d_packed,
+    halo_exchange_2d,
+    halo_exchange_2d_packed,
+    send_boundary_sum_1d,
+)
 
 mesh1 = jax.make_mesh((8,), ("x",))
 mesh2 = jax.make_mesh((4, 2), ("r", "c"))
+mesh_pair = Mesh(np.array(jax.devices()[:2]), ("x",))     # 2-shard axis
+mesh22 = jax.make_mesh((2, 2), ("r", "c"))
 
 
 def check_1d():
@@ -33,29 +41,101 @@ def check_1d():
     print("halo 1d ok")
 
 
+def check_packed_1d():
+    """Packed exchange must deliver the same strips the eager exchange
+    concatenates, on both the 2-shard (single swap ppermute) and the n>2
+    (two shifted ppermutes) paths."""
+    for mesh, n in ((mesh_pair, 2), (mesh1, 8)):
+        x = jnp.arange(n * 4 * 3, dtype=jnp.float32).reshape(n * 4, 3)
+        for lo, hi in ((2, 1), (1, 2), (2, 0), (0, 1), (0, 0)):
+            eager = shard_map(
+                lambda x: halo_exchange_1d(x, lo, hi, "x", dim=0),
+                mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+                check_rep=False,
+            )
+            def packed_cat(x, lo=lo, hi=hi):
+                lo_s, hi_s = halo_exchange_1d_packed(x, lo, hi, "x", dim=0)
+                parts = [p for p in (lo_s, x, hi_s) if p.shape[0] > 0]
+                return jnp.concatenate(parts, axis=0)
+
+            packed = shard_map(
+                packed_cat,
+                mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+                check_rep=False,
+            )
+            np.testing.assert_array_equal(np.asarray(eager(x)), np.asarray(packed(x)))
+    # the 2-shard both-sides case must lower to exactly ONE ppermute
+    jaxpr = jax.make_jaxpr(
+        shard_map(
+            lambda x: halo_exchange_1d_packed(x, 2, 1, "x", dim=0),
+            mesh=mesh_pair, in_specs=P("x", None),
+            out_specs=(P("x", None), P("x", None)), check_rep=False,
+        )
+    )(jnp.zeros((8, 3)))
+    assert str(jaxpr).count("ppermute") == 1, str(jaxpr)
+    print("packed 1d ok (2-shard axis: 1 ppermute)")
+
+
+def check_packed_2d():
+    """Assembled packed 2-D exchange == eager 2-round exchange (corners
+    ride the column round in both)."""
+    x = jnp.arange(8 * 8 * 2, dtype=jnp.float32).reshape(8, 8, 2)
+    halo = (1, 2, 2, 1)
+
+    eager = shard_map(
+        lambda x: halo_exchange_2d(x, halo, "r", "c", dims=(0, 1)),
+        mesh=mesh22, in_specs=P("r", "c", None), out_specs=P("r", "c", None),
+        check_rep=False,
+    )
+
+    def packed_fn(x):
+        x_rows, c_lo, c_hi = halo_exchange_2d_packed(x, halo, "r", "c", dims=(0, 1))
+        parts = [p for p in (c_lo, x_rows, c_hi) if p.shape[1] > 0]
+        return jnp.concatenate(parts, axis=1)
+
+    packed = shard_map(
+        packed_fn,
+        mesh=mesh22, in_specs=P("r", "c", None), out_specs=P("r", "c", None),
+        check_rep=False,
+    )
+    np.testing.assert_array_equal(np.asarray(eager(x)), np.asarray(packed(x)))
+    print("packed 2d (corners incl.) ok")
+
+
 def check_adjoint():
-    """send_boundary_sum_1d is the transpose of halo_exchange_1d:
-    <H(x), y> == <x, H^T(y)> for all x, y."""
-    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    x = jax.random.normal(k1, (32, 3))
-    y = jax.random.normal(k2, (8 * 7, 3))           # extended shape
+    """Property sweep: send_boundary_sum_1d is the exact adjoint of
+    halo_exchange_1d - <g, H(x)> == <H^T(g), x> for every halo geometry
+    (lo, hi) in a grid, on both a 2-shard and an 8-shard axis, and AD
+    through halo_exchange_1d reproduces H^T exactly."""
+    shard_rows = 4
+    for mesh, n in ((mesh_pair, 2), (mesh1, 8)):
+        for lo in range(0, 4):
+            for hi in range(0, 4):
+                k1, k2 = jax.random.split(jax.random.PRNGKey(lo * 7 + hi), 2)
+                x = jax.random.normal(k1, (n * shard_rows, 3))
+                g = jax.random.normal(k2, (n * (shard_rows + lo + hi), 3))
 
-    H = shard_map(
-        lambda x: halo_exchange_1d(x, 2, 1, "x", dim=0),
-        mesh=mesh1, in_specs=P("x", None), out_specs=P("x", None), check_rep=False,
-    )
-    Ht = shard_map(
-        lambda y: send_boundary_sum_1d(y, 2, 1, "x", dim=0),
-        mesh=mesh1, in_specs=P("x", None), out_specs=P("x", None), check_rep=False,
-    )
-    lhs = float(jnp.vdot(H(x), y))
-    rhs = float(jnp.vdot(x, Ht(y)))
-    np.testing.assert_allclose(lhs, rhs, rtol=1e-5)
+                H = shard_map(
+                    lambda x, lo=lo, hi=hi: halo_exchange_1d(x, lo, hi, "x", dim=0),
+                    mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+                    check_rep=False,
+                )
+                Ht = shard_map(
+                    lambda y, lo=lo, hi=hi: send_boundary_sum_1d(y, lo, hi, "x", dim=0),
+                    mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+                    check_rep=False,
+                )
+                lhs = float(jnp.vdot(H(x), g))
+                rhs = float(jnp.vdot(x, Ht(g)))
+                np.testing.assert_allclose(lhs, rhs, rtol=1e-5, err_msg=f"n={n} lo={lo} hi={hi}")
 
-    # and AD through halo_exchange produces exactly the adjoint
-    g = jax.grad(lambda x: jnp.vdot(H(x), y))(x)
-    np.testing.assert_allclose(np.asarray(g), np.asarray(Ht(y)), rtol=1e-5)
-    print("halo adjoint ok")
+                # and AD through halo_exchange produces exactly the adjoint
+                gx = jax.grad(lambda x: jnp.vdot(H(x), g))(x)
+                np.testing.assert_allclose(
+                    np.asarray(gx), np.asarray(Ht(g)), rtol=1e-5,
+                    err_msg=f"AD n={n} lo={lo} hi={hi}",
+                )
+    print("halo adjoint property sweep ok (2- and 8-shard axes, halos 0..3)")
 
 
 def check_2d():
@@ -80,6 +160,8 @@ def check_2d():
 
 if __name__ == "__main__":
     check_1d()
+    check_packed_1d()
+    check_packed_2d()
     check_adjoint()
     check_2d()
     print("HALO CHECK OK")

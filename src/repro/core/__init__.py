@@ -14,7 +14,14 @@ from repro.core.tiling import (
     build_tiling_plan,
     group_halo_width,
 )
-from repro.core.spatial import LayerDef, init_stack_params, stack_reference
+from repro.core.spatial import LayerDef, init_stack_params, split_1d, stack_reference
+from repro.core.halo import (
+    halo_exchange_1d,
+    halo_exchange_1d_packed,
+    halo_exchange_2d,
+    halo_exchange_2d_packed,
+    send_boundary_sum_1d,
+)
 from repro.core.backend import (
     ConvBackend,
     conv_backend_names,

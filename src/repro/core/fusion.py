@@ -33,7 +33,12 @@ from jax.experimental.shard_map import shard_map
 from repro.core.tiling import Group, no_grouping, validate_profile
 from repro.core.halo import axis_size, halo_exchange_2d
 from repro.core.backend import get_conv_backend
-from repro.core.spatial import LayerDef, apply_layer_local, stack_reference
+from repro.core.spatial import (
+    LayerDef,
+    apply_group_lead_overlap,
+    apply_layer_local,
+    stack_reference,
+)
 from repro.core.grouping import (
     HardwareProfile,
     PI3_PROFILE,
@@ -57,6 +62,7 @@ class StackPlan:
     rem_halos: tuple[tuple[int, int, int, int], ...]     # remaining halo after each layer
     group_of_layer: tuple[int, ...]
     backend: str = "xla"                         # conv compute path (core.backend)
+    schedule: str = "sync"                       # "sync" | "overlap" (DESIGN.md §5)
 
     @property
     def n_layers(self) -> int:
@@ -88,6 +94,7 @@ def build_stack_plan(
     groups: Sequence[Group] | str | None = None,
     *,
     backend: str = "xla",
+    schedule: str = "sync",
     hw: HardwareProfile | str | None = None,
     batch: int = 1,
 ) -> StackPlan:
@@ -99,15 +106,23 @@ def build_stack_plan(
     at batch size ``batch``, so grouping selection flows into the plan
     instead of living in a side tool.  backend: registered conv compute path
     ("xla" | "pallas"); validated here so a typo fails at plan time, not
-    inside shard_map tracing.
+    inside shard_map tracing.  schedule: "sync" (eager halo exchange, the
+    exactness oracle) or "overlap" (packed collectives + interior/boundary
+    split execution, DESIGN.md §5); flows into the cost model when
+    ``groups="auto"`` so grouping selection reflects communication hiding.
     """
     get_conv_backend(backend)   # fail fast on unknown backends
+    if schedule not in ("sync", "overlap"):
+        raise ValueError(f"schedule must be 'sync' or 'overlap'; got {schedule!r}")
     layers = tuple(layers)
     if isinstance(groups, str):
         if groups != "auto":
             raise ValueError(f"groups must be a profile, None, or 'auto'; got {groups!r}")
         groups = tuple(
-            optimize_grouping(input_hw, layers, n, m, resolve_hw_profile(hw), batch=batch)
+            optimize_grouping(
+                input_hw, layers, n, m, resolve_hw_profile(hw), batch=batch,
+                schedule=schedule,
+            )
         )
     elif groups is None:
         groups = tuple(no_grouping(len(layers)))
@@ -170,6 +185,7 @@ def build_stack_plan(
         rem_halos=tuple(rem_halos),
         group_of_layer=tuple(group_of_layer),
         backend=backend,
+        schedule=schedule,
     )
 
 
@@ -200,11 +216,38 @@ def apply_stack_local(
     batch_axis: str | None = None,
     batch_global: int | None = None,
 ) -> jax.Array:
-    """Forward through all groups on one tile.  ``x``: (b, h/n, w/m, c)."""
+    """Forward through all groups on one tile.  ``x``: (b, h/n, w/m, c).
+
+    schedule="sync": eager 2-round halo exchange, then the group's layers.
+    schedule="overlap": the group-lead layer goes through the packed-
+    collective interior/boundary split (spatial.apply_group_lead_overlap),
+    so its interior compute carries no data dependence on the halo
+    ``ppermute``s; remaining group layers are unchanged (their inputs
+    already depend on everything).
+    """
     bg = _global_batch(x.shape[0], batch_axis, batch_global)
     for gi, g in enumerate(plan.groups):
-        x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
-        for l in g.layers:
+        layers = list(g.layers)
+        if plan.schedule == "overlap" and any(plan.group_halos[gi]):
+            lead = layers.pop(0)
+            x = apply_group_lead_overlap(
+                x,
+                params[lead],
+                plan.layers[lead],
+                halo=plan.group_halos[gi],
+                out_halo=plan.rem_halos[lead],
+                shard_out_hw=plan.shard_hw[lead + 1],
+                map_out_hw=plan.map_hw[lead + 1],
+                row_axis=row_axis,
+                col_axis=col_axis,
+                batch_global=bg,
+                mask_offmap=(lead != g.end),
+                backend=plan.backend,
+                batch_axis=batch_axis,
+            )
+        else:
+            x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
+        for l in layers:
             x = apply_layer_local(
                 x,
                 params[l],

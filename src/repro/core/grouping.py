@@ -26,8 +26,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.spatial import LayerDef
+from repro.core.spatial import LayerDef, split_1d
 from repro.core.tiling import Group
+
+SCHEDULES = ("sync", "overlap")
+
+
+def _check_schedule(schedule: str) -> None:
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}; got {schedule!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,8 +101,17 @@ def _group_cost(
     m: int,
     hw: HardwareProfile,
     batch: int,
-) -> tuple[float, float, float]:
-    """(compute_s, boundary_s, sync_s) for group [s, e] per training cycle."""
+    schedule: str = "sync",
+) -> tuple[float, float, float, float]:
+    """(compute_s, boundary_s, sync_s, hidden_s) for group [s, e] per cycle.
+
+    hidden_s is the boundary-transfer time hidden under the group-lead
+    layer's *interior* compute when ``schedule="overlap"`` (DESIGN.md §5):
+    the interior region depends only on owned data, so its MACs run
+    concurrently with the halo collectives - ``min(boundary_s,
+    interior_compute_s)`` of the transfer disappears from the critical
+    path.  Zero under the sync schedule.
+    """
     # Halo widths at the input of each layer of the group (interior tile =
     # worst case: halo on both sides).  Built backwards per eq. (1).
     halo_lo = [0] * (e - s + 2)
@@ -130,7 +146,25 @@ def _group_cost(
     # wgrad reuses the fwd halo so it adds no traffic)
     boundary_s = batch * 2 * halo_elems * cin * hw.dtype_bytes / hw.link_bw
     sync_s = batch * 2 * hw.sync_latency
-    return compute_s, boundary_s, sync_s
+
+    hidden_s = 0.0
+    if schedule == "overlap" and boundary_s > 0:
+        lead = layers[s]
+        rs = split_1d(ih // n, halo_lo[0], halo_hi[0], lead.kernel, lead.stride)
+        csp = split_1d(iw // m, halo_lo[0], halo_hi[0], lead.kernel, lead.stride)
+        if rs is not None and csp is not None:
+            int_area = (rs.i1 - rs.i0 + 1) * (csp.i1 - csp.i0 + 1)
+            if lead.pool:
+                int_macs = int_area * max(lead.in_channels, 1) * lead.kernel ** 2
+                passes = 1.0
+            else:
+                int_macs = (
+                    int_area * lead.kernel ** 2 * lead.in_channels * lead.out_channels
+                )
+                passes = 3.0   # fwd + delta + wgrad overlap their halo legs alike
+            interior_s = batch * passes * int_macs / hw.flops
+            hidden_s = min(boundary_s, interior_s)
+    return compute_s, boundary_s, sync_s, hidden_s
 
 
 def profile_cost(
@@ -141,15 +175,22 @@ def profile_cost(
     m: int,
     hw: HardwareProfile,
     batch: int = 1,
+    schedule: str = "sync",
 ) -> dict:
-    """Total cycle cost split by component for a grouping profile."""
+    """Total cycle cost split by component for a grouping profile.
+
+    Under ``schedule="overlap"`` the ``hidden`` component (boundary time
+    overlapped with interior compute) is subtracted from the total.
+    """
+    _check_schedule(schedule)
     ext = _map_extents(input_hw, layers)
-    compute = boundary = sync = 0.0
+    compute = boundary = sync = hidden = 0.0
     for g in groups:
-        c, b, s_ = _group_cost(layers, ext, g.start, g.end, n, m, hw, batch)
+        c, b, s_, h = _group_cost(layers, ext, g.start, g.end, n, m, hw, batch, schedule)
         compute += c
         boundary += b
         sync += s_
+        hidden += h
     # Weight aggregation: ring all-reduce of all filter bytes, once per batch.
     tiles = n * m
     wbytes = sum(
@@ -158,12 +199,13 @@ def profile_cost(
         if not l.pool
     )
     weights = 2.0 * wbytes * (tiles - 1) / tiles / hw.agg_bw + hw.sync_latency
-    total = compute + boundary + sync + weights
+    total = compute + boundary + sync + weights - hidden
     return {
         "compute": compute,
         "boundary": boundary,
         "sync": sync,
         "weights": weights,
+        "hidden": hidden,
         "total": total,
     }
 
@@ -176,12 +218,17 @@ def optimize_grouping(
     hw: HardwareProfile,
     batch: int = 1,
     max_group: int | None = None,
+    schedule: str = "sync",
 ) -> list[Group]:
     """DP over group boundaries minimising modelled cycle time.
 
     dp[e] = min over s<=e of dp[s-1] + cost(group(s, e)).  O(L^2) evaluations
-    of the analytic model - instantaneous for real networks.
+    of the analytic model - instantaneous for real networks.  ``schedule``
+    selects the executor the cost reflects ("overlap" credits boundary time
+    hidden under the group lead's interior compute), so ``groups="auto"``
+    planning tracks the executor it plans for.
     """
+    _check_schedule(schedule)
     L = len(layers)
     ext = _map_extents(input_hw, layers)
     max_group = max_group or L
@@ -191,8 +238,8 @@ def optimize_grouping(
     choice = [0] * (L + 1)
     for e in range(1, L + 1):
         for s in range(max(1, e - max_group + 1), e + 1):
-            c, b, y = _group_cost(layers, ext, s - 1, e - 1, n, m, hw, batch)
-            cand = dp[s - 1] + c + b + y
+            c, b, y, h = _group_cost(layers, ext, s - 1, e - 1, n, m, hw, batch, schedule)
+            cand = dp[s - 1] + c + b + y - h
             if cand < dp[e]:
                 dp[e] = cand
                 choice[e] = s - 1

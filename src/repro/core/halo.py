@@ -94,6 +94,97 @@ def halo_exchange_2d(
     return y
 
 
+def _zeros_strip(x: jax.Array, width: int, dim: int) -> jax.Array:
+    shape = list(x.shape)
+    shape[dim] = width
+    return jnp.zeros(shape, x.dtype)
+
+
+def halo_exchange_1d_packed(
+    x: jax.Array,
+    halo_lo: int,
+    halo_hi: int,
+    axis_name: str,
+    *,
+    dim: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Packed halo exchange: returns ``(recv_lo, recv_hi)`` strips *without*
+    concatenating them onto ``x``, so the caller can schedule interior
+    compute that does not depend on them (DESIGN.md §5).
+
+    Collective count per axis: a collective-permute delivers at most one
+    message per device, so a device that needs strips from *two* distinct
+    neighbours needs two of them - except on a 2-shard axis, where both
+    neighbours are the same device and the lo+hi strips pack into a single
+    swap ``ppermute`` (edge halos masked to zero by ``axis_index``, matching
+    the zero delivery of the shifted perms).  That 2-shard case is exactly
+    the per-axis extent of the paper's 2x2 testbed meshes, where the packed
+    path halves the collectives per group input from 4 to 2.
+    """
+    n = axis_size(axis_name)
+    if n == 1 or (halo_lo == 0 and halo_hi == 0):
+        return _zeros_strip(x, halo_lo, dim), _zeros_strip(x, halo_hi, dim)
+    if n == 2 and halo_lo > 0 and halo_hi > 0:
+        send = lax.concatenate(
+            [
+                lax.slice_in_dim(x, x.shape[dim] - halo_lo, x.shape[dim], axis=dim),
+                lax.slice_in_dim(x, 0, halo_hi, axis=dim),
+            ],
+            dimension=dim,
+        )
+        recv = lax.ppermute(send, axis_name, [(0, 1), (1, 0)])
+        idx = lax.axis_index(axis_name)
+        recv_lo = lax.slice_in_dim(recv, 0, halo_lo, axis=dim)
+        recv_hi = lax.slice_in_dim(recv, halo_lo, halo_lo + halo_hi, axis=dim)
+        recv_lo = jnp.where(idx > 0, recv_lo, jnp.zeros_like(recv_lo))
+        recv_hi = jnp.where(idx < n - 1, recv_hi, jnp.zeros_like(recv_hi))
+        return recv_lo, recv_hi
+    # n > 2: each device receives from two distinct sources, so two shifted
+    # ppermutes are information-theoretically minimal; the win here is the
+    # un-concatenated return (interior compute stays independent).
+    if halo_lo > 0:
+        send_up = lax.slice_in_dim(x, x.shape[dim] - halo_lo, x.shape[dim], axis=dim)
+        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+    else:
+        recv_lo = _zeros_strip(x, 0, dim)
+    if halo_hi > 0:
+        send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
+        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+    else:
+        recv_hi = _zeros_strip(x, 0, dim)
+    return recv_lo, recv_hi
+
+
+def halo_exchange_2d_packed(
+    x: jax.Array,
+    halo: tuple[int, int, int, int],
+    row_axis: str,
+    col_axis: str,
+    *,
+    dims: tuple[int, int] = (0, 1),
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Packed 2-D halo exchange for the overlap schedule.
+
+    Returns ``(x_rows, col_lo, col_hi)``: the row-extended array (owned tile
+    with the top/bottom strips attached) and the *separate* left/right
+    strips of that row-extended array (so they carry the corner blocks, as
+    in the eager 2-round exchange).  Callers that need the fully extended
+    tile concatenate ``[col_lo, x_rows, col_hi]`` along ``dims[1]``;
+    callers overlapping compute consume only what each region needs.
+    """
+    top, bottom, left, right = halo
+    row_lo, row_hi = halo_exchange_1d_packed(x, top, bottom, row_axis, dim=dims[0])
+    parts = []
+    if top > 0:
+        parts.append(row_lo)
+    parts.append(x)
+    if bottom > 0:
+        parts.append(row_hi)
+    x_rows = lax.concatenate(parts, dimension=dims[0]) if len(parts) > 1 else x
+    col_lo, col_hi = halo_exchange_1d_packed(x_rows, left, right, col_axis, dim=dims[1])
+    return x_rows, col_lo, col_hi
+
+
 def send_boundary_sum_1d(
     x: jax.Array,
     overlap_lo: int,

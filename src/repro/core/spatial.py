@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.tiling import ConvSpec
-from repro.core.halo import halo_exchange_2d
+from repro.core.halo import halo_exchange_2d, halo_exchange_1d_packed
 from repro.core.backend import ACTIVATIONS as _ACTIVATIONS, Activation, get_conv_backend
 
 # ---------------------------------------------------------------------------
@@ -252,21 +252,65 @@ def apply_layer_local(
     the backend cannot fuse stay here, since BN needs cross-tile psums (over
     the batch mesh axis too, when one is present).
     """
-    fused = False
+    y, fused = _conv_or_pool(x, params, layer, backend)
+    return _finish_layer(
+        y,
+        params,
+        layer,
+        fused=fused,
+        out_halo=out_halo,
+        shard_out_hw=shard_out_hw,
+        map_out_hw=map_out_hw,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        batch_global=batch_global,
+        mask_offmap=mask_offmap,
+        batch_axis=batch_axis,
+    )
+
+
+def _conv_or_pool(
+    x: jax.Array, params: dict, layer: LayerDef, backend: str
+) -> tuple[jax.Array, bool]:
+    """VALID conv/pool of one (sub-)slab through the backend registry.
+
+    Returns ``(y, fused)`` where ``fused`` says the activation was applied by
+    the backend.  The decision depends only on (layer, backend), so splitting
+    a tile into slabs and applying this per slab is exact.
+    """
     if layer.pool:
-        y = _valid_pool(x, layer.kernel, layer.stride)
-    else:
-        be = get_conv_backend(backend)
-        fused = (not layer.batch_norm) and layer.act in be.fused_acts
-        b = params["b"] if layer.use_bias else None
-        y = be(x, params["w"], b, stride=layer.stride,
-               act=layer.act if fused else "linear")
-        if layer.batch_norm:
-            n_global = batch_global * map_out_hw[0] * map_out_hw[1]
-            bn_axes = (row_axis, col_axis)
-            if batch_axis is not None:
-                bn_axes = (batch_axis,) + bn_axes
-            y = _bn_tiled(y, layer, params, out_halo, bn_axes, n_global)
+        return _valid_pool(x, layer.kernel, layer.stride), False
+    be = get_conv_backend(backend)
+    fused = (not layer.batch_norm) and layer.act in be.fused_acts
+    b = params["b"] if layer.use_bias else None
+    y = be(x, params["w"], b, stride=layer.stride,
+           act=layer.act if fused else "linear")
+    return y, fused
+
+
+def _finish_layer(
+    y: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    fused: bool,
+    out_halo: tuple[int, int, int, int],
+    shard_out_hw: tuple[int, int],
+    map_out_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    mask_offmap: bool,
+    batch_axis: str | None,
+) -> jax.Array:
+    """Post-conv tail shared by the sync and overlap executors: cross-tile
+    BN, unfused activation, off-map masking."""
+    if layer.batch_norm and not layer.pool:
+        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+        bn_axes = (row_axis, col_axis)
+        if batch_axis is not None:
+            bn_axes = (batch_axis,) + bn_axes
+        y = _bn_tiled(y, layer, params, out_halo, bn_axes, n_global)
     if not fused:
         y = _ACTIVATIONS[layer.act](y)
     if mask_offmap and any(h > 0 for h in out_halo):
@@ -275,3 +319,148 @@ def apply_layer_local(
         )
         y = y * m[None, :, :, None].astype(y.dtype)
     return y
+
+
+# ---------------------------------------------------------------------------
+# Overlap schedule: interior/boundary split of a group-lead layer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSpec1D:
+    """Static interior/boundary split of one spatial dim of a group-lead
+    layer on a halo-extended tile (DESIGN.md §5).
+
+    Output positions (extended coords, ``out`` of them) split into a lo
+    boundary band [0, i0), the interior [i0, i1], and a hi boundary band
+    (i1, out).  Interior outputs depend only on owned input rows
+    [int_in_lo, int_in_hi) (owned coords) - computable before any halo
+    strip arrives."""
+
+    out: int        # output extent of the halo-extended tile
+    i0: int         # first interior output index
+    i1: int         # last interior output index (inclusive)
+    int_in_lo: int  # owned-coords input slab [lo, hi) feeding the interior
+    int_in_hi: int
+
+    @property
+    def n_lo(self) -> int:
+        return self.i0
+
+    @property
+    def n_hi(self) -> int:
+        return self.out - 1 - self.i1
+
+
+def split_1d(own: int, lo: int, hi: int, kernel: int, stride: int) -> SplitSpec1D | None:
+    """Interior/boundary split along one dim, or None when no output is
+    computable from owned data alone (tile thinner than the kernel's reach
+    into the halo - the executor then falls back to whole-tile compute)."""
+    out = (own + lo + hi - kernel) // stride + 1
+    i0 = -(-lo // stride)                     # ceil(lo / stride)
+    i1 = (lo + own - kernel) // stride
+    if i1 < i0:
+        return None
+    return SplitSpec1D(
+        out=out,
+        i0=i0,
+        i1=i1,
+        int_in_lo=i0 * stride - lo,
+        int_in_hi=i1 * stride + kernel - lo,
+    )
+
+
+def apply_group_lead_overlap(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    halo: tuple[int, int, int, int],
+    out_halo: tuple[int, int, int, int],
+    shard_out_hw: tuple[int, int],
+    map_out_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    mask_offmap: bool,
+    backend: str = "xla",
+    batch_axis: str | None = None,
+) -> jax.Array:
+    """Group-lead layer under the overlap schedule: packed halo exchange +
+    interior/boundary split execution (DESIGN.md §5).
+
+    The interior region of the output depends only on owned data, so its
+    conv is issued *before* any halo strip is consumed - XLA's latency-
+    hiding scheduler can then run the boundary ``ppermute``s concurrently
+    with the interior matmuls.  The boundary strips (top/bottom bands, and
+    left/right strips of the interior rows) are computed from the extended
+    tile once the strips land, and the pieces are concatenated back into
+    exactly ``conv_valid(extended_tile)`` - each output position is a
+    disjoint slice with the identical input window, so exactness vs. the
+    sync schedule is positional, not numerical.
+    """
+    top, bottom, left, right = halo
+    k, s = layer.kernel, layer.stride
+    own_h, own_w = x.shape[1], x.shape[2]
+    rs = split_1d(own_h, top, bottom, k, s)
+    cs = split_1d(own_w, left, right, k, s)
+
+    finish = functools.partial(
+        _finish_layer,
+        params=params,
+        layer=layer,
+        out_halo=out_halo,
+        shard_out_hw=shard_out_hw,
+        map_out_hw=map_out_hw,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        batch_global=batch_global,
+        mask_offmap=mask_offmap,
+        batch_axis=batch_axis,
+    )
+
+    # 1. issue the packed row exchange (nothing below consumes it yet)
+    row_lo, row_hi = halo_exchange_1d_packed(x, top, bottom, row_axis, dim=1)
+
+    if rs is None or cs is None:
+        # no interior: whole-tile compute on the assembled extended tile
+        ext = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
+        col_lo, col_hi = halo_exchange_1d_packed(ext, left, right, col_axis, dim=2)
+        ext = _assemble(col_lo, ext, col_hi, left, right, dim=2)
+        y, fused = _conv_or_pool(ext, params, layer, backend)
+        return finish(y, fused=fused)
+
+    # 2. interior compute from owned data only - independent of all recvs
+    int_slab = x[:, rs.int_in_lo:rs.int_in_hi, cs.int_in_lo:cs.int_in_hi, :]
+    y_int, fused = _conv_or_pool(int_slab, params, layer, backend)
+
+    # 3. column exchange over the row-extended tile (carries the corners)
+    x_rows = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
+    col_lo, col_hi = halo_exchange_1d_packed(x_rows, left, right, col_axis, dim=2)
+    ext = _assemble(col_lo, x_rows, col_hi, left, right, dim=2)
+
+    # 4. boundary strips once the halo strips land (extended coords)
+    mid_rows = slice(rs.i0 * s, rs.i1 * s + k)
+    mid = [y_int]
+    if cs.n_lo:
+        slab = ext[:, mid_rows, 0:(cs.i0 - 1) * s + k, :]
+        mid.insert(0, _conv_or_pool(slab, params, layer, backend)[0])
+    if cs.n_hi:
+        slab = ext[:, mid_rows, (cs.i1 + 1) * s:(cs.out - 1) * s + k, :]
+        mid.append(_conv_or_pool(slab, params, layer, backend)[0])
+    bands = [mid[0] if len(mid) == 1 else jnp.concatenate(mid, axis=2)]
+    if rs.n_lo:
+        slab = ext[:, 0:(rs.i0 - 1) * s + k, :, :]
+        bands.insert(0, _conv_or_pool(slab, params, layer, backend)[0])
+    if rs.n_hi:
+        slab = ext[:, (rs.i1 + 1) * s:(rs.out - 1) * s + k, :, :]
+        bands.append(_conv_or_pool(slab, params, layer, backend)[0])
+    y = bands[0] if len(bands) == 1 else jnp.concatenate(bands, axis=1)
+    return finish(y, fused=fused)
+
+
+def _assemble(lo: jax.Array, core: jax.Array, hi: jax.Array, w_lo: int, w_hi: int, *, dim: int) -> jax.Array:
+    parts = ([lo] if w_lo > 0 else []) + [core] + ([hi] if w_hi > 0 else [])
+    if len(parts) == 1:
+        return core
+    return lax.concatenate(parts, dimension=dim)

@@ -3,18 +3,28 @@
 TPU adaptation of the paper's hot spot (DESIGN.md S2): the spatial tiling
 bounds each device's working set - one halo-extended tile - to VMEM scale
 *by construction*, so the kernel maps the entire local tile into VMEM and
-decomposes the KxK convolution into K^2 shifted (OH*OW, Cin) x (Cin, bCout)
+decomposes the KxK convolution into K^2 shifted (rows, Cin) x (Cin, bCout)
 MXU matmuls, accumulating in fp32.  This is the paper's fused execution
 stack collapsed to the HBM->VMEM level: the halo is exchanged *between*
 devices by core/halo.py; *within* the device the kernel reuses the VMEM
-tile across all K^2 taps and the full Cout extent (grid-minor Cout blocks),
-so the input is read from HBM exactly once per layer.
+tile across all K^2 taps and the full Cout extent, so the input is read
+from HBM exactly once per layer.
 
-Grid: (N, n_cout_blocks), Cout minor so the x block stays resident.
+Spatial output-row blocking (DESIGN.md S5): the grid carries an OH-block
+dimension so the fp32 accumulator scratch shrinks from (OH*OW, bc) to
+(block_oh*OW, bc) - large tiles stop being a VMEM scalability cliff.  Each
+grid step computes ``block_oh`` output rows from a dynamic row slab of the
+resident input and runs the fused bias+activation epilogue on just that
+block before writing it out.
+
+Grid: (N, n_cout_blocks, n_oh_blocks) - OH minor so each filter slab
+(K, K, Cin, bc) loads once and is reused across all row blocks; the x
+block's index map is constant in both minor dims, so the tile stays
+resident in VMEM for the whole (co, oh) sweep.
 BlockSpecs:
-    x    (1, H, W, Cin)     - the halo-extended local tile
-    w    (K, K, Cin, bc)    - one Cout slab of the filter
-    out  (1, OH, OW, bc)
+    x    (1, H, W, Cin)         - the halo-extended local tile
+    w    (K, K, Cin, bc)        - one Cout slab of the filter
+    out  (1, block_oh, OW, bc)
 bc defaults to 128 (MXU lane width); fp32 accumulation in VMEM scratch.
 
 Supports stride 1/2 and fused bias + activation (linear / relu / leaky 0.1,
@@ -30,6 +40,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# fp32 accumulator budget per (oh, co) grid cell used by the auto block_oh
+# choice; small tiles keep full-OH blocks, big tiles split.
+_ACC_BUDGET_BYTES = 1 << 20
+
+
+def _auto_block_oh(oh: int, ow: int, bc: int) -> int:
+    return max(1, min(oh, _ACC_BUDGET_BYTES // (4 * ow * bc)))
+
 
 def _conv_kernel(
     x_ref, w_ref, b_ref,
@@ -39,34 +57,40 @@ def _conv_kernel(
     kernel: int,
     stride: int,
     act: str,
-    oh: int,
+    block_oh: int,
     ow: int,
 ):
-    x = x_ref[0]                                   # (H, W, Cin)
-    cin = x.shape[-1]
+    cin = x_ref.shape[-1]
     bc = o_ref.shape[-1]
+    # Row slab feeding this output-row block; the caller zero-pads the
+    # input rows so the slab of the (possibly OH-padded) last block is
+    # always in bounds - a clamped slice would misalign strided taps.
+    row0 = pl.program_id(2) * (block_oh * stride)
+    in_rows = (block_oh - 1) * stride + kernel
+    xb = x_ref[0, pl.ds(row0, in_rows)]            # (in_rows, W, Cin)
     acc_ref[...] = jnp.zeros_like(acc_ref)
     for ki in range(kernel):
         for kj in range(kernel):
             xs = jax.lax.slice(
-                x,
+                xb,
                 (ki, kj, 0),
-                (ki + stride * (oh - 1) + 1, kj + stride * (ow - 1) + 1, cin),
+                (ki + stride * (block_oh - 1) + 1, kj + stride * (ow - 1) + 1, cin),
                 (stride, stride, 1),
-            )                                      # (OH, OW, Cin)
+            )                                      # (block_oh, OW, Cin)
             wk = w_ref[ki, kj]                     # (Cin, bc)
             acc_ref[...] += jax.lax.dot_general(
-                xs.reshape(oh * ow, cin).astype(jnp.float32),
+                xs.reshape(block_oh * ow, cin).astype(jnp.float32),
                 wk.astype(jnp.float32),
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
+    # fused bias + activation epilogue, per output-row block
     y = acc_ref[...] + b_ref[...].astype(jnp.float32)
     if act == "relu":
         y = jnp.maximum(y, 0.0)
     elif act == "leaky":
         y = jnp.where(y > 0, y, 0.1 * y)
-    o_ref[0] = y.reshape(oh, ow, bc).astype(o_ref.dtype)
+    o_ref[0] = y.reshape(block_oh, ow, bc).astype(o_ref.dtype)
 
 
 def conv2d_tile(
@@ -77,6 +101,7 @@ def conv2d_tile(
     stride: int = 1,
     act: str = "linear",
     bc: int = 128,
+    block_oh: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     n, h, wdt, cin = x.shape
@@ -85,6 +110,9 @@ def conv2d_tile(
     oh = (h - k) // stride + 1
     ow = (wdt - k) // stride + 1
     bc = min(bc, cout)
+    if block_oh is None:
+        block_oh = _auto_block_oh(oh, ow, bc)
+    block_oh = max(1, min(block_oh, oh))
     # pad Cout up to a block multiple
     cout_p = -(-cout // bc) * bc
     if cout_p != cout:
@@ -93,21 +121,30 @@ def conv2d_tile(
         b = jnp.zeros((cout_p,), x.dtype)
     elif cout_p != cout:
         b = jnp.pad(b, (0, cout_p - cout))
+    # pad OH up to a row-block multiple (cropped after the call), and pad
+    # the input rows so the last block's row slab stays in bounds
+    n_oh_blocks = -(-oh // block_oh)
+    oh_p = n_oh_blocks * block_oh
+    h_p = (oh_p - 1) * stride + k
+    if h_p > h:
+        x = jnp.pad(x, ((0, 0), (0, h_p - h), (0, 0), (0, 0)))
+        h = h_p
 
     kernel_fn = functools.partial(
-        _conv_kernel, kernel=k, stride=stride, act=act, oh=oh, ow=ow
+        _conv_kernel, kernel=k, stride=stride, act=act,
+        block_oh=block_oh, ow=ow,
     )
     out = pl.pallas_call(
         kernel_fn,
-        grid=(n, cout_p // bc),
+        grid=(n, cout_p // bc, n_oh_blocks),
         in_specs=[
-            pl.BlockSpec((1, h, wdt, cin), lambda i, co: (i, 0, 0, 0)),
-            pl.BlockSpec((k, k, cin, bc), lambda i, co: (0, 0, 0, co)),
-            pl.BlockSpec((bc,), lambda i, co: (co,)),
+            pl.BlockSpec((1, h, wdt, cin), lambda i, co, ob: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, bc), lambda i, co, ob: (0, 0, 0, co)),
+            pl.BlockSpec((bc,), lambda i, co, ob: (co,)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, bc), lambda i, co: (i, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout_p), x.dtype),
-        scratch_shapes=[pltpu.VMEM((oh * ow, bc), jnp.float32)],
+        out_specs=pl.BlockSpec((1, block_oh, ow, bc), lambda i, co, ob: (i, ob, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, oh_p, ow, cout_p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_oh * ow, bc), jnp.float32)],
         interpret=interpret,
     )(x, w, b)
-    return out[..., :cout]
+    return out[:, :oh, :, :cout]

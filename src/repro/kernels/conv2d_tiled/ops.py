@@ -4,7 +4,9 @@
 the same decomposition the distributed runtime uses (halo exchange delivers
 the padding/halo; the kernel computes the VALID interior).  Backward falls
 back to XLA's conv transpose via custom_vjp (exact; the paper's rotated-
-filter convolution).
+filter convolution).  ``block_oh`` selects the kernel's output-row block
+(None = auto from the VMEM accumulator budget); it only re-tiles compute,
+so it is a nondiff static arg like ``stride``.
 """
 from __future__ import annotations
 
@@ -18,23 +20,26 @@ from repro.kernels.conv2d_tiled.kernel import conv2d_tile
 from repro.kernels.conv2d_tiled.ref import conv2d_ref
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def conv2d(
     x, w, b,
     stride: int = 1,
     pad: int = 0,
     act: str = "linear",
     interpret: bool = False,
+    block_oh: int | None = None,
 ):
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    return conv2d_tile(xp, w, b, stride=stride, act=act, interpret=interpret)
+    return conv2d_tile(
+        xp, w, b, stride=stride, act=act, block_oh=block_oh, interpret=interpret
+    )
 
 
-def _fwd(x, w, b, stride, pad, act, interpret):
-    return conv2d(x, w, b, stride, pad, act, interpret), (x, w, b)
+def _fwd(x, w, b, stride, pad, act, interpret, block_oh):
+    return conv2d(x, w, b, stride, pad, act, interpret, block_oh), (x, w, b)
 
 
-def _bwd(stride, pad, act, interpret, res, g):
+def _bwd(stride, pad, act, interpret, block_oh, res, g):
     x, w, b = res
 
     def f(x_, w_, b_):

@@ -56,6 +56,9 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--depth", type=int, default=8, help="tiled: YOLO prefix depth")
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
                     help="tiled: conv compute backend")
+    ap.add_argument("--schedule", default="sync", choices=["sync", "overlap"],
+                    help="tiled: executor schedule (overlap = packed halo "
+                         "collectives + interior/boundary split)")
     ap.add_argument("--groups", default="none",
                     help="tiled: grouping profile - 'none', 'auto', or group size int")
     ap.add_argument("--hw-profile", default="pi3-core",
@@ -83,11 +86,13 @@ def _run_tiled(args) -> int:
         m=args.grid,
         groups=_resolve_groups(args.groups, n_layers),
         backend=args.backend,
+        schedule=args.schedule,
         hw=args.hw_profile,
         batch=args.batch,
     )
     print(
-        f"plan: backend={arch.plan.backend} grid={args.grid}x{args.grid} "
+        f"plan: backend={arch.plan.backend} schedule={arch.plan.schedule} "
+        f"grid={args.grid}x{args.grid} "
         f"groups={[(g.start, g.end) for g in arch.plan.groups]}"
     )
     pcfg = ParallelConfig(grad_accum=args.grad_accum)

@@ -85,6 +85,7 @@ def make_yolo_tiled_arch(
     groups=None,
     *,
     backend: str = "xla",
+    schedule: str = "sync",
     hw: HardwareProfile | str | None = None,
     batch: int = 1,
     batch_norm: bool = True,
@@ -92,13 +93,15 @@ def make_yolo_tiled_arch(
     loss_local=l2_loss_local,
 ) -> TiledCNNArch:
     """Planner -> arch bundle for the unified trainer: a YOLOv2 prefix of
-    ``depth`` layers tiled n x m, with the conv backend and grouping profile
-    (including ``groups="auto"`` cost-model selection) chosen at plan time."""
+    ``depth`` layers tiled n x m, with the conv backend, executor schedule
+    ("sync" | "overlap"), and grouping profile (including ``groups="auto"``
+    cost-model selection) chosen at plan time."""
     from repro.launch.mesh import make_tile_mesh
 
     layers = yolov2_16_layers(batch_norm=batch_norm)[:depth]
     plan = build_stack_plan(
-        input_hw, layers, n, m, groups, backend=backend, hw=hw, batch=batch
+        input_hw, layers, n, m, groups,
+        backend=backend, schedule=schedule, hw=hw, batch=batch,
     )
     return TiledCNNArch(
         plan=plan,

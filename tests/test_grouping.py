@@ -66,14 +66,17 @@ def test_batch_shifts_weight_amortisation():
     st.integers(2, 5),
     st.floats(1e8, 1e13),
     st.floats(1e6, 1e11),
+    st.sampled_from(["sync", "overlap"]),
 )
-def test_dp_matches_bruteforce(n_layers, flops, link_bw):
-    """The DP grouping optimizer is exactly optimal under the cost model."""
+def test_dp_matches_bruteforce(n_layers, flops, link_bw, schedule):
+    """The DP grouping optimizer is exactly optimal under the cost model,
+    for both executor schedules (the overlap hidden-time credit is a
+    per-group term, so the DP decomposition still holds)."""
     layers = LAYERS[:n_layers]
     hw = HardwareProfile("h", flops=flops, link_bw=link_bw, sync_latency=1e-3, agg_bw=link_bw)
 
     def cost(groups):
-        return profile_cost((64, 64), layers, groups, 2, 2, hw)["total"]
+        return profile_cost((64, 64), layers, groups, 2, 2, hw, schedule=schedule)["total"]
 
     # enumerate all contiguous partitions via composition bitmasks
     best_cost = None
@@ -88,7 +91,7 @@ def test_dp_matches_bruteforce(n_layers, flops, link_bw):
         c = cost(groups)
         best_cost = c if best_cost is None else min(best_cost, c)
 
-    dp = optimize_grouping((64, 64), layers, 2, 2, hw)
+    dp = optimize_grouping((64, 64), layers, 2, 2, hw, schedule=schedule)
     assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
 
 
@@ -105,22 +108,83 @@ def _enumerate_profiles(n_layers):
         yield groups
 
 
+@pytest.mark.parametrize("schedule", ["sync", "overlap"])
 @pytest.mark.parametrize(
     "hw", [PI3_PROFILE, JETSON_PROFILE], ids=["pi-compute-bound", "jetson-comm-bound"]
 )
 @pytest.mark.parametrize("n_layers", [3, 4, 5])
-def test_dp_matches_bruteforce_paper_profiles(hw, n_layers):
+def test_dp_matches_bruteforce_paper_profiles(hw, n_layers, schedule):
     """Deterministic (no hypothesis) DP-vs-enumeration check on the paper's
     two testbed profiles - the compute-bound and comm-bound regimes both
-    must be exactly optimal."""
+    must be exactly optimal, under both executor schedules."""
     layers = LAYERS[:n_layers]
 
     def cost(groups):
-        return profile_cost((64, 64), layers, groups, 2, 2, hw)["total"]
+        return profile_cost((64, 64), layers, groups, 2, 2, hw, schedule=schedule)["total"]
 
     best_cost = min(cost(g) for g in _enumerate_profiles(n_layers))
-    dp = optimize_grouping((64, 64), layers, 2, 2, hw)
+    dp = optimize_grouping((64, 64), layers, 2, 2, hw, schedule=schedule)
     assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# overlap schedule cost term (communication hiding)
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_cost_never_worse_than_sync():
+    """Hidden time is min(boundary, interior compute) >= 0 per group, so the
+    overlap schedule's modelled total can only drop."""
+    for hw in (PI3_PROFILE, JETSON_PROFILE, TPU_V5E_PROFILE):
+        for groups in (no_grouping(len(LAYERS)), single_group(len(LAYERS))):
+            sync = profile_cost(HW, LAYERS, groups, 4, 6, hw, schedule="sync")
+            over = profile_cost(HW, LAYERS, groups, 4, 6, hw, schedule="overlap")
+            assert sync["hidden"] == 0.0
+            assert over["hidden"] >= 0.0
+            assert over["total"] <= sync["total"]
+            assert over["total"] == pytest.approx(sync["total"] - over["hidden"])
+
+
+def test_overlap_hides_boundary_on_compute_bound_hw():
+    """On the compute-bound Pi the interior compute towers over the halo
+    transfer, so (almost) the whole boundary term hides; the modelled cycle
+    approaches compute + sync + weights."""
+    groups = no_grouping(len(LAYERS))
+    c = profile_cost(HW, LAYERS, groups, 4, 6, PI3_PROFILE, schedule="overlap")
+    assert c["hidden"] > 0.9 * c["boundary"]
+
+
+def test_overlap_hidden_bounded_by_boundary():
+    for hw in (PI3_PROFILE, JETSON_PROFILE, TPU_V5E_PROFILE):
+        c = profile_cost(HW, LAYERS, single_group(len(LAYERS)), 4, 6, hw, schedule="overlap")
+        assert 0.0 <= c["hidden"] <= c["boundary"] * (1 + 1e-12)
+
+
+def test_unknown_schedule_rejected():
+    with pytest.raises(ValueError, match="schedule must be"):
+        profile_cost(HW, LAYERS, no_grouping(len(LAYERS)), 4, 6, PI3_PROFILE,
+                     schedule="eager")
+    with pytest.raises(ValueError, match="schedule must be"):
+        optimize_grouping(HW, LAYERS, 4, 6, PI3_PROFILE, schedule="async")
+
+
+def test_schedule_flows_from_plan_to_optimizer():
+    """build_stack_plan(groups="auto", schedule=...) must hand the schedule
+    to the DP so planning reflects the executor it plans for."""
+    from repro.core.fusion import build_stack_plan
+    from repro.core.spatial import LayerDef
+
+    convs = [LayerDef(3, 1, 32, 32) for _ in range(5)]
+    for schedule in ("sync", "overlap"):
+        plan = build_stack_plan(
+            (64, 64), convs, 2, 2, "auto", hw=JETSON_PROFILE, schedule=schedule
+        )
+        assert plan.schedule == schedule
+        assert plan.groups == tuple(
+            optimize_grouping((64, 64), convs, 2, 2, JETSON_PROFILE, schedule=schedule)
+        )
+    with pytest.raises(ValueError, match="schedule must be"):
+        build_stack_plan((64, 64), convs, 2, 2, schedule="eager")
 
 
 def test_auto_groups_flow_into_plan():

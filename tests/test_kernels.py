@@ -110,6 +110,66 @@ def test_conv2d_tile(case):
     )
 
 
+BLOCK_OH_CASES = [
+    # h, w, cin, cout, k, stride, act, block_oh  (block_oh < OH throughout)
+    (18, 18, 16, 32, 3, 1, "leaky", 4),       # OH=16, 4 even blocks
+    (18, 18, 16, 32, 3, 1, "leaky", 5),       # OH=16, ragged last block
+    (17, 17, 3, 32, 3, 2, "linear", 3),       # stride 2, OH=8, ragged
+    (20, 20, 8, 24, 5, 1, "relu", 7),         # K=5, OH=16, ragged
+    (12, 12, 8, 16, 1, 1, "leaky", 2),        # 1x1 conv
+    (16, 16, 8, 24, 2, 2, "linear", 3),       # even kernel, stride 2
+]
+
+
+@pytest.mark.parametrize("case", BLOCK_OH_CASES, ids=[str(c) for c in BLOCK_OH_CASES])
+def test_conv2d_tile_oh_blocked(case):
+    """Spatial output-row blocking: block_oh < OH must stay exact, incl.
+    ragged last blocks (OH % block_oh != 0) and strided input slabs."""
+    h, w_, cin, cout, k, s, act, block_oh = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (2, h, w_, cin))
+    w = jax.random.normal(ks[1], (k, k, cin, cout)) * 0.1
+    b = jax.random.normal(ks[2], (cout,))
+    oh = (h - k) // s + 1
+    assert block_oh < oh
+    out = conv2d_tile(x, w, b, stride=s, act=act, bc=64, block_oh=block_oh, interpret=True)
+    ref = conv2d_ref(x, w, b, stride=s, act=act)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_conv2d_tile_block_oh_equivalence():
+    """All block sizes produce identical results (the blocking is pure
+    compute re-tiling, not an approximation)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(ks[0], (1, 14, 14, 8))
+    w = jax.random.normal(ks[1], (3, 3, 8, 16)) * 0.1
+    b = jax.random.normal(ks[2], (16,))
+    full = conv2d_tile(x, w, b, stride=1, act="leaky", bc=64, block_oh=12, interpret=True)
+    for boh in (1, 2, 3, 5, 12):
+        out = conv2d_tile(x, w, b, stride=1, act="leaky", bc=64, block_oh=boh, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(full))
+
+
+def test_conv2d_ops_wrapper_block_oh_grads():
+    """block_oh is a nondiff re-tiling arg: custom_vjp grads unchanged."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 10, 10, 8))
+    w = jax.random.normal(jax.random.PRNGKey(8), (3, 3, 8, 16)) * 0.1
+    b = jnp.zeros((16,))
+    gk = jax.grad(
+        lambda x, w, b: jnp.sum(conv2d(x, w, b, 1, 1, "leaky", True, 3) ** 2),
+        argnums=(0, 1, 2),
+    )(x, w, b)
+
+    def ref_loss(x, w, b):
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        return jnp.sum(conv2d_ref(xp, w, b, stride=1, act="leaky") ** 2)
+
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4, rtol=1e-3)
+
+
 def test_conv2d_padded_wrapper_matches_same_conv():
     """conv2d(pad=k//2) == the model stack's SAME conv + act."""
     from repro.core.spatial import LayerDef, apply_layer_reference, init_layer_params

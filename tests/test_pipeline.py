@@ -53,6 +53,13 @@ def test_unknown_backend_fails_at_plan_time():
         build_stack_plan(HW, LAYERS, 1, 1, backend="cudnn")
 
 
+def test_unknown_schedule_fails_at_plan_time():
+    with pytest.raises(ValueError, match="schedule must be"):
+        build_stack_plan(HW, LAYERS, 1, 1, schedule="eager")
+    assert build_stack_plan(HW, LAYERS, 1, 1).schedule == "sync"
+    assert build_stack_plan(HW, LAYERS, 1, 1, schedule="overlap").schedule == "overlap"
+
+
 def test_custom_backend_registers_and_runs():
     register_conv_backend("xla-test-alias", _xla_conv, fused_acts=("linear",))
     plan = build_stack_plan(HW, LAYERS, 1, 1, backend="xla-test-alias")
@@ -70,9 +77,10 @@ def test_custom_backend_registers_and_runs():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("schedule", ["sync", "overlap"])
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
-def test_backend_matches_untiled_reference(backend):
-    plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend)
+def test_backend_matches_untiled_reference(backend, schedule):
+    plan = build_stack_plan(HW, LAYERS, 1, 1, backend=backend, schedule=schedule)
     mesh = make_tile_mesh(1, 1)
     params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))

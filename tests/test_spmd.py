@@ -11,6 +11,10 @@ non-zero on failure:
   check_pipeline.py - unified planner->executor->trainer: tiled YOLO train
                       step == untiled reference for xla AND pallas backends,
                       groups="auto" regimes, batch-axis BN statistics
+  check_overlap.py  - overlap schedule: packed-collective interior/boundary
+                      split executor == untiled reference (xla + pallas),
+                      ppermute count 4 -> 2 per group input, no-interior
+                      fallback
 """
 import os
 import subprocess
@@ -50,3 +54,8 @@ def test_halo_exchange_exact():
 def test_unified_pipeline_exact():
     out = _run("check_pipeline.py")
     assert "PIPELINE CHECK OK" in out
+
+
+def test_overlap_schedule_exact():
+    out = _run("check_overlap.py")
+    assert "OVERLAP CHECK OK" in out

@@ -123,6 +123,43 @@ def test_grouping_profiles_valid(n_layers, gsize):
         validate_profile([], n_layers)
 
 
+@given(
+    st.integers(1, 64),          # owned extent
+    st.integers(0, 6),           # halo lo
+    st.integers(0, 6),           # halo hi
+    st.sampled_from([1, 2, 3, 5, 7]),
+    st.sampled_from([1, 2]),
+)
+def test_split_1d_partitions_extended_output(own, lo, hi, kernel, stride):
+    """Overlap-schedule split: lo band + interior + hi band tile the
+    halo-extended output exactly, and the interior's input slab lies fully
+    inside the owned region (computable before any halo arrives)."""
+    from repro.core.spatial import split_1d
+
+    ext = own + lo + hi
+    if ext < kernel:
+        return
+    out = (ext - kernel) // stride + 1
+    spec = split_1d(own, lo, hi, kernel, stride)
+    if spec is None:
+        # no output window fits inside the owned region
+        assert lo + own - kernel < -(-lo // stride) * stride
+        return
+    assert spec.out == out
+    assert spec.n_lo + (spec.i1 - spec.i0 + 1) + spec.n_hi == out
+    # boundary bands appear iff the corresponding halo exists
+    assert (spec.n_lo > 0) == (lo > 0)
+    if hi == 0:
+        assert spec.n_hi == 0
+    # interior input slab: inside owned data, and exactly the window the
+    # interior output rows consume
+    assert 0 <= spec.int_in_lo <= spec.int_in_hi <= own
+    assert spec.int_in_hi - spec.int_in_lo == (spec.i1 - spec.i0) * stride + kernel
+    # every interior output's window [i*s, i*s+k) sits inside [lo, lo+own)
+    assert spec.i0 * stride >= lo
+    assert spec.i1 * stride + kernel <= lo + own
+
+
 def _yolo_head(n=6):
     from repro.models.yolo import yolov2_16_layers
 
