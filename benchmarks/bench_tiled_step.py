@@ -11,6 +11,13 @@ backend x schedule's loss/grads match the reference to float tolerance.
 Multi-tile wall-clock runs live in scripts/check_*.py (4 fake devices,
 subprocess).
 
+Backward-pass rows (PR 3): the Pallas dgrad/wgrad kernels
+(kernels/conv2d_tiled/backward.py) are timed on a representative conv of
+the stack and checked against ``jax.vjp`` of the XLA reference, so the
+trajectory records the backward kernels' wall-clock and exactness per
+commit alongside the full-step numbers (whose grads now lower through
+those kernels when backend="pallas").
+
 ``run(quick=True)`` (CI smoke) keeps the exactness checks but trims the
 timing loop.  Rows feed the persisted BENCH_tiled.json trajectory written
 by benchmarks/run.py.
@@ -29,6 +36,8 @@ from repro.core.fusion import (
     reference_loss,
 )
 from repro.core.spatial import LayerDef, init_stack_params
+from repro.kernels.conv2d_tiled.backward import conv2d_dgrad_tile, conv2d_wgrad_tile
+from repro.kernels.conv2d_tiled.ref import conv2d_ref
 from repro.launch.mesh import make_tile_mesh
 from repro.models.yolo import l2_loss_local
 
@@ -91,12 +100,58 @@ def run(quick: bool = False) -> list[dict]:
                     overhead=round(t_tiled / max(t_ref, 1e-9), 2),
                 )
             )
+    rows.extend(_bwd_kernel_rows(iters))
     return rows
+
+
+def _bwd_kernel_rows(iters: int) -> list[dict]:
+    """Pallas backward kernels on a representative stack conv (64x64 tile,
+    16->32 channels, K=3): dgrad/wgrad wall-clock (interpret mode off TPU -
+    correctness probe, not a speed claim) + max-err vs jax.vjp of the
+    reference conv."""
+    n, h, cin, cout, k, s = 2, HW[0], 16, 32, 3, 1
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (n, h, h, cin))
+    w = jax.random.normal(ks[1], (k, k, cin, cout)) * 0.1
+    oh = (h - k) // s + 1
+    g = jax.random.normal(ks[2], (n, oh, oh, cout))
+
+    _, vjp = jax.vjp(lambda x_, w_: conv2d_ref(x_, w_, None, stride=s), x, w)
+    dx_ref, dw_ref = vjp(g)
+    dgrad = jax.jit(lambda g_: conv2d_dgrad_tile(g_, w, (h, h), stride=s, interpret=True))
+    wgrad = jax.jit(lambda g_: conv2d_wgrad_tile(x, g_, k, stride=s, interpret=True))
+    # Scale-relative max-err: kernel outputs are unnormalized partial sums
+    # (O(OH*OW) accumulations), so absolute error scales with the reduction
+    # length; the full-step rows above cover normalized-gradient exactness.
+    dx_err = float(jnp.max(jnp.abs(dgrad(g) - dx_ref)) / jnp.max(jnp.abs(dx_ref)))
+    dw_err = float(jnp.max(jnp.abs(wgrad(g) - dw_ref)) / jnp.max(jnp.abs(dw_ref)))
+    t_dgrad = _time(dgrad, g, n=iters)
+    t_wgrad = _time(wgrad, g, n=iters)
+    return [
+        dict(
+            name="tiled_step/pallas/bwd/dgrad",
+            value=dx_err, backend="pallas", schedule="-",
+            dgrad_us=round(t_dgrad * 1e6, 1), grad_maxerr=dx_err,
+        ),
+        dict(
+            name="tiled_step/pallas/bwd/wgrad",
+            value=dw_err, backend="pallas", schedule="-",
+            wgrad_us=round(t_wgrad * 1e6, 1), grad_maxerr=dw_err,
+        ),
+    ]
 
 
 def check(rows) -> list[str]:
     out = []
     for r in rows:
+        if "/bwd/" in r["name"]:
+            which = r["name"].rsplit("/", 1)[-1]
+            out.append(
+                f"[pallas/bwd] {which} kernel == jax.vjp(reference): "
+                f"{'OK' if r['grad_maxerr'] < 1e-4 else 'OFF'} "
+                f"(rel err {r['grad_maxerr']:.2e})"
+            )
+            continue
         tag = f"{r['backend']}/{r['schedule']}"
         out.append(
             f"[{tag}] tiled loss == reference: "

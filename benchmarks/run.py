@@ -106,7 +106,9 @@ def main() -> int:
             rows = mod.run(**kwargs)
             dt = time.monotonic() - t0
             if rows:
-                keys = list(rows[0].keys())
+                # union of keys across rows: later rows (e.g. the backward-
+                # kernel rows) may carry columns the first row lacks
+                keys = list(dict.fromkeys(k for r in rows for k in r))
                 print(",".join(keys))
                 for r in rows:
                     print(",".join(str(r.get(k, "")) for k in keys))

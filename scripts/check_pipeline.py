@@ -4,10 +4,12 @@ Acceptance scenario for the unified API (subprocess target; see
 tests/test_spmd.py): a tiled YOLO train step built through
 ``train.trainer.make_train_step`` must match the untiled reference
 loss/grads/update to float tolerance on a 2x2 interpret-mode mesh, for
-both ``backend="xla"`` and ``backend="pallas"``; ``groups="auto"`` must
-pick the paper's Fig. 7/8 regimes (fine-grained under the Pi profile,
-coarse under the Jetson profile); and cross-tile BN statistics must use
-the *global* batch when a batch mesh axis is present.
+both ``backend="xla"`` and ``backend="pallas"``; with ``backend="pallas"``
+the deferred-step jaxpr must contain no ``conv_general_dilated`` (forward,
+dgrad and wgrad all lower through the Pallas kernels - DESIGN.md §6);
+``groups="auto"`` must pick the paper's Fig. 7/8 regimes (fine-grained
+under the Pi profile, coarse under the Jetson profile); and cross-tile BN
+statistics must use the *global* batch when a batch mesh axis is present.
 """
 import os
 
@@ -88,7 +90,19 @@ for backend in ("xla", "pallas"):
     gerr = max_leaf_err(grads_d, ref_grads)
     print(f"[{backend}] deferred loss err={lerr:.3e} grad maxerr={gerr:.3e}")
     assert lerr < 1e-5 * max(1.0, abs(float(ref_loss)))
-    assert gerr < 1e-4
+    assert gerr < 1e-5
+
+    # Pallas end-to-end on the 2x2 mesh: the multi-device train-step jaxpr
+    # must carry no XLA transpose-conv fallback (backward kernels included).
+    jx = str(jax.make_jaxpr(step)(
+        params0, x.reshape(MB, B, H, W, 3), t.reshape((MB, B) + out_shape[1:])
+    ))
+    if backend == "pallas":
+        assert "conv_general_dilated" not in jx, "pallas step fell back to XLA conv"
+    else:
+        assert "conv_general_dilated" in jx
+    print(f"[{backend}] deferred-step jaxpr conv fallback: "
+          f"{'present (oracle)' if backend == 'xla' else 'none (pallas end-to-end)'}")
 
     # full unified train step: loss metric + post-update params match the
     # reference trainer tail applied to the oracle grads

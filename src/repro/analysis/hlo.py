@@ -189,3 +189,30 @@ def collectives_with_loops(hlo_text: str) -> CollectiveStats:
         ring[kind] += _ring_bytes(kind, out_bytes, g) * mult
         per_op.append((kind, out_bytes, g, mult))
     return CollectiveStats(dict(count), dict(naive), dict(ring), per_op)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level kernel introspection (pre-lowering counterpart of the above)
+# ---------------------------------------------------------------------------
+
+
+def pallas_grids(jx) -> list[tuple]:
+    """All ``pallas_call`` grids anywhere in a (nested) closed jaxpr.
+
+    Walks custom_vjp/shard_map/scan sub-jaxprs, so a planner choice like
+    ``StackPlan.block_oh`` can be asserted to reach the kernel grid of a
+    full traced train step (tests/test_kernels.py, tests/test_pipeline.py).
+    """
+    import jax
+
+    grids: list[tuple] = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                grids.append(tuple(eqn.params["grid_mapping"].grid))
+        for sub in jax.core.subjaxprs(jaxpr):
+            walk(sub)
+
+    walk(jx.jaxpr)
+    return grids

@@ -11,25 +11,38 @@ backend cannot fuse, and always applies batch norm itself (BN needs
 cross-tile psums the backend never sees).
 
 Contract (DESIGN.md §4):
-  fn(x, w, b, *, stride, act) -> y
+  fn(x, w, b, *, stride, act[, block_oh]) -> y
     x: (N, H, W, Cin) halo-extended local tile     w: (K, K, Cin, Cout)
     b: (Cout,) or None                             y: (N, OH, OW, Cout)
   - VALID padding only; halo delivery is the executor's job.
-  - Must be differentiable: ``jax.grad`` through the executor derives the
-    paper's backward pass (rotated-filter delta conv, reversed halo
-    exchange, per-tile weight-grad partial sums), so a custom backend must
-    ship a VJP.  The Pallas backend reuses the XLA transpose-conv VJP
-    (kernels/conv2d_tiled/ops.py).
+  - Must be differentiable, and MAY ship its own VJP: ``jax.grad`` through
+    the executor derives the paper's backward pass (rotated-filter delta
+    conv, reversed halo exchange, per-tile weight-grad partial sums), and a
+    backend is free to implement the per-tile dgrad/wgrad itself instead of
+    relying on XLA transposition - the Pallas backend runs its own backward
+    kernels (kernels/conv2d_tiled/backward.py, DESIGN.md §6), so with
+    ``backend="pallas"`` a train step contains no XLA transpose-conv
+    fallback.  A backend VJP must produce cotangents exact vs. the ``xla``
+    transpose to float tolerance (the executor's gradient suites check
+    this per backend x schedule).
+  - ``block_oh`` (optional kwarg, planner-controlled via
+    ``StackPlan.block_oh``) re-tiles the compute's output-row blocking; a
+    backend without spatial blocking accepts and ignores it.
   - Must be exact vs. the ``xla`` oracle to float tolerance; the tiled
     exactness suites run against every registered backend.
+  - Mixed precision follows XLA promotion: y.dtype ==
+    ``jnp.result_type(x.dtype, w.dtype)`` (bf16 activations with fp32
+    filters produce fp32).
 
 ``xla`` (default) lowers to ``lax.conv_general_dilated``.  ``pallas`` runs
-the direct MXU kernel in ``kernels/conv2d_tiled`` - compiled on TPU,
-interpret-mode everywhere else so CI exercises the same code path on CPU.
+the direct MXU kernel in ``kernels/conv2d_tiled`` - forward AND backward -
+compiled on TPU, interpret-mode everywhere else so CI exercises the same
+code path on CPU.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Optional
 
 import jax
@@ -55,6 +68,7 @@ class ConvBackend:
     name: str
     fn: ConvFn
     fused_acts: frozenset[str]
+    accepts_block_oh: bool = True
 
     def __call__(
         self,
@@ -64,8 +78,19 @@ class ConvBackend:
         *,
         stride: int,
         act: str,
+        block_oh: Optional[int] = None,
     ) -> jax.Array:
-        return self.fn(x, w, b, stride=stride, act=act)
+        # block_oh is only forwarded when set, so simple backends whose fn
+        # lacks the kwarg keep working with the auto default.
+        if block_oh is None:
+            return self.fn(x, w, b, stride=stride, act=act)
+        if not self.accepts_block_oh:
+            raise ValueError(
+                f"conv backend {self.name!r} does not accept block_oh; "
+                "add a block_oh kwarg to its fn (ignoring it is fine) or "
+                "build the plan with block_oh=None"
+            )
+        return self.fn(x, w, b, stride=stride, act=act, block_oh=block_oh)
 
 
 _REGISTRY: dict[str, ConvBackend] = {}
@@ -74,7 +99,18 @@ _REGISTRY: dict[str, ConvBackend] = {}
 def register_conv_backend(
     name: str, fn: ConvFn, *, fused_acts: tuple[str, ...] = ("linear",)
 ) -> ConvBackend:
-    be = ConvBackend(name, fn, frozenset(fused_acts))
+    # Probe the signature once at registration: pre-contract backends
+    # (fn(x, w, b, *, stride, act)) still register and run, but a plan that
+    # sets block_oh gets a clear per-backend error instead of an opaque
+    # TypeError deep inside shard_map tracing.
+    try:
+        sig = inspect.signature(fn)
+        accepts = "block_oh" in sig.parameters or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in sig.parameters.values()
+        )
+    except (TypeError, ValueError):    # builtins/partials without signatures
+        accepts = True
+    be = ConvBackend(name, fn, frozenset(fused_acts), accepts_block_oh=accepts)
     _REGISTRY[name] = be
     return be
 
@@ -97,10 +133,16 @@ def conv_backend_names() -> list[str]:
 # ---------------------------------------------------------------------------
 
 
-def _xla_conv(x, w, b, *, stride: int, act: str) -> jax.Array:
+def _xla_conv(x, w, b, *, stride: int, act: str, block_oh: int | None = None) -> jax.Array:
+    # block_oh is a spatial-blocking hint; XLA has no exposed tiling knob,
+    # so it is accepted (contract) and ignored.
+    # lax.conv_general_dilated rejects mixed dtypes; promote explicitly so
+    # bf16 activations x fp32 filters follow numpy promotion (fp32 out),
+    # the semantics the contract pins for every backend.
+    dt = jnp.result_type(x.dtype, w.dtype)
     y = lax.conv_general_dilated(
-        x,
-        w,
+        x.astype(dt),
+        w.astype(dt),
         window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -118,15 +160,20 @@ register_conv_backend("xla", _xla_conv, fused_acts=tuple(ACTIVATIONS))
 # ---------------------------------------------------------------------------
 
 
-def _pallas_conv(x, w, b, *, stride: int, act: str) -> jax.Array:
+def _pallas_conv(
+    x, w, b, *, stride: int, act: str, block_oh: int | None = None
+) -> jax.Array:
     from repro.kernels.conv2d_tiled.ops import conv2d
 
     if b is None:
         # custom_vjp differentiates (x, w, b); a zero bias keeps the
         # signature uniform and its (discarded) gradient costs nothing.
-        b = jnp.zeros((w.shape[-1],), x.dtype)
+        # The conv *result* dtype (promoted), not x.dtype: under mixed
+        # precision (bf16 activations, fp32 filters) the epilogue must add
+        # the bias at the promoted precision, matching the xla backend.
+        b = jnp.zeros((w.shape[-1],), jnp.result_type(x.dtype, w.dtype))
     interpret = jax.default_backend() != "tpu"
-    return conv2d(x, w, b, stride, 0, act, interpret)
+    return conv2d(x, w, b, stride, 0, act, interpret, block_oh)
 
 
 register_conv_backend("pallas", _pallas_conv, fused_acts=("linear", "relu", "leaky"))

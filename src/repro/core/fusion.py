@@ -63,6 +63,7 @@ class StackPlan:
     group_of_layer: tuple[int, ...]
     backend: str = "xla"                         # conv compute path (core.backend)
     schedule: str = "sync"                       # "sync" | "overlap" (DESIGN.md §5)
+    block_oh: int | None = None                  # conv output-row block (None = auto)
 
     @property
     def n_layers(self) -> int:
@@ -95,6 +96,7 @@ def build_stack_plan(
     *,
     backend: str = "xla",
     schedule: str = "sync",
+    block_oh: int | None = None,
     hw: HardwareProfile | str | None = None,
     batch: int = 1,
 ) -> StackPlan:
@@ -110,10 +112,15 @@ def build_stack_plan(
     exactness oracle) or "overlap" (packed collectives + interior/boundary
     split execution, DESIGN.md §5); flows into the cost model when
     ``groups="auto"`` so grouping selection reflects communication hiding.
+    block_oh: the conv backend's output-row VMEM block (None = auto from the
+    kernel's accumulator budget); planner-controlled so the executor's VMEM
+    footprint is a plan-time choice, threaded to every backend call.
     """
     get_conv_backend(backend)   # fail fast on unknown backends
     if schedule not in ("sync", "overlap"):
         raise ValueError(f"schedule must be 'sync' or 'overlap'; got {schedule!r}")
+    if block_oh is not None and block_oh < 1:
+        raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
     layers = tuple(layers)
     if isinstance(groups, str):
         if groups != "auto":
@@ -186,6 +193,7 @@ def build_stack_plan(
         group_of_layer=tuple(group_of_layer),
         backend=backend,
         schedule=schedule,
+        block_oh=block_oh,
     )
 
 
@@ -244,6 +252,7 @@ def apply_stack_local(
                 mask_offmap=(lead != g.end),
                 backend=plan.backend,
                 batch_axis=batch_axis,
+                block_oh=plan.block_oh,
             )
         else:
             x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
@@ -261,6 +270,7 @@ def apply_stack_local(
                 mask_offmap=(l != g.end),
                 backend=plan.backend,
                 batch_axis=batch_axis,
+                block_oh=plan.block_oh,
             )
     return x
 

@@ -242,17 +242,19 @@ def apply_layer_local(
     mask_offmap: bool,
     backend: str = "xla",
     batch_axis: str | None = None,
+    block_oh: int | None = None,
 ) -> jax.Array:
     """One layer on a halo-extended local tile (input halo already present).
 
     out_halo: remaining halo on the produced output (0s when the layer is the
     last of its group).  mask_offmap zeroes off-map positions when the output
     still carries halo that a later layer will consume.  ``backend`` names
-    the registered conv compute path (core.backend); BN and any activation
-    the backend cannot fuse stay here, since BN needs cross-tile psums (over
-    the batch mesh axis too, when one is present).
+    the registered conv compute path (core.backend); ``block_oh`` is the
+    planner's output-row VMEM block, forwarded to the backend.  BN and any
+    activation the backend cannot fuse stay here, since BN needs cross-tile
+    psums (over the batch mesh axis too, when one is present).
     """
-    y, fused = _conv_or_pool(x, params, layer, backend)
+    y, fused = _conv_or_pool(x, params, layer, backend, block_oh)
     return _finish_layer(
         y,
         params,
@@ -270,7 +272,11 @@ def apply_layer_local(
 
 
 def _conv_or_pool(
-    x: jax.Array, params: dict, layer: LayerDef, backend: str
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    backend: str,
+    block_oh: int | None = None,
 ) -> tuple[jax.Array, bool]:
     """VALID conv/pool of one (sub-)slab through the backend registry.
 
@@ -284,7 +290,7 @@ def _conv_or_pool(
     fused = (not layer.batch_norm) and layer.act in be.fused_acts
     b = params["b"] if layer.use_bias else None
     y = be(x, params["w"], b, stride=layer.stride,
-           act=layer.act if fused else "linear")
+           act=layer.act if fused else "linear", block_oh=block_oh)
     return y, fused
 
 
@@ -385,6 +391,7 @@ def apply_group_lead_overlap(
     mask_offmap: bool,
     backend: str = "xla",
     batch_axis: str | None = None,
+    block_oh: int | None = None,
 ) -> jax.Array:
     """Group-lead layer under the overlap schedule: packed halo exchange +
     interior/boundary split execution (DESIGN.md §5).
@@ -427,12 +434,12 @@ def apply_group_lead_overlap(
         ext = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
         col_lo, col_hi = halo_exchange_1d_packed(ext, left, right, col_axis, dim=2)
         ext = _assemble(col_lo, ext, col_hi, left, right, dim=2)
-        y, fused = _conv_or_pool(ext, params, layer, backend)
+        y, fused = _conv_or_pool(ext, params, layer, backend, block_oh)
         return finish(y, fused=fused)
 
     # 2. interior compute from owned data only - independent of all recvs
     int_slab = x[:, rs.int_in_lo:rs.int_in_hi, cs.int_in_lo:cs.int_in_hi, :]
-    y_int, fused = _conv_or_pool(int_slab, params, layer, backend)
+    y_int, fused = _conv_or_pool(int_slab, params, layer, backend, block_oh)
 
     # 3. column exchange over the row-extended tile (carries the corners)
     x_rows = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
@@ -444,17 +451,17 @@ def apply_group_lead_overlap(
     mid = [y_int]
     if cs.n_lo:
         slab = ext[:, mid_rows, 0:(cs.i0 - 1) * s + k, :]
-        mid.insert(0, _conv_or_pool(slab, params, layer, backend)[0])
+        mid.insert(0, _conv_or_pool(slab, params, layer, backend, block_oh)[0])
     if cs.n_hi:
         slab = ext[:, mid_rows, (cs.i1 + 1) * s:(cs.out - 1) * s + k, :]
-        mid.append(_conv_or_pool(slab, params, layer, backend)[0])
+        mid.append(_conv_or_pool(slab, params, layer, backend, block_oh)[0])
     bands = [mid[0] if len(mid) == 1 else jnp.concatenate(mid, axis=2)]
     if rs.n_lo:
         slab = ext[:, 0:(rs.i0 - 1) * s + k, :, :]
-        bands.insert(0, _conv_or_pool(slab, params, layer, backend)[0])
+        bands.insert(0, _conv_or_pool(slab, params, layer, backend, block_oh)[0])
     if rs.n_hi:
         slab = ext[:, (rs.i1 + 1) * s:(rs.out - 1) * s + k, :, :]
-        bands.append(_conv_or_pool(slab, params, layer, backend)[0])
+        bands.append(_conv_or_pool(slab, params, layer, backend, block_oh)[0])
     y = bands[0] if len(bands) == 1 else jnp.concatenate(bands, axis=1)
     return finish(y, fused=fused)
 

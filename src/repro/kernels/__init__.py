@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 Each kernel subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
-ops.py (jit'd custom_vjp wrapper), ref.py (pure-jnp oracle).  Validated in
-interpret mode on CPU; BlockSpecs target TPU v5e (MXU 128-aligned).
+ops.py (jit'd custom_vjp wrapper), ref.py (pure-jnp oracle); conv2d_tiled
+additionally ships backward.py (dgrad/wgrad kernels wired into the
+custom_vjp, DESIGN.md §6).  Validated in interpret mode on CPU; BlockSpecs
+target TPU v5e (MXU 128-aligned).
 """
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.conv2d_tiled.backward import conv2d_dgrad_tile, conv2d_wgrad_tile
 from repro.kernels.conv2d_tiled.ops import conv2d
 from repro.kernels.rmsnorm.ops import rmsnorm

@@ -1,0 +1,168 @@
+"""Pallas backward kernels for the tiled conv2d (paper §4.1, DESIGN.md §6).
+
+The paper's training claim rests on both backward convolutions partitioning
+exactly like the forward one:
+
+* **dgrad** (delta backprop) - the input gradient of a VALID strided conv
+  is itself a VALID stride-1 convolution: dilate the cotangent by the
+  forward stride (insert S-1 zeros between rows/cols), pad by K-1, and
+  convolve with the 180°-rotated filter with I/O channels swapped
+  (``w_rot[u, v, co, ci] = w[K-1-u, K-1-v, ci, co]``).  That is *the same
+  compute shape as the forward pass*, so ``conv2d_dgrad_tile`` reuses the
+  forward Pallas kernel (``kernel.conv2d_tile``) verbatim - including its
+  OH-block spatial blocking and the 1 MiB VMEM accumulator budget - on the
+  transformed operands.  The dilation/rotation are pure data movement
+  (``lax.pad`` with interior padding, a reverse and a transpose); every MAC
+  runs on the MXU path.
+
+* **wgrad** (weight gradient) - a correlation of the (padded) input
+  activations with the cotangent:
+
+      dw[ki, kj, ci, co] = sum_{n, oh, ow} xp[n, S*oh+ki, S*ow+kj, ci]
+                                         * g[n, oh, ow, co]
+
+  ``conv2d_wgrad_tile`` runs a dedicated kernel with grid
+  ``(Cout/bc, K, K)`` - Cout-block major so one cotangent slab stays
+  resident in VMEM across the K² minor sweep - and reduces each tap to ONE
+  (OH·OW, Cin)ᵀ·(OH·OW, bc) MXU matmul per batch element, accumulated in
+  fp32.  The per-grid-cell accumulator is a single (Cin, bc) filter slab,
+  so wgrad never scales with the spatial extent the way a forward
+  accumulator would.  The kernel produces the *per-tile partial sum*; the
+  cross-tile summation is the deferred psum inserted by shard_map
+  transposition (paper's deferred weight aggregation).
+
+Both functions compute gradients of the *pre-activation* VALID conv; the
+fused bias+activation epilogue gradient (``act'`` applied to the cotangent)
+and the bias reduction live in ``ops._bwd``, which wires these kernels into
+``conv2d``'s custom_vjp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.conv2d_tiled.kernel import conv2d_tile
+
+
+def rotate_filter(w: jax.Array) -> jax.Array:
+    """HWIO filter -> 180°-rotated, channel-swapped filter for dgrad.
+
+    ``rotate_filter(w)[u, v, co, ci] == w[K-1-u, K-1-v, ci, co]``.
+    """
+    return jnp.transpose(w[::-1, ::-1], (0, 1, 3, 2))
+
+
+def conv2d_dgrad_tile(
+    g: jax.Array,                # (N, OH, OW, Cout) cotangent of the VALID conv
+    w: jax.Array,                # (K, K, Cin, Cout) forward HWIO filter
+    in_hw: tuple[int, int],      # (H, W) of the forward (padded) input
+    *,
+    stride: int = 1,
+    block_oh: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Input gradient of ``conv2d_tile(x, w, stride)`` as one forward-style
+    Pallas conv: stride-dilated cotangent * rotated filter, VALID, stride 1.
+
+    Returns (N, H, W, Cin) - the gradient w.r.t. the halo-extended/padded
+    input.  Rows/cols beyond the last forward window (``(H-K) % stride`` of
+    them) receive zero gradient via trailing zero-padding of the dilated
+    cotangent, so ragged strided geometries stay exact.
+    """
+    n, oh, ow, _ = g.shape
+    k = w.shape[0]
+    h, wdt = in_hw
+    rh = h - ((oh - 1) * stride + k)
+    rw = wdt - ((ow - 1) * stride + k)
+    if rh < 0 or rw < 0:
+        raise ValueError(
+            f"cotangent {g.shape} inconsistent with input {in_hw}, K={k}, S={stride}"
+        )
+    g_dil = lax.pad(
+        g,
+        jnp.zeros((), g.dtype),
+        ((0, 0, 0), (k - 1, k - 1 + rh, stride - 1), (k - 1, k - 1 + rw, stride - 1), (0, 0, 0)),
+    )
+    return conv2d_tile(
+        g_dil, rotate_filter(w), None,
+        stride=1, act="linear", block_oh=block_oh, interpret=interpret,
+    )
+
+
+def _wgrad_kernel(
+    x_ref,                       # (N, H, W, Cin) the whole padded input tile
+    g_ref,                       # (N, OH, OW, bc) one Cout slab of the cotangent
+    o_ref,                       # (1, 1, Cin, bc) one (ki, kj) filter slab
+    *,
+    stride: int,
+    oh: int,
+    ow: int,
+    n: int,
+):
+    ki = pl.program_id(1)
+    kj = pl.program_id(2)
+    cin = x_ref.shape[-1]
+    bc = g_ref.shape[-1]
+    rows = stride * (oh - 1) + 1
+    cols = stride * (ow - 1) + 1
+    acc = jnp.zeros((cin, bc), jnp.float32)
+    for nn in range(n):
+        xb = x_ref[nn, pl.ds(ki, rows), pl.ds(kj, cols)]       # (rows, cols, Cin)
+        if stride > 1:
+            xb = lax.slice(xb, (0, 0, 0), (rows, cols, cin), (stride, stride, 1))
+        gs = g_ref[nn]                                         # (OH, OW, bc)
+        acc += lax.dot_general(
+            xb.reshape(oh * ow, cin).astype(jnp.float32),
+            gs.reshape(oh * ow, bc).astype(jnp.float32),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+
+def conv2d_wgrad_tile(
+    x: jax.Array,                # (N, H, W, Cin) forward (padded) input tile
+    g: jax.Array,                # (N, OH, OW, Cout) cotangent of the VALID conv
+    kernel: int,
+    *,
+    stride: int = 1,
+    bc: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-tile weight-gradient partial sum: (K, K, Cin, Cout).
+
+    Grid (Cout/bc, K, K) - Cout-block major so the (N, OH, OW, bc) cotangent
+    slab loads once per Cout block and is reused across all K² taps; the
+    input tile is resident for the whole sweep (same VMEM-scale working-set
+    assumption as the forward kernel).  fp32 accumulation; the output dtype
+    defaults to the promoted input/cotangent dtype so mixed-precision
+    (bf16 activations, fp32 filters) callers pass ``out_dtype=w.dtype``.
+    """
+    n, h, wdt, cin = x.shape
+    _, oh, ow, cout = g.shape
+    k = kernel
+    if out_dtype is None:
+        out_dtype = jnp.result_type(x.dtype, g.dtype)
+    bc = min(bc, cout)
+    cout_p = -(-cout // bc) * bc
+    if cout_p != cout:
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
+
+    kernel_fn = functools.partial(_wgrad_kernel, stride=stride, oh=oh, ow=ow, n=n)
+    out = pl.pallas_call(
+        kernel_fn,
+        grid=(cout_p // bc, k, k),
+        in_specs=[
+            pl.BlockSpec((n, h, wdt, cin), lambda co, ki, kj: (0, 0, 0, 0)),
+            pl.BlockSpec((n, oh, ow, bc), lambda co, ki, kj: (0, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cin, bc), lambda co, ki, kj: (ki, kj, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((k, k, cin, cout_p), out_dtype),
+        interpret=interpret,
+    )(x, g)
+    return out[..., :cout]

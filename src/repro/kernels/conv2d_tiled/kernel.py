@@ -109,6 +109,9 @@ def conv2d_tile(
     cout = w.shape[-1]
     oh = (h - k) // stride + 1
     ow = (wdt - k) // stride + 1
+    # XLA promotion semantics: mixed-precision inputs (bf16 activations,
+    # fp32 filters) produce the promoted dtype, matching conv_general_dilated.
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
     bc = min(bc, cout)
     if block_oh is None:
         block_oh = _auto_block_oh(oh, ow, bc)
@@ -118,7 +121,7 @@ def conv2d_tile(
     if cout_p != cout:
         w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
     if b is None:
-        b = jnp.zeros((cout_p,), x.dtype)
+        b = jnp.zeros((cout_p,), out_dtype)
     elif cout_p != cout:
         b = jnp.pad(b, (0, cout_p - cout))
     # pad OH up to a row-block multiple (cropped after the call), and pad
@@ -143,7 +146,7 @@ def conv2d_tile(
             pl.BlockSpec((bc,), lambda i, co, ob: (co,)),
         ],
         out_specs=pl.BlockSpec((1, block_oh, ow, bc), lambda i, co, ob: (i, ob, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, oh_p, ow, cout_p), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, oh_p, ow, cout_p), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_oh * ow, bc), jnp.float32)],
         interpret=interpret,
     )(x, w, b)

@@ -1,12 +1,21 @@
-"""jit'd wrapper for the tiled conv2d kernel.
+"""jit'd wrapper for the tiled conv2d kernel - Pallas end-to-end.
 
 ``conv2d`` applies SAME/explicit padding then the VALID Pallas kernel -
 the same decomposition the distributed runtime uses (halo exchange delivers
-the padding/halo; the kernel computes the VALID interior).  Backward falls
-back to XLA's conv transpose via custom_vjp (exact; the paper's rotated-
-filter convolution).  ``block_oh`` selects the kernel's output-row block
-(None = auto from the VMEM accumulator budget); it only re-tiles compute,
-so it is a nondiff static arg like ``stride``.
+the padding/halo; the kernel computes the VALID interior).  The backward
+pass is Pallas too (DESIGN.md §6): the custom_vjp routes the input gradient
+through ``conv2d_dgrad_tile`` (stride-dilated cotangent * 180°-rotated
+filter - the paper's delta backprop - reusing the forward kernel) and the
+weight gradient through ``conv2d_wgrad_tile`` (per-tile activation/delta
+correlation partial sums), so a training step contains no XLA
+transpose-conv fallback.  The fused bias+activation epilogue is
+differentiated here: the forward output is stashed as a residual and
+``act'`` - recoverable from the output for every fusable activation - is
+applied to the cotangent before dgrad/wgrad; the bias gradient is the
+cotangent reduction over batch and space.  ``block_oh`` selects the
+kernel's output-row block (None = auto from the VMEM accumulator budget);
+it only re-tiles compute (forward and dgrad alike), so it is a nondiff
+static arg like ``stride``.
 """
 from __future__ import annotations
 
@@ -16,8 +25,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.conv2d_tiled.backward import conv2d_dgrad_tile, conv2d_wgrad_tile
 from repro.kernels.conv2d_tiled.kernel import conv2d_tile
-from repro.kernels.conv2d_tiled.ref import conv2d_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
@@ -35,19 +44,44 @@ def conv2d(
     )
 
 
+def _act_grad_from_out(y: jax.Array, act: str) -> jax.Array:
+    """act'(pre-activation), recovered from the *output* of the fused
+    epilogue - valid for every activation the kernel can fuse: linear
+    (handled by the caller), relu (y > 0 iff pre > 0, grad 0 at the kink,
+    matching ``jax.nn.relu``), and leaky (0 < |slope| so the sign of y is
+    the sign of pre)."""
+    if act == "relu":
+        return (y > 0).astype(y.dtype)
+    if act == "leaky":
+        return jnp.where(y > 0, jnp.ones((), y.dtype), jnp.asarray(0.1, y.dtype))
+    raise ValueError(f"no fused epilogue gradient for act={act!r}")
+
+
 def _fwd(x, w, b, stride, pad, act, interpret, block_oh):
-    return conv2d(x, w, b, stride, pad, act, interpret, block_oh), (x, w, b)
+    y = conv2d(x, w, b, stride, pad, act, interpret, block_oh)
+    # Stash the output instead of recomputing pre-act in _bwd: act' of every
+    # fusable activation is a function of the output (see _act_grad_from_out).
+    return y, (x, w, b, y)
 
 
 def _bwd(stride, pad, act, interpret, block_oh, res, g):
-    x, w, b = res
-
-    def f(x_, w_, b_):
-        xp = jnp.pad(x_, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-        return conv2d_ref(xp, w_, b_, stride=stride, act=act)
-
-    _, vjp = jax.vjp(f, x, w, b)
-    return vjp(g)
+    x, w, b, y = res
+    if act != "linear":
+        g = g * _act_grad_from_out(y, act)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
+    dxp = conv2d_dgrad_tile(
+        g, w, (hp, wp), stride=stride, block_oh=block_oh, interpret=interpret
+    )
+    dx = dxp[:, pad:hp - pad, pad:wp - pad, :] if pad else dxp
+    dw = conv2d_wgrad_tile(
+        xp, g, w.shape[0], stride=stride, out_dtype=w.dtype, interpret=interpret
+    )
+    # Bias grad is a pure reduction (no MACs); fp32 accumulation like the
+    # kernels, then the primal dtypes custom_vjp requires.  b=None (the
+    # bias-free forward) takes a None cotangent.
+    db = None if b is None else jnp.sum(g.astype(jnp.float32), axis=(0, 1, 2)).astype(b.dtype)
+    return dx.astype(x.dtype), dw, db
 
 
 conv2d.defvjp(_fwd, _bwd)

@@ -27,4 +27,5 @@ def conv2d_ref(
         y = jnp.maximum(y, 0.0)
     elif act == "leaky":
         y = jnp.where(y > 0, y, 0.1 * y)
-    return y.astype(x.dtype)
+    # promoted output dtype, matching conv_general_dilated on mixed inputs
+    return y.astype(jnp.result_type(x.dtype, w.dtype))

@@ -14,8 +14,18 @@ from repro.train.trainer import make_train_step
 
 SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
 
+# The two deepest reduced configs dominate this module's CPU runtime
+# (30-40 s per train-step test); tier-1 keeps the other architectures.
+_HEAVY_ARCHS = {"jamba-v0.1-52b", "deepseek-v3-671b"}
 
-@pytest.fixture(scope="module", params=ARCH_IDS)
+
+@pytest.fixture(
+    scope="module",
+    params=[
+        pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+        for a in ARCH_IDS
+    ],
+)
 def arch(request):
     return get_arch(request.param, reduced=True)
 

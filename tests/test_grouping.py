@@ -61,6 +61,7 @@ def test_batch_shifts_weight_amortisation():
     assert share8 < share1
 
 
+@pytest.mark.slow  # brute-force enumeration sweep; CI full-suite job only
 @settings(max_examples=10, deadline=None)
 @given(
     st.integers(2, 5),

@@ -16,6 +16,7 @@ from repro.core import (
     conv_backend_names,
     get_conv_backend,
     init_stack_params,
+    make_deferred_grad_step,
     make_tiled_loss,
     register_conv_backend,
 )
@@ -60,6 +61,23 @@ def test_unknown_schedule_fails_at_plan_time():
     assert build_stack_plan(HW, LAYERS, 1, 1, schedule="overlap").schedule == "overlap"
 
 
+def test_pre_contract_backend_rejects_block_oh_clearly():
+    """A backend registered with the pre-block_oh signature still runs, but
+    a plan that sets block_oh fails with a named error, not an opaque
+    TypeError inside tracing."""
+
+    def old_style(x, w, b, *, stride, act):
+        return _xla_conv(x, w, b, stride=stride, act=act)
+
+    be = register_conv_backend("xla-old-style", old_style)
+    assert not be.accepts_block_oh
+    x = jnp.zeros((1, 8, 8, 4))
+    w = jnp.zeros((3, 3, 4, 8))
+    be(x, w, None, stride=1, act="linear")          # no block_oh: fine
+    with pytest.raises(ValueError, match="xla-old-style.*block_oh"):
+        be(x, w, None, stride=1, act="linear", block_oh=2)
+
+
 def test_custom_backend_registers_and_runs():
     register_conv_backend("xla-test-alias", _xla_conv, fused_acts=("linear",))
     plan = build_stack_plan(HW, LAYERS, 1, 1, backend="xla-test-alias")
@@ -97,6 +115,116 @@ def test_backend_matches_untiled_reference(backend, schedule):
         for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr))
     )
     assert err < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# deferred weight aggregation vs jax.grad of the tiled loss
+# ---------------------------------------------------------------------------
+
+# BN-free: batch-norm statistics are per microbatch by design, so only
+# BN-free stacks are microbatch-split invariant (cf. grad-accum test below).
+DEFERRED_LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(3, 1, 8, 8, act="relu"),
+]
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    # overlap traces one interpret-mode Pallas conv per boundary slab and
+    # dominates this module's runtime; sync keeps backend coverage in tier-1
+    ["sync", pytest.param("overlap", marks=pytest.mark.slow)],
+)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_deferred_grad_step_matches_tiled_loss_grad(backend, schedule):
+    """make_deferred_grad_step with microbatches>1 == jax.grad of
+    make_tiled_loss on the concatenated batch, for every backend x schedule
+    - so the deferred-aggregation path runs through the Pallas backward
+    kernels too."""
+    micro, b = 2, 2
+    plan = build_stack_plan(HW, DEFERRED_LAYERS, 1, 1, backend=backend, schedule=schedule)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), DEFERRED_LAYERS)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (micro, b, *HW, 3))
+    ts = 0.05 * jax.random.normal(
+        jax.random.PRNGKey(2),
+        (micro, b, *plan.out_hw(), DEFERRED_LAYERS[-1].out_channels),
+    )
+    step = make_deferred_grad_step(plan, mesh, l2_loss_local, microbatches=micro)
+    loss_d, grads_d = jax.jit(step)(params, xs, ts)
+
+    loss_fn = make_tiled_loss(plan, mesh, l2_loss_local)
+    x_flat = xs.reshape(micro * b, *xs.shape[2:])
+    t_flat = ts.reshape(micro * b, *ts.shape[2:])
+    loss_r, grads_r = jax.value_and_grad(lambda p: loss_fn(p, x_flat, t_flat))(params)
+
+    assert float(loss_d) == pytest.approx(float(loss_r), rel=1e-5)
+    err = max(
+        float(jnp.max(jnp.abs(a - b_)))
+        for a, b_ in zip(jax.tree.leaves(grads_d), jax.tree.leaves(grads_r))
+    )
+    assert err < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# pallas end-to-end: no XLA transpose-conv fallback in the train step
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_train_step_jaxpr_has_no_conv_fallback():
+    """Acceptance: with backend="pallas" the jaxpr of a full tiled train
+    step (loss grad AND the deferred-aggregation step) contains no
+    conv_general_dilated - forward, dgrad and wgrad all lower through the
+    Pallas kernels (interpret-mode on CPU)."""
+    plan = build_stack_plan(HW, LAYERS, 1, 1, backend="pallas")
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jnp.zeros((2, *plan.out_hw(), LAYERS[-1].out_channels))
+    loss_fn = make_tiled_loss(plan, mesh, l2_loss_local)
+    jx = jax.make_jaxpr(jax.grad(lambda p: loss_fn(p, x, t)))(params)
+    assert "conv_general_dilated" not in str(jx)
+
+    step = make_deferred_grad_step(plan, mesh, l2_loss_local, microbatches=2)
+    jx2 = jax.make_jaxpr(step)(
+        params, x[None].repeat(2, 0), t[None].repeat(2, 0)
+    )
+    assert "conv_general_dilated" not in str(jx2)
+
+    # the xla backend keeps the fallback (it IS conv_general_dilated)
+    plan_x = build_stack_plan(HW, LAYERS, 1, 1, backend="xla")
+    loss_x = make_tiled_loss(plan_x, mesh, l2_loss_local)
+    jx3 = jax.make_jaxpr(jax.grad(lambda p: loss_x(p, x, t)))(params)
+    assert "conv_general_dilated" in str(jx3)
+
+
+def test_plan_block_oh_reaches_kernel_grid():
+    """StackPlan.block_oh flows planner -> executor -> backend -> kernel
+    grid: the OH-block grid dimension of some pallas_call must reflect the
+    plan's (non-default) value."""
+    from repro.analysis.hlo import pallas_grids as _pallas_grids
+
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jnp.zeros((2, *build_stack_plan(HW, LAYERS, 1, 1).out_hw(),
+                   LAYERS[-1].out_channels))
+    grids = {}
+    for boh in (None, 2):
+        plan = build_stack_plan(HW, LAYERS, 1, 1, backend="pallas", block_oh=boh)
+        loss_fn = make_tiled_loss(plan, mesh, l2_loss_local)
+        grids[boh] = _pallas_grids(jax.make_jaxpr(lambda p: loss_fn(p, x, t))(params))
+    # layer 0: 32x32 tile, K=3 P=1 -> OH=32; auto keeps one full-OH block,
+    # block_oh=2 must split it into 16 row blocks.
+    assert any(g[-1] == 1 for g in grids[None])
+    assert not any(g[-1] == 16 for g in grids[None])
+    assert any(g[-1] == 16 for g in grids[2])
+
+
+def test_plan_block_oh_validated():
+    with pytest.raises(ValueError, match="block_oh"):
+        build_stack_plan(HW, LAYERS, 1, 1, block_oh=0)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,11 @@ import sys
 
 import pytest
 
+# Heaviest tier of the suite: every test spawns a 4-fake-device subprocess
+# that traces shard_map'd train steps (minutes each on CPU).  Excluded from
+# tier-1 (-m "not slow"); the CI full-suite job runs them.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
