@@ -18,6 +18,14 @@ trajectory records the backward kernels' wall-clock and exactness per
 commit alongside the full-step numbers (whose grads now lower through
 those kernels when backend="pallas").
 
+Mode-sweep rows (PR 4): spatial-only vs hybrid (spatial->data crossover,
+DESIGN.md §7) plans are timed and exactness-checked on the 1x1 mesh, with
+the modeled per-device peak bytes of each mode on the paper-native 2x2
+grid and the jetson-edge cost model's own auto-crossover decision recorded
+alongside - so the trajectory tracks both the hybrid executor's measured
+overhead and the planner's regime choice per commit.  The bench-smoke CI
+job asserts the hybrid rows are present in BENCH_tiled.json.
+
 ``run(quick=True)`` (CI smoke) keeps the exactness checks but trims the
 timing loop.  Rows feed the persisted BENCH_tiled.json trajectory written
 by benchmarks/run.py.
@@ -100,7 +108,59 @@ def run(quick: bool = False) -> list[dict]:
                     overhead=round(t_tiled / max(t_ref, 1e-9), 2),
                 )
             )
+    rows.extend(_mode_sweep_rows(iters, params, x, t, lr, gr, t_ref))
     rows.extend(_bwd_kernel_rows(iters))
+    return rows
+
+
+def _mode_sweep_rows(iters, params, x, t, lr, gr, t_ref) -> list[dict]:
+    """Spatial-only vs hybrid (auto-crossover) mode sweep.
+
+    Execution/timing on the 1x1 mesh (like every measured row here); the
+    *decision* and the per-device peak bytes are modeled on the
+    paper-native 2x2 grid under the comm-bound jetson-edge profile.  When
+    the model picks no interior crossover for this reduced stack, the
+    hybrid row falls back to a mid-stack crossover so the reshard + data
+    path stays measured every commit (the modeled choice is recorded
+    either way as ``auto_crossover``)."""
+    from repro.core import peak_device_memory
+    from repro.core.grouping import JETSON_EDGE_PROFILE
+
+    auto2x2 = build_stack_plan(HW, LAYERS, 2, 2, "auto", hw=JETSON_EDGE_PROFILE,
+                               batch=4, crossover="auto")
+    auto_c = auto2x2.crossover
+    rows = []
+    for mode, cross in (
+        ("spatial", None),
+        ("hybrid", auto_c if auto_c not in (None, 0) else len(LAYERS) // 2),
+    ):
+        plan = build_stack_plan(HW, LAYERS, 1, 1, crossover=cross)
+        mesh = make_tile_mesh(1, 1)
+        tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+        tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
+        lerr = abs(float(tiled_loss(params, x, t)) - lr)
+        gt = tiled_grad(params)
+        gerr = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
+        )
+        t_tiled = _time(lambda: tiled_grad(params), n=iters)
+        mem = peak_device_memory(HW, LAYERS, plan.groups, 2, 2, batch=4)
+        rows.append(
+            dict(
+                name=f"tiled_step/mode/{mode}/fwd_loss_err",
+                value=lerr,
+                backend="xla",
+                schedule="sync",
+                mode=mode,
+                crossover="none" if plan.crossover is None else plan.crossover,
+                auto_crossover="none" if auto_c is None else auto_c,
+                tiled_us=round(t_tiled * 1e6, 1),
+                ref_us=round(t_ref * 1e6, 1),
+                grad_maxerr=gerr,
+                peak_bytes_2x2=int(mem["total"]),
+            )
+        )
     return rows
 
 
@@ -143,7 +203,21 @@ def _bwd_kernel_rows(iters: int) -> list[dict]:
 
 def check(rows) -> list[str]:
     out = []
+    modes = {r.get("mode") for r in rows if "/mode/" in r["name"]}
+    out.append(
+        "mode sweep rows (spatial + hybrid crossover) present: "
+        f"{'OK' if {'spatial', 'hybrid'} <= modes else 'OFF'}"
+    )
     for r in rows:
+        if "/mode/" in r["name"]:
+            tag = f"mode/{r['mode']}"
+            out.append(
+                f"[{tag}] crossover={r['crossover']} (model chose "
+                f"{r['auto_crossover']}) loss+grads == reference: "
+                f"{'OK' if r['value'] < 1e-4 and r['grad_maxerr'] < 1e-4 else 'OFF'} "
+                f"(peak 2x2 {r['peak_bytes_2x2'] / 2**20:.1f}MiB)"
+            )
+            continue
         if "/bwd/" in r["name"]:
             which = r["name"].rsplit("/", 1)[-1]
             out.append(

@@ -37,7 +37,9 @@ def cycle_time(devices: int, cores: int, batch: int = 1, include_weights: bool =
     groups = no_grouping(len(LAYERS))
     compute = boundary = sync = 0.0
     for g in groups:
-        c, b, s = _group_cost(LAYERS, ext, g.start, g.end, n, m, PI3_PROFILE, batch)
+        c, b, s, _hidden = _group_cost(
+            LAYERS, ext, g.start, g.end, n, m, PI3_PROFILE, batch
+        )
         compute += c
         boundary += b
         sync += s

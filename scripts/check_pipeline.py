@@ -10,6 +10,16 @@ dgrad and wgrad all lower through the Pallas kernels - DESIGN.md §6);
 ``groups="auto"`` must pick the paper's Fig. 7/8 regimes (fine-grained
 under the Pi profile, coarse under the Jetson profile); and cross-tile BN
 statistics must use the *global* batch when a batch mesh axis is present.
+
+Hybrid partition plans (DESIGN.md §7): a ``groups="auto",
+crossover="auto"`` plan under the comm-bound jetson-edge profile selects a
+mid-stack spatial->data crossover and its full train step (deferred
+microbatched grads + trainer update) matches the untiled reference to
+<=1e-5 on the 2x2 mesh for both backends; explicit crossovers at 0 /
+mid / last-layer match the reference too; the Pi profile selects no
+crossover; the per-device peak-memory estimator is reported; and the
+data-mode batch-divisibility error fires at trace time, not inside a
+collective.
 """
 import os
 
@@ -131,6 +141,161 @@ print(f"[auto] pi groups={[(g.start, g.end) for g in plan_pi.groups]}")
 print(f"[auto] jetson groups={[(g.start, g.end) for g in plan_jn.groups]}")
 assert len(plan_pi.groups) == len(CONVS), "Pi regime must select no-grouping"
 assert len(plan_jn.groups) < len(CONVS), "Jetson regime must select grouping"
+
+# ---------------------------------------------------------------------------
+# Hybrid partition plans (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+from repro.core import peak_device_memory  # noqa: E402
+from repro.core.grouping import JETSON_EDGE_PROFILE, PI3_PROFILE  # noqa: E402
+from repro.models.yolo import yolov2_16_layers as _yolo16  # noqa: E402
+
+# Acceptance: groups="auto" + crossover="auto" under the comm-bound
+# jetson-edge profile picks a mid-stack crossover on the depth-8 YOLO
+# prefix, and that hybrid plan trains exactly on the 2x2 mesh.
+HLAYERS = _yolo16()[:8]
+HB = 4                       # per-microbatch batch: divisible by the 2x2 grid
+hx = jax.random.normal(jax.random.PRNGKey(5), (MB * HB, 32, 32, 3))
+hplan_ref = build_stack_plan((32, 32), HLAYERS, 2, 2)
+hout = reference_forward(init_stack_params(key, HLAYERS), hx[:1], hplan_ref).shape
+ht = 0.05 * jax.random.normal(jax.random.PRNGKey(6), (MB * HB,) + hout[1:])
+hparams = init_stack_params(key, HLAYERS)
+
+
+def _ref_loss_grads(params, plan, x_, t_):
+    def f(p):
+        tot_s = tot_c = 0.0
+        for i in range(MB):
+            y = reference_forward(p, x_[i * HB:(i + 1) * HB], plan)
+            d = y - t_[i * HB:(i + 1) * HB]
+            tot_s = tot_s + jnp.sum(d * d)
+            tot_c = tot_c + float(np.prod(d.shape))
+        return tot_s / tot_c
+    return jax.value_and_grad(f)(params)
+
+
+href_loss, href_grads = _ref_loss_grads(hparams, hplan_ref, hx, ht)
+
+for backend in ("xla", "pallas"):
+    hplan = build_stack_plan(
+        (32, 32), HLAYERS, 2, 2, "auto", hw=JETSON_EDGE_PROFILE, batch=HB,
+        crossover="auto", backend=backend,
+    )
+    c = hplan.crossover
+    assert c is not None and 0 < c < len(HLAYERS), (
+        f"jetson-edge auto must pick a mid-stack crossover, got {c}"
+    )
+    step = make_deferred_grad_step(hplan, mesh, l2_loss_local, microbatches=MB)
+    loss_h, grads_h = jax.jit(step)(
+        hparams, hx.reshape(MB, HB, 32, 32, 3), ht.reshape((MB, HB) + hout[1:])
+    )
+    lerr = abs(float(loss_h - href_loss))
+    gerr = max_leaf_err(grads_h, href_grads)
+    print(f"[hybrid/{backend}] auto crossover={c} "
+          f"groups={[(g.start, g.end, g.mode) for g in hplan.groups]}")
+    print(f"[hybrid/{backend}] deferred loss err={lerr:.3e} grad maxerr={gerr:.3e}")
+    assert lerr < 1e-5 * max(1.0, abs(float(href_loss)))
+    assert gerr < 1e-5
+    jxh = str(jax.make_jaxpr(step)(
+        hparams, hx.reshape(MB, HB, 32, 32, 3), ht.reshape((MB, HB) + hout[1:])
+    ))
+    if backend == "pallas":
+        assert "conv_general_dilated" not in jxh, "hybrid pallas step fell back"
+
+    # full unified train step on the hybrid plan
+    harch = TiledCNNArch(plan=hplan, mesh=mesh, loss_local=l2_loss_local)
+    hcl, _ = clip_by_global_norm(href_grads, tcfg.grad_clip)
+    hparams1, _ = opt.update(hcl, opt.init(hparams), hparams, lr0)
+    init_state_h, train_step_h = make_train_step(harch, pcfg, tcfg)
+    state_h = init_state_h(jax.random.PRNGKey(0))
+    new_state_h, metrics_h = jax.jit(train_step_h)(state_h, {"x": hx, "t": ht})
+    muerr = max_leaf_err(new_state_h.params, hparams1)
+    print(f"[hybrid/{backend}] trainer update maxerr={muerr:.3e}")
+    assert abs(float(metrics_h["loss"] - href_loss)) < 1e-5 * max(1.0, abs(float(href_loss)))
+    assert muerr < 1e-5
+
+# explicit crossovers at 0 / mid / last layer on the depth-4 stack (xla).
+# Single microbatch of the full batch (BN statistics are per microbatch, so
+# the one-pass untiled loss is the oracle here).
+def _ref_once(p):
+    y = reference_forward(p, x, plan_ref)
+    d = y - t
+    return jnp.sum(d * d) / float(np.prod(d.shape))
+
+
+ref1_loss, ref1_grads = jax.value_and_grad(_ref_once)(params0)
+for cross in (0, 2, 3):
+    plan_c = build_stack_plan((H, W), LAYERS, 2, 2, crossover=cross)
+    step_c = make_deferred_grad_step(plan_c, mesh, l2_loss_local, microbatches=1)
+    loss_c, grads_c = jax.jit(step_c)(params0, x[None], t[None])
+    lerr = abs(float(loss_c - ref1_loss))
+    gerr = max_leaf_err(grads_c, ref1_grads)
+    print(f"[hybrid] explicit crossover={cross} loss err={lerr:.3e} grad maxerr={gerr:.3e}")
+    assert lerr < 1e-5 * max(1.0, abs(float(ref1_loss)))
+    assert gerr < 1e-5
+
+# grid-ragged data tail trains end-to-end: 12x12 -> pool -> pool leaves a
+# 3x3 output no 2x2 grid can shard; the data tail (and its batch-sharded
+# target binding) is exempt from divisibility, so the hybrid plan trains.
+RAG_LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+]
+rplan = build_stack_plan((12, 12), RAG_LAYERS, 2, 2, crossover=1)
+rparams = init_stack_params(key, RAG_LAYERS)
+rx = jax.random.normal(jax.random.PRNGKey(7), (4, 12, 12, 3))
+rt = 0.05 * jax.random.normal(jax.random.PRNGKey(8), (4, *rplan.out_hw(), 8))
+from repro.core import make_tiled_loss  # noqa: E402
+from repro.core.fusion import reference_loss  # noqa: E402
+
+rloss_fn = jax.jit(make_tiled_loss(rplan, mesh, l2_loss_local))
+rref = float(reference_loss(rparams, rx, rt, rplan, l2_loss_local))
+rerr = abs(float(rloss_fn(rparams, rx, rt)) - rref)
+rg = jax.jit(jax.grad(lambda p: rloss_fn(p, rx, rt)))(rparams)
+rgr = jax.grad(lambda p: reference_loss(p, rx, rt, rplan, l2_loss_local))(rparams)
+rgerr = max_leaf_err(rg, rgr)
+print(f"[hybrid] grid-ragged 3x3 tail on 2x2: loss err={rerr:.3e} grad maxerr={rgerr:.3e}")
+assert rerr < 1e-5 * max(1.0, abs(rref))
+assert rgerr < 1e-5
+
+# regimes on the full evaluation network (cost model): Pi -> none,
+# jetson-edge -> mid-stack (the paper's "tile the front, replicate the back")
+YOLO16 = _yolo16()
+from repro.core import crossover_of  # noqa: E402
+from repro.core.grouping import optimize_grouping as _opt  # noqa: E402
+
+g_pi = _opt((416, 416), YOLO16, 4, 6, PI3_PROFILE, batch=4, crossover="auto")
+g_je = _opt((416, 416), YOLO16, 1, 2, JETSON_EDGE_PROFILE, batch=2, crossover="auto")
+print(f"[regime] pi crossover={crossover_of(g_pi)} "
+      f"jetson-edge crossover={crossover_of(g_je)}")
+assert crossover_of(g_pi) is None, "Pi regime must keep everything spatial"
+cj = crossover_of(g_je)
+assert cj is not None and 0 < cj < len(YOLO16), "jetson-edge must pick mid-stack"
+
+# per-device peak memory report (paper Fig. 6 metric, per mode)
+for label, grid, prof in (
+    ("1x1", (1, 1), g_pi), ("4x6", (4, 6), g_pi), ("1x2-hybrid", (1, 2), g_je),
+):
+    mem = peak_device_memory((416, 416), YOLO16, prof, *grid, batch=2)
+    print(f"[memory/{label}] act={mem['activations'] / 2**20:.1f}MiB "
+          f"halo={mem['halo'] / 2**20:.2f}MiB filters={mem['filters'] / 2**20:.1f}MiB "
+          f"total={mem['total'] / 2**20:.1f}MiB")
+
+# data-mode batch divisibility: clear trace-time error, not a collective crash
+try:
+    bad = jax.eval_shape(
+        make_deferred_grad_step(
+            build_stack_plan((H, W), LAYERS, 2, 2, crossover=2),
+            mesh, l2_loss_local, microbatches=1,
+        ),
+        jax.eval_shape(lambda k: init_stack_params(k, LAYERS), jax.random.PRNGKey(0)),
+        jax.ShapeDtypeStruct((1, 2, H, W, 3), jnp.float32),
+        jax.ShapeDtypeStruct((1, 2) + out_shape[1:], jnp.float32),
+    )
+    raise AssertionError("indivisible data-mode batch must fail at trace time")
+except ValueError as e:
+    assert "divisible by the tile count" in str(e)
+    print("[hybrid] indivisible batch rejected at trace time")
 
 # BN batch_global regression: with a batch mesh axis, cross-tile BN must
 # normalise by the *global* batch, not the per-shard batch.

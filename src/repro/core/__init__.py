@@ -4,6 +4,9 @@ from repro.core.tiling import (
     Span,
     TileBox,
     Group,
+    MODES,
+    apply_crossover,
+    crossover_of,
     dependent_region_1d,
     forward_region_1d,
     partition_1d,
@@ -13,8 +16,16 @@ from repro.core.tiling import (
     uniform_grouping,
     build_tiling_plan,
     group_halo_width,
+    validate_profile,
 )
-from repro.core.spatial import LayerDef, init_stack_params, split_1d, stack_reference
+from repro.core.spatial import (
+    LayerDef,
+    apply_layer_data,
+    init_stack_params,
+    reshard_spatial_to_data,
+    split_1d,
+    stack_reference,
+)
 from repro.core.halo import (
     halo_exchange_1d,
     halo_exchange_1d_packed,
@@ -41,8 +52,10 @@ from repro.core.grouping import (
     HardwareProfile,
     PI3_PROFILE,
     JETSON_PROFILE,
+    JETSON_EDGE_PROFILE,
     TPU_V5E_PROFILE,
     PROFILES,
+    peak_device_memory,
     profile_cost,
     optimize_grouping,
 )

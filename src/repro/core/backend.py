@@ -14,7 +14,12 @@ Contract (DESIGN.md §4):
   fn(x, w, b, *, stride, act[, block_oh]) -> y
     x: (N, H, W, Cin) halo-extended local tile     w: (K, K, Cin, Cout)
     b: (Cout,) or None                             y: (N, OH, OW, Cout)
-  - VALID padding only; halo delivery is the executor's job.
+  - VALID padding only; halo delivery is the executor's job.  This is what
+    keeps every backend usable on *unhaloed full maps* too: a data-mode
+    layer (DESIGN.md §7) has no neighbours, so the executor materialises
+    the SAME-conv boundary locally with ``pad_for_valid`` and the backend
+    still sees its one contract shape - an extended NHWC slab to convolve
+    VALID, whether the extension arrived by ppermute or by jnp.pad.
   - Must be differentiable, and MAY ship its own VJP: ``jax.grad`` through
     the executor derives the paper's backward pass (rotated-filter delta
     conv, reversed halo exchange, per-tile weight-grad partial sums), and a
@@ -59,6 +64,22 @@ ACTIVATIONS: dict[str, Activation] = {
 }
 
 ConvFn = Callable[..., jax.Array]
+
+
+def pad_for_valid(x: jax.Array, pad: int, *, pool: bool = False) -> jax.Array:
+    """Materialise SAME-conv boundary semantics locally so a VALID-only
+    backend runs on an unhaloed full map (data-mode layers, DESIGN.md §7).
+
+    Zeros for convolutions (identical to the zero strips ``ppermute``
+    delivers to edge tiles on the spatial path) and -inf for max pools
+    (``lax.reduce_window``'s init value, matching the untiled reference).
+    """
+    if pad == 0:
+        return x
+    cfg = ((0, 0), (pad, pad), (pad, pad), (0, 0))
+    if pool:
+        return jnp.pad(x, cfg, constant_values=-jnp.inf)
+    return jnp.pad(x, cfg)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,26 +30,44 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.tiling import Group, no_grouping, validate_profile
+from repro.core.tiling import (
+    Group,
+    apply_crossover,
+    crossover_of,
+    no_grouping,
+    validate_profile,
+)
 from repro.core.halo import axis_size, halo_exchange_2d
 from repro.core.backend import get_conv_backend
 from repro.core.spatial import (
     LayerDef,
     apply_group_lead_overlap,
+    apply_layer_data,
     apply_layer_local,
+    reshard_spatial_to_data,
     stack_reference,
 )
 from repro.core.grouping import (
     HardwareProfile,
     PI3_PROFILE,
     PROFILES,
+    check_crossover_arg,
     optimize_grouping,
+    score_profile,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class StackPlan:
-    """Static geometry for an (n x m)-tiled, grouped conv stack."""
+    """Static geometry for an (n x m)-tiled, grouped conv stack.
+
+    Each group carries a partition ``mode`` ("spatial" | "data"); when a
+    data suffix exists, ``crossover`` records its first layer - the point
+    where the executor reshards the tile grid into batch shards
+    (DESIGN.md §7).  ``shard_hw`` entries at data-mode layer inputs are the
+    *full* map extents (nothing is spatially sharded there), and data-mode
+    map extents are exempt from the tile-grid divisibility requirement.
+    """
 
     layers: tuple[LayerDef, ...]
     groups: tuple[Group, ...]
@@ -64,6 +82,7 @@ class StackPlan:
     backend: str = "xla"                         # conv compute path (core.backend)
     schedule: str = "sync"                       # "sync" | "overlap" (DESIGN.md §5)
     block_oh: int | None = None                  # conv output-row block (None = auto)
+    crossover: int | None = None                 # first data-mode layer (None = all spatial)
 
     @property
     def n_layers(self) -> int:
@@ -87,6 +106,49 @@ def resolve_hw_profile(hw: HardwareProfile | str | None) -> HardwareProfile:
     return hw
 
 
+def _resolve_crossover(
+    input_hw,
+    layers,
+    groups: tuple[Group, ...],
+    crossover: int | str | None,
+    n: int,
+    m: int,
+    hw,
+    batch: int,
+    schedule: str,
+    mem_limit: float | None = None,
+) -> tuple[Group, ...]:
+    """Assign partition modes to an *explicit* grouping profile.
+
+    ``crossover=None`` keeps the modes the groups already carry; an int
+    forces the spatial->data transition at that layer (must align with a
+    group boundary; L = all-spatial, same as the optimizer's convention);
+    ``"auto"`` scores every group boundary (and "none") through the same
+    ``grouping.score_profile`` routine the joint optimizer uses (cost +
+    mem_limit feasibility) and keeps the cheapest."""
+    if crossover is None:
+        return groups
+    check_crossover_arg(crossover, len(layers))
+    if isinstance(crossover, int):
+        return tuple(apply_crossover(groups, crossover))
+    hwp = resolve_hw_profile(hw)
+    best = None
+    for c in [None] + [g.start for g in groups]:
+        cand = tuple(apply_crossover(groups, c))
+        cost = score_profile(
+            input_hw, layers, cand, n, m, hwp, batch, schedule, mem_limit
+        )
+        if cost is None:
+            continue
+        if best is None or cost < best[0]:
+            best = (cost, cand)
+    if best is None:
+        raise ValueError(
+            f"no crossover candidate of this profile fits mem_limit={mem_limit}"
+        )
+    return best[1]
+
+
 def build_stack_plan(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
@@ -99,6 +161,8 @@ def build_stack_plan(
     block_oh: int | None = None,
     hw: HardwareProfile | str | None = None,
     batch: int = 1,
+    crossover: int | str | None = None,
+    mem_limit: float | None = None,
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
 
@@ -115,6 +179,15 @@ def build_stack_plan(
     block_oh: the conv backend's output-row VMEM block (None = auto from the
     kernel's accumulator budget); planner-controlled so the executor's VMEM
     footprint is a plan-time choice, threaded to every backend call.
+
+    crossover (DESIGN.md §7): where the plan switches from spatial tiling
+    to data parallelism.  ``None`` respects whatever modes the groups carry
+    (all-spatial for plain profiles - full backward compatibility); an int
+    pins the first data-mode layer (must align with a group boundary);
+    ``"auto"`` lets the cost model choose - jointly with the grouping when
+    ``groups="auto"`` (the DP scans every candidate crossover), else among
+    the given profile's boundaries.  ``mem_limit`` (bytes/device) bounds
+    the modelled peak working set during ``groups="auto"`` selection.
     """
     get_conv_backend(backend)   # fail fast on unknown backends
     if schedule not in ("sync", "overlap"):
@@ -128,22 +201,32 @@ def build_stack_plan(
         groups = tuple(
             optimize_grouping(
                 input_hw, layers, n, m, resolve_hw_profile(hw), batch=batch,
-                schedule=schedule,
+                schedule=schedule, crossover=crossover, mem_limit=mem_limit,
             )
         )
-    elif groups is None:
-        groups = tuple(no_grouping(len(layers)))
     else:
-        groups = tuple(groups)
+        if groups is None:
+            groups = tuple(no_grouping(len(layers)))
+        else:
+            groups = tuple(groups)
+        groups = _resolve_crossover(
+            input_hw, layers, groups, crossover, n, m, hw, batch, schedule, mem_limit
+        )
     validate_profile(groups, len(layers))
+    cross = crossover_of(groups)
 
-    # Map + shard extents per layer.
+    # Map + shard extents per layer.  Data-mode layers hold *full* maps, so
+    # only the spatial prefix (through the crossover input, which the
+    # spatial part produces as shards) must divide by the tile grid.
     map_hw = [tuple(input_hw)]
     for l in layers:
         h, w = map_hw[-1]
         map_hw.append((l.out_extent(h), l.out_extent(w)))
     shard_hw = []
-    for (h, w) in map_hw:
+    for li, (h, w) in enumerate(map_hw):
+        if cross is not None and li > cross:
+            shard_hw.append((h, w))
+            continue
         if h % n or w % m:
             raise ValueError(
                 f"map extent {(h, w)} not divisible by tile grid {(n, m)}; "
@@ -151,15 +234,24 @@ def build_stack_plan(
             )
         shard_hw.append((h // n, w // m))
     for li, l in enumerate(layers):
+        if cross is not None and li >= cross:
+            break
         sh, sw = shard_hw[li]
         if sh % l.stride or sw % l.stride:
             raise ValueError(f"shard extent {(sh, sw)} not divisible by stride of layer {li}")
 
-    # Group halos + per-layer remaining halos.
+    # Group halos + per-layer remaining halos (zero for data-mode groups:
+    # full maps have no neighbours).
     group_halos: list[tuple[int, int, int, int]] = []
     rem_halos: list[tuple[int, int, int, int]] = [None] * len(layers)  # type: ignore
     group_of_layer: list[int] = [0] * len(layers)
     for gi, g in enumerate(groups):
+        if g.mode == "data":
+            group_halos.append((0, 0, 0, 0))
+            for l in g.layers:
+                group_of_layer[l] = gi
+                rem_halos[l] = (0, 0, 0, 0)
+            continue
         hl = hh = 0
         sprod = 1
         for l in g.layers:
@@ -194,6 +286,7 @@ def build_stack_plan(
         backend=backend,
         schedule=schedule,
         block_oh=block_oh,
+        crossover=cross,
     )
 
 
@@ -232,9 +325,32 @@ def apply_stack_local(
     so its interior compute carries no data dependence on the halo
     ``ppermute``s; remaining group layers are unchanged (their inputs
     already depend on everything).
+
+    Hybrid plans (DESIGN.md §7): at the first data-mode group the tile
+    grid is resharded into batch shards (``reshard_spatial_to_data``) and
+    every following layer runs on full, unhaloed maps with no collectives.
+    The global batch for BN statistics is read off the *entry* shape, so
+    it stays correct on both sides of the crossover.
     """
     bg = _global_batch(x.shape[0], batch_axis, batch_global)
     for gi, g in enumerate(plan.groups):
+        if g.mode == "data":
+            if gi == 0 or plan.groups[gi - 1].mode != "data":
+                x = reshard_spatial_to_data(x, row_axis, col_axis)
+            for l in g.layers:
+                x = apply_layer_data(
+                    x,
+                    params[l],
+                    plan.layers[l],
+                    map_out_hw=plan.map_hw[l + 1],
+                    row_axis=row_axis,
+                    col_axis=col_axis,
+                    batch_global=bg,
+                    backend=plan.backend,
+                    batch_axis=batch_axis,
+                    block_oh=plan.block_oh,
+                )
+            continue
         layers = list(g.layers)
         if plan.schedule == "overlap" and any(plan.group_halos[gi]):
             lead = layers.pop(0)
@@ -292,9 +408,13 @@ def make_tiled_forward(
     """shard_map'd forward: (params, x_global) -> y_global.
 
     Params replicated (paper: every device holds a full filter copy);
-    activations sharded (batch?, H/th, W/tw, C).
+    activations sharded (batch?, H/th, W/tw, C).  A hybrid plan's output
+    leaves in data layout instead: full maps with the batch dim sharded
+    over (batch_axis?, row_axis, col_axis) - the assembly order of
+    ``reshard_spatial_to_data``'s batch blocks.
     """
     aspec = P(batch_axis, row_axis, col_axis, None)
+    out_spec = _out_spec(plan, row_axis, col_axis, batch_axis)
     local = functools.partial(
         apply_stack_local,
         plan=plan,
@@ -307,9 +427,37 @@ def make_tiled_forward(
         lambda params, x: local(params, x),
         mesh=mesh,
         in_specs=(P(), aspec),
-        out_specs=aspec,
+        out_specs=out_spec,
         check_rep=False,
     )
+
+
+def _out_spec(plan: StackPlan, row_axis: str, col_axis: str, batch_axis: str | None):
+    """Output layout of the executor: spatially sharded for all-spatial
+    plans; batch-sharded full maps after a crossover."""
+    if plan.crossover is None:
+        return P(batch_axis, row_axis, col_axis, None)
+    axes = tuple(a for a in (batch_axis, row_axis, col_axis) if a is not None)
+    return P(axes, None, None, None)
+
+
+def _check_data_batch(plan: StackPlan, mesh: Mesh, batch: int, batch_axis: str | None):
+    """Named trace-time error for hybrid plans whose per-microbatch batch
+    cannot spread over the tile grid - raised before shard_map's generic
+    in_spec divisibility message can fire on the batch-sharded target."""
+    if plan.crossover is None:
+        return
+    if batch_axis is not None:
+        bsize = dict(zip(mesh.axis_names, mesh.devices.shape))[batch_axis]
+        if batch % bsize:
+            return   # let shard_map report the batch-axis mismatch itself
+        batch = batch // bsize
+    t = plan.n * plan.m
+    if batch % t:
+        raise ValueError(
+            f"data-mode batch split needs the per-microbatch batch ({batch}) "
+            f"divisible by the tile count ({plan.n}x{plan.m}={t})"
+        )
 
 
 def make_tiled_loss(
@@ -329,8 +477,18 @@ def make_tiled_loss(
     function reproduces the paper's tiled backward pass exactly (including
     the weight-gradient partial-sum aggregation, inserted by shard_map
     transposition for the replicated params operand).
+
+    Hybrid plans: the *target* is bound with the executor's data-side
+    out-spec (batch sharded over the tile axes, full maps) instead of the
+    spatial aspec, so ``loss_local`` sees matching y/t layouts with no
+    extra collective - shard_map hands each device exactly the batch block
+    ``reshard_spatial_to_data`` assigns it.  This also keeps grid-ragged
+    output extents trainable (the data tail is exempt from tile-grid
+    divisibility, and so must be its target).  Each (sample, position) is
+    still owned by exactly one device, so the psum'd mean is unchanged.
     """
     aspec = P(batch_axis, row_axis, col_axis, None)
+    tspec = _out_spec(plan, row_axis, col_axis, batch_axis)
     axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
 
     def fn(params, x, target):
@@ -344,13 +502,19 @@ def make_tiled_loss(
         c = lax.psum(c, axes)
         return s / c
 
-    return shard_map(
+    mapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(), aspec, aspec),
+        in_specs=(P(), aspec, tspec),
         out_specs=P(),
         check_rep=False,
     )
+
+    def loss(params, x, target):
+        _check_data_batch(plan, mesh, x.shape[0], batch_axis)
+        return mapped(params, x, target)
+
+    return loss
 
 
 def make_deferred_grad_step(
@@ -370,8 +534,18 @@ def make_deferred_grad_step(
 
     Returns (loss_mean, grads) with grads already aggregated.  x/target are
     (microbatches, b, H, W, C) globally.
+
+    Hybrid plans compose transparently: each microbatch's backward runs the
+    adjoint reshard (reduce-scatter + zero-padded batch scatter, derived by
+    AD) so the accumulated partials are always in the params' (replicated)
+    layout - the single batch-end psum, and therefore int8-EF compression
+    and microbatching, are untouched by the crossover.  The target is bound
+    with the data-side layout (batch sharded over the tile axes, full maps)
+    like ``make_tiled_loss``.
     """
     aspec = P(None, batch_axis, row_axis, col_axis, None)
+    ospec = _out_spec(plan, row_axis, col_axis, batch_axis)
+    tspec = P(None, *ospec)
     tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
 
     def local_loss(params, x, t):
@@ -405,13 +579,19 @@ def make_deferred_grad_step(
         loss = lax.psum(loss_sum, tile_axes) / cnt_g
         return loss, grads
 
-    return shard_map(
+    mapped = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(), aspec, aspec),
+        in_specs=(P(), aspec, tspec),
         out_specs=(P(), P()),
         check_rep=False,
     )
+
+    def step(params, xs, ts):
+        _check_data_batch(plan, mesh, xs.shape[1], batch_axis)
+        return mapped(params, xs, ts)
+
+    return step
 
 
 # ---------------------------------------------------------------------------

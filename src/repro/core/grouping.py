@@ -9,17 +9,28 @@ profile and a DP optimizer for the grouping profile, and ships profiles for
 the paper's two testbeds plus the TPU-v5e target.
 
 Cost of one training cycle (batch of ``batch`` samples) under profile hw for
-a grouping (s..e are inclusive layer ranges):
+a grouping (s..e are inclusive layer ranges; each group carries a partition
+``mode``, DESIGN.md §7):
 
-  compute   3x forward MACs over *extended* (halo-grown) tiles  / hw.flops
-            (fwd + delta backprop + weight grad each ~= the fwd MACs; §4.1)
-  boundary  2x per-group-input halo bytes / hw.link_bw (fwd + bwd)
-  sync      2x hw.sync_latency per group boundary
-  weights   once per batch: ring all-reduce of all filter bytes
+  spatial groups (the paper's tiling/fusing regime):
+    compute   3x forward MACs over *extended* (halo-grown) tiles / hw.flops
+              (fwd + delta backprop + weight grad each ~= the fwd MACs; §4.1)
+    boundary  2x per-group-input halo bytes / hw.link_bw (fwd + bwd)
+    sync      2x hw.sync_latency per group boundary
+  data groups (batch split over the same devices, full maps):
+    compute   3x forward MACs / (n*m) / hw.flops - exact, no halo redundancy
+    (no boundary, no sync: a data-mode layer exchanges no activations)
+  reshard   once per sample per direction at the spatial->data crossover:
+            the all-gather of the tile grid into full maps (fwd) and its
+            adjoint reduce-scatter (bwd), (T-1)/T of the map bytes each
+  weights   once per batch: ring all-reduce of the *replicated* filter
+            bytes - the data-mode tail under a hybrid plan, the full stack
+            under a pure-spatial plan (see ``profile_cost``)
 
-All terms scale with batch except the weight aggregation - exactly the
-paper's Fig. 7 observation that larger batches favour finer grouping on the
-Pis.
+All per-sample terms scale with batch except the weight aggregation -
+exactly the paper's Fig. 7 observation that larger batches favour finer
+grouping on the Pis - and the crossover trades the tail's halo+sync for
+the one-time reshard plus the tail's weight-aggregation charge.
 """
 from __future__ import annotations
 
@@ -27,7 +38,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.spatial import LayerDef, split_1d
-from repro.core.tiling import Group
+from repro.core.tiling import Group, crossover_of
 
 SCHEDULES = ("sync", "overlap")
 
@@ -67,6 +78,21 @@ JETSON_PROFILE = HardwareProfile(
     agg_bw=1.25e9,
 )
 
+# The comm-bound extrapolation the hybrid planner targets (DESIGN.md §7):
+# the Jetson pair on the same shared 100 Mbps Ethernet as the Pi cluster.
+# GPU-rate compute against a Pi-rate network makes the weight-dominated
+# tail's halo+sync untenable while the feature-dominated front still
+# amortises - ``crossover="auto"`` selects a mid-stack spatial->data
+# crossover here (asserted in tests), where the stock gigabit Jetson
+# profile flips all the way to data and the Pi profile to none.
+JETSON_EDGE_PROFILE = HardwareProfile(
+    name="jetson-edge-100m",
+    flops=235e9,
+    link_bw=12.5e6,
+    sync_latency=5e-3,
+    agg_bw=12.5e6,
+)
+
 TPU_V5E_PROFILE = HardwareProfile(
     name="tpu-v5e-chip",
     flops=98.5e12,            # 197 TFLOP/s bf16 = 98.5e12 MAC/s
@@ -76,7 +102,10 @@ TPU_V5E_PROFILE = HardwareProfile(
     dtype_bytes=2,
 )
 
-PROFILES = {p.name: p for p in (PI3_PROFILE, JETSON_PROFILE, TPU_V5E_PROFILE)}
+PROFILES = {
+    p.name: p
+    for p in (PI3_PROFILE, JETSON_PROFILE, JETSON_EDGE_PROFILE, TPU_V5E_PROFILE)
+}
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +121,22 @@ def _map_extents(input_hw: tuple[int, int], layers: Sequence[LayerDef]):
     return ext
 
 
+def _halo_widths(layers: Sequence[LayerDef], s: int, e: int) -> tuple[list[int], list[int]]:
+    """Eq. (1) backward recursion: both-side halo widths at the input of
+    each layer of group [s, e] (index k = layer s+k; entry e-s+1 = group
+    output, zero).  Shared by the cost model and the memory estimator so
+    the two can never desynchronise."""
+    halo_lo = [0] * (e - s + 2)
+    halo_hi = [0] * (e - s + 2)
+    for idx in range(e, s - 1, -1):
+        l = layers[idx]
+        p, q = l.padding, l.kernel - l.stride - l.padding
+        k = idx - s
+        halo_lo[k] = halo_lo[k + 1] * l.stride + p
+        halo_hi[k] = halo_hi[k + 1] * l.stride + q
+    return halo_lo, halo_hi
+
+
 def _group_cost(
     layers: Sequence[LayerDef],
     ext: Sequence[tuple[int, int]],
@@ -102,6 +147,7 @@ def _group_cost(
     hw: HardwareProfile,
     batch: int,
     schedule: str = "sync",
+    mode: str = "spatial",
 ) -> tuple[float, float, float, float]:
     """(compute_s, boundary_s, sync_s, hidden_s) for group [s, e] per cycle.
 
@@ -111,17 +157,33 @@ def _group_cost(
     concurrently with the halo collectives - ``min(boundary_s,
     interior_compute_s)`` of the transfer disappears from the critical
     path.  Zero under the sync schedule.
+
+    ``mode="data"``: the batch is split over the n*m devices and every
+    device holds full maps, so boundary/sync/hidden are all zero - a
+    data-mode layer exchanges no activations (its costs live in the
+    plan-level reshard and weight-aggregation terms, ``profile_cost``).
+    Compute is ``ceil(batch / tiles)`` *whole samples* per device: data
+    parallelism cannot split work within a sample, so a batch smaller than
+    the tile count idles devices - the reason the feature-map-dominated
+    front stays spatial at the paper's small edge batches, while spatial
+    tiling keeps all tiles busy even at batch 1.
     """
+    if mode == "data":
+        compute = 0.0
+        for idx in range(s, e + 1):
+            l = layers[idx]
+            oh, ow = ext[idx + 1]
+            if l.pool:
+                macs = oh * ow * max(l.in_channels, 1) * l.kernel * l.kernel
+                passes = 1.0
+            else:
+                macs = oh * ow * l.kernel * l.kernel * l.in_channels * l.out_channels
+                passes = 3.0
+            compute += passes * macs
+        return -(-batch // (n * m)) * compute / hw.flops, 0.0, 0.0, 0.0
     # Halo widths at the input of each layer of the group (interior tile =
-    # worst case: halo on both sides).  Built backwards per eq. (1).
-    halo_lo = [0] * (e - s + 2)
-    halo_hi = [0] * (e - s + 2)
-    for idx in range(e, s - 1, -1):
-        l = layers[idx]
-        p, q = l.padding, l.kernel - l.stride - l.padding
-        k = idx - s
-        halo_lo[k] = halo_lo[k + 1] * l.stride + p
-        halo_hi[k] = halo_hi[k + 1] * l.stride + q
+    # worst case: halo on both sides).
+    halo_lo, halo_hi = _halo_widths(layers, s, e)
 
     compute = 0.0
     for idx in range(s, e + 1):
@@ -167,6 +229,32 @@ def _group_cost(
     return compute_s, boundary_s, sync_s, hidden_s
 
 
+def _filter_bytes(layers: Sequence[LayerDef], idxs, dtype_bytes: int) -> float:
+    return sum(
+        layers[i].kernel ** 2 * layers[i].in_channels * layers[i].out_channels * dtype_bytes
+        for i in idxs
+        if not layers[i].pool
+    )
+
+
+def _reshard_cost(
+    ext, cross: int | None, layers: Sequence[LayerDef], tiles: int,
+    hw: HardwareProfile, batch: int,
+) -> float:
+    """One spatial->data reshard per sample per direction: the forward
+    all-gather of the tile grid into full maps and its backward adjoint
+    (reduce-scatter of the cotangent), each moving (T-1)/T of the full map
+    at the crossover layer's input, plus one collective launch each."""
+    if cross is None or tiles == 1:
+        return 0.0
+    h, w = ext[cross]
+    ch = max(layers[cross].in_channels, 1)
+    map_bytes = h * w * ch * hw.dtype_bytes
+    return batch * (
+        2.0 * map_bytes * (tiles - 1) / tiles / hw.link_bw + 2.0 * hw.sync_latency
+    )
+
+
 def profile_cost(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
@@ -177,37 +265,184 @@ def profile_cost(
     batch: int = 1,
     schedule: str = "sync",
 ) -> dict:
-    """Total cycle cost split by component for a grouping profile.
+    """Total cycle cost split by component for a (possibly hybrid) grouping
+    profile - per-group modes are read off the groups themselves.
 
     Under ``schedule="overlap"`` the ``hidden`` component (boundary time
     overlapped with interior compute) is subtracted from the total.
+
+    Weight aggregation counts only *replicated* filters: under a hybrid
+    plan the data-mode tail is the filter set whose per-batch data-parallel
+    all-reduce the model charges (spatial-group filter gradients are
+    per-tile partial sums whose batch-end aggregation the deferred schedule
+    folds into the same collective - a modeling choice recorded in
+    DESIGN.md §7); a pure-spatial plan keeps the full-stack charge, which
+    is the executor's actual batch-end psum payload.
     """
     _check_schedule(schedule)
     ext = _map_extents(input_hw, layers)
     compute = boundary = sync = hidden = 0.0
     for g in groups:
-        c, b, s_, h = _group_cost(layers, ext, g.start, g.end, n, m, hw, batch, schedule)
+        c, b, s_, h = _group_cost(
+            layers, ext, g.start, g.end, n, m, hw, batch, schedule, mode=g.mode
+        )
         compute += c
         boundary += b
         sync += s_
         hidden += h
-    # Weight aggregation: ring all-reduce of all filter bytes, once per batch.
     tiles = n * m
-    wbytes = sum(
-        l.kernel * l.kernel * l.in_channels * l.out_channels * hw.dtype_bytes
-        for l in layers
-        if not l.pool
-    )
+    cross = crossover_of(groups)
+    widx = range(len(layers)) if cross is None else range(cross, len(layers))
+    wbytes = _filter_bytes(layers, widx, hw.dtype_bytes)
     weights = 2.0 * wbytes * (tiles - 1) / tiles / hw.agg_bw + hw.sync_latency
-    total = compute + boundary + sync + weights - hidden
+    reshard = _reshard_cost(ext, cross, layers, tiles, hw, batch)
+    total = compute + boundary + sync + weights + reshard - hidden
     return {
         "compute": compute,
         "boundary": boundary,
         "sync": sync,
         "weights": weights,
+        "reshard": reshard,
         "hidden": hidden,
         "total": total,
     }
+
+
+# ---------------------------------------------------------------------------
+# Per-device peak-memory estimator (paper Fig. 6's metric, per mode)
+# ---------------------------------------------------------------------------
+
+
+def _spatial_group_mem(
+    layers: Sequence[LayerDef], ext, s: int, e: int, n: int, m: int,
+    batch: int, dtype_bytes: int,
+) -> tuple[float, float]:
+    """(activation_bytes, halo_bytes) of spatial group [s, e] on one device:
+    halo-extended input tiles stored for backward (x2: feature + delta map)
+    plus the transient group-input halo strips."""
+    halo_lo, halo_hi = _halo_widths(layers, s, e)
+    act = 0.0
+    for idx in range(s, e + 1):
+        l = layers[idx]
+        ih, iw = ext[idx]
+        k = idx - s
+        eh = ih // n + halo_lo[k] + halo_hi[k]
+        ew = iw // m + halo_lo[k] + halo_hi[k]
+        act += 2.0 * batch * eh * ew * max(l.in_channels, 1) * dtype_bytes
+    ih, iw = ext[s]
+    core = (ih // n) * (iw // m)
+    ext_elems = (ih // n + halo_lo[0] + halo_hi[0]) * (iw // m + halo_lo[0] + halo_hi[0])
+    halo = batch * (ext_elems - core) * max(layers[s].in_channels, 1) * dtype_bytes
+    return act, halo
+
+
+def peak_device_memory(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    groups: Sequence[Group],
+    n: int,
+    m: int,
+    *,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+) -> dict:
+    """Per-device training working set (bytes) under a (possibly hybrid)
+    grouping profile - the quantity behind the paper's "up to 8x memory
+    reduction per device" claim (Fig. 6), extended per partition mode:
+
+      activations  stored layer inputs x2 (feature map + same-extent delta
+                   map).  Spatial layers store the halo-*extended* tile for
+                   the full batch; data layers store ceil(batch / (n*m))
+                   *whole samples* of the full map (matching the cost
+                   model's idle-device term) - at divisible batch the same
+                   element count as an exact tile, so the crossover is
+                   memory-neutral on the activation term and the savings
+                   come from shed halos.
+      halo         transient group-input receive strips (spatial groups).
+      reshard_transient  the crossover instant's extra bytes: the tiled
+                   all-gathers hold the full map for the whole local
+                   microbatch before the batch slice drops to the steady
+                   share.
+      filters      weights + weight grads, full copy per device in *both*
+                   modes - the constant floor behind Fig. 6's diminishing
+                   returns.
+    """
+    ext = _map_extents(input_hw, layers)
+    tiles = n * m
+    act = halo = 0.0
+    for g in groups:
+        if g.mode == "data":
+            for idx in g.layers:
+                ih, iw = ext[idx]
+                act += (
+                    2.0 * -(-batch // tiles) * ih * iw
+                    * max(layers[idx].in_channels, 1) * dtype_bytes
+                )
+            continue
+        a, h = _spatial_group_mem(layers, ext, g.start, g.end, n, m, batch, dtype_bytes)
+        act += a
+        halo += h
+    # Reshard transient: the two tiled all-gathers materialise the full map
+    # for the entire local microbatch before the batch slice keeps 1/T of
+    # it - for one instant the crossover layer holds batch (not
+    # ceil(batch/T)) whole maps.  Charged as the bytes *above* the steady
+    # data-mode share already counted, so mem_limit filtering sees the real
+    # peak, not just the steady state.
+    reshard = 0.0
+    cross = crossover_of(groups)
+    if cross is not None and tiles > 1:
+        h_c, w_c = ext[cross]
+        c_c = max(layers[cross].in_channels, 1)
+        reshard = (batch - -(-batch // tiles)) * h_c * w_c * c_c * dtype_bytes
+    filters = 2.0 * _filter_bytes(layers, range(len(layers)), dtype_bytes)
+    return {
+        "activations": act,
+        "halo": halo,
+        "reshard_transient": reshard,
+        "filters": filters,
+        "total": act + halo + reshard + filters,
+    }
+
+
+def check_crossover_arg(crossover: int | str | None, n_layers: int) -> None:
+    """Validate the crossover argument form - shared by the optimizer and
+    the planner's explicit-groups path (``fusion._resolve_crossover``) so
+    the two accept exactly the same spellings."""
+    if crossover is None or crossover == "auto":
+        return
+    if isinstance(crossover, int):
+        if not 0 <= crossover <= n_layers:
+            raise ValueError(f"crossover must be in [0, {n_layers}]; got {crossover}")
+        return
+    raise ValueError(
+        f"crossover must be None, an int layer index, or 'auto'; got {crossover!r}"
+    )
+
+
+def score_profile(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    groups: Sequence[Group],
+    n: int,
+    m: int,
+    hw: HardwareProfile,
+    batch: int = 1,
+    schedule: str = "sync",
+    mem_limit: float | None = None,
+) -> float | None:
+    """Modeled cycle total for a candidate profile, or None when its
+    ``peak_device_memory`` total exceeds ``mem_limit``.  The single scoring
+    routine behind every crossover-candidate comparison - the optimizer's
+    joint DP scan and the planner's fixed-profile scan
+    (``fusion._resolve_crossover``) both call this, so cost and feasibility
+    can never diverge between the two."""
+    if mem_limit is not None:
+        mem = peak_device_memory(
+            input_hw, layers, groups, n, m, batch=batch, dtype_bytes=hw.dtype_bytes
+        )["total"]
+        if mem > mem_limit:
+            return None
+    return profile_cost(input_hw, layers, groups, n, m, hw, batch, schedule)["total"]
 
 
 def optimize_grouping(
@@ -219,14 +454,37 @@ def optimize_grouping(
     batch: int = 1,
     max_group: int | None = None,
     schedule: str = "sync",
+    crossover: int | str | None = None,
+    mem_limit: float | None = None,
 ) -> list[Group]:
-    """DP over group boundaries minimising modelled cycle time.
+    """DP over group boundaries minimising modelled cycle time, optionally
+    jointly with the spatial->data crossover layer.
 
     dp[e] = min over s<=e of dp[s-1] + cost(group(s, e)).  O(L^2) evaluations
     of the analytic model - instantaneous for real networks.  ``schedule``
     selects the executor the cost reflects ("overlap" credits boundary time
     hidden under the group lead's interior compute), so ``groups="auto"``
     planning tracks the executor it plans for.
+
+    ``crossover``: None keeps the legacy all-spatial optimum; an int fixes
+    the first data-mode layer; ``"auto"`` scans every candidate crossover c
+    (plus "none"), scoring dp-optimal-spatial-prefix[0:c) + reshard(c) +
+    data-tail(c..L) under the full ``profile_cost`` model - the data tail's
+    cost is grouping-independent (no halos, no syncs), so one spatial DP
+    table plus an O(L) scan is jointly optimal (brute-force-verified in
+    tests).  Because the weight-aggregation term depends on the crossover
+    (only the replicated data-tail filters are charged under a hybrid
+    plan), candidates are compared on ``profile_cost(...)["total"]``
+    directly, never on the DP table alone.
+
+    ``mem_limit`` (bytes, per device): candidate plans whose
+    ``peak_device_memory`` total exceeds the limit are discarded - the
+    knob that reproduces the paper's Fig. 6 memory/speed trade-off.  Raises
+    if no candidate fits.  This is a *feasibility filter on the cost-
+    optimal candidates*, not a full cost-under-memory-budget search: the DP
+    tracks only the cheapest grouping per prefix (plus a per-group
+    working-set prune), so a feasible-but-costlier grouping that the DP
+    never surfaces cannot be recovered by tightening the limit.
     """
     _check_schedule(schedule)
     L = len(layers)
@@ -239,15 +497,67 @@ def optimize_grouping(
     for e in range(1, L + 1):
         for s in range(max(1, e - max_group + 1), e + 1):
             c, b, y, h = _group_cost(layers, ext, s - 1, e - 1, n, m, hw, batch, schedule)
+            if mem_limit is not None:
+                # necessary condition: one group's own working set must fit
+                a, hl = _spatial_group_mem(layers, ext, s - 1, e - 1, n, m, batch,
+                                           hw.dtype_bytes)
+                if a + hl > mem_limit:
+                    continue
             cand = dp[s - 1] + c + b + y - h
             if cand < dp[e]:
                 dp[e] = cand
                 choice[e] = s - 1
-    groups: list[Group] = []
-    e = L
-    while e > 0:
-        s = choice[e]
-        groups.append(Group(s, e - 1))
-        e = s
-    groups.reverse()
-    return groups
+
+    def backtrack(e: int) -> list[Group]:
+        out: list[Group] = []
+        while e > 0:
+            s = choice[e]
+            out.append(Group(s, e - 1))
+            e = s
+        out.reverse()
+        return out
+
+    if crossover is None:
+        if dp[L] == INF:
+            raise ValueError(
+                f"no spatial grouping fits mem_limit={mem_limit}; raise the "
+                "limit or enable a crossover"
+            )
+        groups = backtrack(L)
+        if (
+            score_profile(input_hw, layers, groups, n, m, hw, batch, schedule,
+                          mem_limit)
+            is None
+        ):
+            raise ValueError(
+                "cost-optimal spatial grouping exceeds "
+                f"mem_limit={mem_limit}; raise the limit or enable a crossover"
+            )
+        return groups
+
+    check_crossover_arg(crossover, L)
+    if crossover == "auto":
+        candidates: list[int | None] = [None] + list(range(L))
+    else:
+        candidates = [None if crossover == L else crossover]
+
+    best: tuple[float, list[Group]] | None = None
+    for c in candidates:
+        prefix_len = L if c is None else c
+        if dp[prefix_len] == INF:
+            continue
+        groups = backtrack(prefix_len)
+        if c is not None:
+            groups = groups + [Group(c, L - 1, mode="data")]
+        cost = score_profile(
+            input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit
+        )
+        if cost is None:
+            continue
+        if best is None or cost < best[0]:
+            best = (cost, groups)
+    if best is None:
+        raise ValueError(
+            f"no grouping/crossover candidate fits mem_limit={mem_limit}"
+        )
+    return best[1]

@@ -33,8 +33,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.tiling import ConvSpec
-from repro.core.halo import halo_exchange_2d, halo_exchange_1d_packed
-from repro.core.backend import ACTIVATIONS as _ACTIVATIONS, Activation, get_conv_backend
+from repro.core.halo import axis_size, halo_exchange_2d, halo_exchange_1d_packed
+from repro.core.backend import (
+    ACTIVATIONS as _ACTIVATIONS,
+    Activation,
+    get_conv_backend,
+    pad_for_valid,
+)
 
 # ---------------------------------------------------------------------------
 # Layer definitions (geometry + compute attributes)
@@ -325,6 +330,91 @@ def _finish_layer(
         )
         y = y * m[None, :, :, None].astype(y.dtype)
     return y
+
+
+# ---------------------------------------------------------------------------
+# Hybrid partitioning: spatial->data reshard + data-mode (full-map) layers
+# ---------------------------------------------------------------------------
+
+
+def reshard_spatial_to_data(
+    x: jax.Array,
+    row_axis: str,
+    col_axis: str,
+    *,
+    dims: tuple[int, int] = (1, 2),
+) -> jax.Array:
+    """The spatial->data crossover collective (DESIGN.md §7): all-gather
+    the (row_axis x col_axis) tile grid into full feature maps, then split
+    the batch across the *same* devices.
+
+    ``x``: (b, h/n, w/m, c) core tile (halo fully consumed by the previous
+    group) -> (b/(n*m), h, w, c) batch shard.  Device (i, j) takes batch
+    block ``i*m + j``, matching a ``P((row_axis, col_axis))`` batch
+    sharding at the mesh level.  The backward pass is derived by AD: the
+    all-gather transposes to a reduce-scatter and the batch slice to a
+    zero-padded scatter, i.e. exactly the adjoint data->spatial reshard -
+    no hand-written collective, so microbatching and gradient compression
+    apply unchanged (the cotangent reaches the deferred accumulator in
+    spatial layout).
+
+    Requires the local batch divisible by n*m; fails at trace time with a
+    clear message otherwise (pick batch/grad_accum so each microbatch
+    spreads over the tile grid).
+    """
+    n = axis_size(row_axis)
+    m = axis_size(col_axis)
+    x = lax.all_gather(x, row_axis, axis=dims[0], tiled=True)
+    x = lax.all_gather(x, col_axis, axis=dims[1], tiled=True)
+    t = n * m
+    b = x.shape[0]
+    if b % t:
+        raise ValueError(
+            f"data-mode batch split needs the per-microbatch batch ({b}) "
+            f"divisible by the tile count ({n}x{m}={t})"
+        )
+    bs = b // t
+    d = lax.axis_index(row_axis) * m + lax.axis_index(col_axis)
+    return lax.dynamic_slice_in_dim(x, d * bs, bs, axis=0)
+
+
+def apply_layer_data(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    map_out_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    backend: str = "xla",
+    batch_axis: str | None = None,
+    block_oh: int | None = None,
+) -> jax.Array:
+    """One data-mode layer: full (unhaloed) maps, batch shard per device.
+
+    The SAME boundary is materialised locally (``pad_for_valid``) so the
+    registered VALID-only conv backends run unchanged - no collective
+    anywhere in a data-mode layer.  BN still needs its cross-device psums:
+    the tile axes now enumerate *batch shards*, so reducing over the same
+    axes with the global ``batch x H x W`` count keeps statistics exact
+    (each (sample, position) is owned by exactly one device)."""
+    xp = pad_for_valid(x, layer.padding, pool=layer.pool)
+    y, fused = _conv_or_pool(xp, params, layer, backend, block_oh)
+    return _finish_layer(
+        y,
+        params,
+        layer,
+        fused=fused,
+        out_halo=(0, 0, 0, 0),
+        shard_out_hw=map_out_hw,
+        map_out_hw=map_out_hw,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        batch_global=batch_global,
+        mask_offmap=False,
+        batch_axis=batch_axis,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -155,15 +155,30 @@ def partition_grid(height: int, width: int, n: int, m: int) -> list[list[TileBox
 # Layer grouping
 # ---------------------------------------------------------------------------
 
+#: Partition modes a group can run under (DESIGN.md §7).  ``"spatial"`` is
+#: the paper's tiling/fusing regime: the feature map is sharded over the
+#: tile grid and group inputs exchange halos.  ``"data"`` replicates the
+#: full feature map per device and shards the *batch* over the same mesh
+#: axes instead - the regime that wins for the weight-dominated tail of a
+#: CNN, reached through one reshard at the spatial->data crossover.
+MODES = ("spatial", "data")
+
 
 @dataclasses.dataclass(frozen=True)
 class Group:
     """Group (s, e): layers s..e inclusive; halo sync happens at the input of
     layer ``s`` only (paper §4.2 tuple (s, e) convention, adapted to
-    inclusive layer indices)."""
+    inclusive layer indices).
+
+    ``mode`` selects the group's partitioning: ``"spatial"`` (tile grid +
+    halos, the default and the paper's front-of-network regime) or
+    ``"data"`` (batch split over the same devices, full maps, no halos).
+    A valid profile is a spatial prefix followed by a data suffix - one
+    crossover at most (``validate_profile``)."""
 
     start: int
     end: int
+    mode: str = "spatial"
 
     @property
     def layers(self) -> range:
@@ -171,16 +186,58 @@ class Group:
 
 
 def validate_profile(groups: Sequence[Group], n_layers: int) -> None:
-    """A grouping profile must tile 0..n_layers-1 contiguously."""
+    """A grouping profile must tile 0..n_layers-1 contiguously, with valid
+    per-group modes forming a spatial prefix + data suffix (at most one
+    spatial->data transition; data->spatial would need a second reshard
+    the executor deliberately does not implement)."""
     if not groups:
         raise ValueError("empty grouping profile")
     expect = 0
+    seen_data = False
     for g in groups:
         if g.start != expect or g.end < g.start:
             raise ValueError(f"profile not contiguous at group {g}")
+        if g.mode not in MODES:
+            raise ValueError(f"group {g} mode must be one of {MODES}")
+        if g.mode == "data":
+            seen_data = True
+        elif seen_data:
+            raise ValueError(
+                f"spatial group {g} follows a data group; modes must be a "
+                "spatial prefix + data suffix (single crossover)"
+            )
         expect = g.end + 1
     if expect != n_layers:
         raise ValueError(f"profile covers {expect} layers, model has {n_layers}")
+
+
+def crossover_of(groups: Sequence[Group]) -> int | None:
+    """First data-mode *layer* index of a profile, or None when the profile
+    is all-spatial.  This is where the executor reshards (DESIGN.md §7)."""
+    for g in groups:
+        if g.mode == "data":
+            return g.start
+    return None
+
+
+def apply_crossover(groups: Sequence[Group], crossover: int | None) -> list[Group]:
+    """Assign modes to a grouping profile from a crossover layer index:
+    groups before ``crossover`` become spatial, groups from it onwards
+    data.  ``crossover`` must land on a group boundary (the reshard is a
+    group-input event, like a halo exchange); ``None`` means all-spatial."""
+    if crossover is None:
+        return [dataclasses.replace(g, mode="spatial") for g in groups]
+    out = []
+    for g in groups:
+        if g.start < crossover <= g.end:
+            raise ValueError(
+                f"crossover layer {crossover} falls inside group "
+                f"({g.start}, {g.end}); it must align with a group boundary"
+            )
+        out.append(
+            dataclasses.replace(g, mode="data" if g.start >= crossover else "spatial")
+        )
+    return out
 
 
 def no_grouping(n_layers: int) -> list[Group]:

@@ -8,11 +8,14 @@ production mesh (same code path the dry-run lowers).
 
 ``--arch yolov2-tiled`` launches the paper's distributed tiled-CNN training
 through the same unified pipeline: the planner picks the grouping profile
-(``--groups auto`` runs the cost-model DP against ``--hw-profile``) and the
-conv backend (``--backend pallas`` uses the MXU kernel; interpret-mode off
-TPU), and ``make_train_step`` supplies the deferred per-batch weight
-aggregation plus the full trainer tail (clipping, schedule, optional
-``--compress int8`` error-feedback compression of the weight all-reduce).
+(``--groups auto`` runs the cost-model DP against ``--hw-profile``), the
+spatial->data crossover (``--crossover auto|N|none`` - hybrid plans tile
+the feature-dominated front and batch-split the weight-dominated tail,
+DESIGN.md §7) and the conv backend (``--backend pallas`` uses the MXU
+kernel; interpret-mode off TPU), and ``make_train_step`` supplies the
+deferred per-batch weight aggregation plus the full trainer tail (clipping,
+schedule, optional ``--compress int8`` error-feedback compression of the
+weight all-reduce).
 """
 from __future__ import annotations
 
@@ -61,8 +64,12 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
                          "collectives + interior/boundary split)")
     ap.add_argument("--groups", default="none",
                     help="tiled: grouping profile - 'none', 'auto', or group size int")
+    ap.add_argument("--crossover", default="none",
+                    help="tiled: spatial->data crossover layer - 'none' (all "
+                         "spatial), 'auto' (cost-model choice; joint with the "
+                         "grouping DP under --groups auto), or a layer index N")
     ap.add_argument("--hw-profile", default="pi3-core",
-                    help="tiled: hardware profile for --groups auto")
+                    help="tiled: hardware profile for --groups/--crossover auto")
 
 
 def _resolve_groups(spec: str, n_layers: int):
@@ -73,6 +80,14 @@ def _resolve_groups(spec: str, n_layers: int):
     from repro.core.tiling import uniform_grouping
 
     return uniform_grouping(n_layers, int(spec))
+
+
+def _resolve_crossover(spec: str):
+    if spec == "none":
+        return None
+    if spec == "auto":
+        return "auto"
+    return int(spec)
 
 
 def _run_tiled(args) -> int:
@@ -89,11 +104,12 @@ def _run_tiled(args) -> int:
         schedule=args.schedule,
         hw=args.hw_profile,
         batch=args.batch,
+        crossover=_resolve_crossover(args.crossover),
     )
     print(
         f"plan: backend={arch.plan.backend} schedule={arch.plan.schedule} "
-        f"grid={args.grid}x{args.grid} "
-        f"groups={[(g.start, g.end) for g in arch.plan.groups]}"
+        f"grid={args.grid}x{args.grid} crossover={arch.plan.crossover} "
+        f"groups={[(g.start, g.end, g.mode) for g in arch.plan.groups]}"
     )
     pcfg = ParallelConfig(grad_accum=args.grad_accum)
     tcfg = TrainConfig(

@@ -14,6 +14,15 @@ batch end produces the final gradients the trainer tail consumes.
 Batches are dicts ``{"x": (B, H, W, C), "t": (B, OH, OW, Cout)}`` with the
 global batch B divisible by ``grad_accum`` - the same splitting convention
 as the LM path.
+
+Hybrid plans (``plan.crossover`` set, DESIGN.md §7) need no trainer-side
+changes: batch AND target still enter spatially sharded, the executor
+reshards both at the crossover, and the adjoint reshard inside each
+microbatch's backward keeps the deferred partial sums in the replicated
+params layout - so compression/clipping/optimizer are mode-agnostic.  The
+only visible constraint is that each microbatch (``B / grad_accum``) must
+divide by the tile count when a data suffix exists (checked at trace time
+with a clear error).
 """
 from __future__ import annotations
 
@@ -46,6 +55,11 @@ class TiledCNNArch:
     @property
     def out_channels(self) -> int:
         return self.plan.layers[-1].out_channels
+
+    @property
+    def crossover(self) -> Optional[int]:
+        """First data-mode layer of a hybrid plan (None = all spatial)."""
+        return self.plan.crossover
 
     def target_shape(self, batch: int) -> tuple[int, ...]:
         return (batch, *self.plan.out_hw(), self.out_channels)

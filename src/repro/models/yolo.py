@@ -88,20 +88,24 @@ def make_yolo_tiled_arch(
     schedule: str = "sync",
     hw: HardwareProfile | str | None = None,
     batch: int = 1,
+    crossover: int | str | None = None,
+    mem_limit: float | None = None,
     batch_norm: bool = True,
     mesh=None,
     loss_local=l2_loss_local,
 ) -> TiledCNNArch:
     """Planner -> arch bundle for the unified trainer: a YOLOv2 prefix of
     ``depth`` layers tiled n x m, with the conv backend, executor schedule
-    ("sync" | "overlap"), and grouping profile (including ``groups="auto"``
-    cost-model selection) chosen at plan time."""
+    ("sync" | "overlap"), grouping profile (including ``groups="auto"``
+    cost-model selection) and spatial->data ``crossover`` (None | layer
+    index | "auto"; DESIGN.md §7) chosen at plan time."""
     from repro.launch.mesh import make_tile_mesh
 
     layers = yolov2_16_layers(batch_norm=batch_norm)[:depth]
     plan = build_stack_plan(
         input_hw, layers, n, m, groups,
         backend=backend, schedule=schedule, hw=hw, batch=batch,
+        crossover=crossover, mem_limit=mem_limit,
     )
     return TiledCNNArch(
         plan=plan,

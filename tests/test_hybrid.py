@@ -1,0 +1,448 @@
+"""Hybrid partition plans: per-group modes + spatial->data crossover.
+
+Single-device (1x1-mesh) exactness of every crossover position against the
+untiled reference across backend x schedule, the joint grouping+crossover
+DP against brute force, the paper's regimes (mid-stack crossover on the
+comm-bound jetson-edge profile, none on the compute-bound Pi), the
+replicated-filters weight-aggregation fix, and the per-device peak-memory
+estimator.  Multi-tile (2x2) reshard exactness runs in a subprocess
+(scripts/check_pipeline.py via test_spmd.py).
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Group,
+    LayerDef,
+    apply_crossover,
+    build_stack_plan,
+    crossover_of,
+    init_stack_params,
+    make_deferred_grad_step,
+    make_tiled_loss,
+    no_grouping,
+    peak_device_memory,
+    validate_profile,
+)
+from repro.core.fusion import make_tiled_forward, reference_forward, reference_loss
+from repro.core.grouping import (
+    JETSON_EDGE_PROFILE,
+    PI3_PROFILE,
+    PROFILES,
+    TPU_V5E_PROFILE,
+    optimize_grouping,
+    profile_cost,
+)
+from repro.launch.mesh import make_tile_mesh
+from repro.models.yolo import l2_loss_local, make_yolo_tiled_arch, yolov2_16_layers
+
+LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(3, 1, 8, 16, act="leaky", batch_norm=True, use_bias=False),
+    LayerDef(1, 1, 16, 8, act="gelu"),
+]
+HW = (32, 32)
+YOLO = yolov2_16_layers()
+YHW = (416, 416)
+
+
+# ---------------------------------------------------------------------------
+# schema: Group.mode, crossover alignment, plan derivation
+# ---------------------------------------------------------------------------
+
+
+def test_mode_validation():
+    with pytest.raises(ValueError, match="mode must be one of"):
+        validate_profile([Group(0, 1, "model"), Group(2, 3)], 4)
+    # data before spatial = a second reshard the executor doesn't implement
+    with pytest.raises(ValueError, match="spatial prefix"):
+        validate_profile([Group(0, 1, "data"), Group(2, 3, "spatial")], 4)
+    validate_profile([Group(0, 1, "spatial"), Group(2, 3, "data")], 4)
+
+
+def test_apply_crossover_alignment():
+    groups = [Group(0, 1), Group(2, 3)]
+    with pytest.raises(ValueError, match="group boundary"):
+        apply_crossover(groups, 1)
+    out = apply_crossover(groups, 2)
+    assert [g.mode for g in out] == ["spatial", "data"]
+    assert crossover_of(out) == 2
+    assert crossover_of(apply_crossover(groups, None)) is None
+    # crossover at L leaves everything spatial (same as none)
+    assert crossover_of(apply_crossover(groups, 4)) is None
+
+
+def test_plan_crossover_derivation_and_halos():
+    plan = build_stack_plan(HW, LAYERS, 1, 1, crossover=2)
+    assert plan.crossover == 2
+    assert [g.mode for g in plan.groups] == ["spatial", "spatial", "data", "data"]
+    for gi, g in enumerate(plan.groups):
+        if g.mode == "data":
+            assert plan.group_halos[gi] == (0, 0, 0, 0)
+            for l in g.layers:
+                assert plan.rem_halos[l] == (0, 0, 0, 0)
+    # legacy plans: untouched defaults
+    legacy = build_stack_plan(HW, LAYERS, 1, 1)
+    assert legacy.crossover is None
+    assert all(g.mode == "spatial" for g in legacy.groups)
+
+
+def test_crossover_must_hit_group_boundary_in_plan():
+    groups = [Group(0, 1), Group(2, 3)]
+    with pytest.raises(ValueError, match="group boundary"):
+        build_stack_plan(HW, LAYERS, 1, 1, groups, crossover=3)
+
+
+def test_explicit_groups_crossover_range_validated():
+    """Out-of-range crossover on the explicit-groups path errors like the
+    groups="auto" path instead of silently no-opping."""
+    for bad in (-1, 12):
+        with pytest.raises(ValueError, match="crossover must be"):
+            build_stack_plan(HW, LAYERS, 1, 1, crossover=bad)
+    # L = all-spatial, the optimizer's convention
+    assert build_stack_plan(HW, LAYERS, 1, 1, crossover=len(LAYERS)).crossover is None
+
+
+def test_data_tail_exempt_from_grid_divisibility():
+    """Data-mode layers hold full maps, so only the spatial prefix (through
+    the crossover input) must divide by the tile grid - hybrid plans unlock
+    stacks whose late extents are grid-ragged (13x13 on a 2x2 grid here)."""
+    layers = [
+        LayerDef(3, 1, 3, 8, act="leaky"),
+        LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 52 -> 26
+        LayerDef(3, 1, 8, 8, act="relu"),
+        LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 26 -> 13: grid-ragged
+        LayerDef(3, 1, 8, 8, act="relu"),
+    ]
+    with pytest.raises(ValueError, match="not divisible by tile grid"):
+        build_stack_plan((52, 52), layers, 2, 2)
+    plan = build_stack_plan((52, 52), layers, 2, 2, crossover=3)
+    assert plan.crossover == 3
+    assert plan.shard_hw[0] == (26, 26)      # spatial input: sharded
+    assert plan.shard_hw[4] == (13, 13)      # data-mode input: full (ragged) map
+    # the crossover input itself is spatially produced, so it must divide
+    with pytest.raises(ValueError, match="not divisible by tile grid"):
+        build_stack_plan((52, 52), layers, 2, 2, crossover=4)
+
+
+# ---------------------------------------------------------------------------
+# reshard exactness vs the untiled reference (1x1 mesh; 2x2 in check_pipeline)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    ["sync", pytest.param("overlap", marks=pytest.mark.slow)],
+)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("crossover", [0, 2, 3])
+def test_hybrid_matches_untiled_reference(crossover, backend, schedule):
+    """Crossover at the input (0), mid-stack, and last layer: loss + grads
+    == untiled reference for every backend x schedule."""
+    plan = build_stack_plan(
+        HW, LAYERS, 1, 1, backend=backend, schedule=schedule, crossover=crossover
+    )
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jax.random.normal(jax.random.PRNGKey(2), (2, *plan.out_hw(), 8))
+    loss_fn = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+    ref = float(reference_loss(params, x, t, plan, l2_loss_local))
+    assert float(loss_fn(params, x, t)) == pytest.approx(ref, rel=1e-5)
+    g = jax.jit(jax.grad(lambda p: loss_fn(p, x, t)))(params)
+    gr = jax.grad(lambda p: reference_loss(p, x, t, plan, l2_loss_local))(params)
+    err = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr))
+    )
+    assert err < 1e-5
+
+
+def test_hybrid_forward_matches_reference():
+    """make_tiled_forward on a data-ending plan: batch-sharded full-map
+    output reassembles to the reference forward."""
+    plan = build_stack_plan(HW, LAYERS, 1, 1, crossover=2)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    y = jax.jit(make_tiled_forward(plan, mesh))(params, x)
+    yr = reference_forward(params, x, plan)
+    assert y.shape == yr.shape
+    assert float(jnp.max(jnp.abs(y - yr))) < 1e-5
+
+
+# BN-free (BN statistics are per microbatch by design; cf. test_pipeline)
+DEFERRED_LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky"),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(3, 1, 8, 8, act="relu"),
+]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_hybrid_deferred_grad_step_microbatched(backend):
+    """make_deferred_grad_step with microbatches>1 on a hybrid plan == grad
+    of make_tiled_loss on the concatenated batch: the adjoint reshard runs
+    inside each microbatch and the single batch-end psum is unchanged."""
+    micro, b = 2, 2
+    plan = build_stack_plan(HW, DEFERRED_LAYERS, 1, 1, backend=backend, crossover=2)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), DEFERRED_LAYERS)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (micro, b, *HW, 3))
+    ts = 0.05 * jax.random.normal(
+        jax.random.PRNGKey(2), (micro, b, *plan.out_hw(), 8)
+    )
+    step = make_deferred_grad_step(plan, mesh, l2_loss_local, microbatches=micro)
+    loss_d, grads_d = jax.jit(step)(params, xs, ts)
+    loss_fn = make_tiled_loss(plan, mesh, l2_loss_local)
+    x_flat = xs.reshape(micro * b, *xs.shape[2:])
+    t_flat = ts.reshape(micro * b, *ts.shape[2:])
+    loss_r, grads_r = jax.value_and_grad(lambda p: loss_fn(p, x_flat, t_flat))(params)
+    assert float(loss_d) == pytest.approx(float(loss_r), rel=1e-5)
+    err = max(
+        float(jnp.max(jnp.abs(a - b_)))
+        for a, b_ in zip(jax.tree.leaves(grads_d), jax.tree.leaves(grads_r))
+    )
+    assert err < 1e-5
+
+
+def test_hybrid_pallas_no_conv_fallback():
+    """backend="pallas" end-to-end holds through the crossover: the hybrid
+    train-step jaxpr has no conv_general_dilated (data-mode full-map convs
+    lower through the Pallas kernels too)."""
+    plan = build_stack_plan(HW, LAYERS, 1, 1, backend="pallas", crossover=2)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    t = jnp.zeros((2, *plan.out_hw(), 8))
+    loss_fn = make_tiled_loss(plan, mesh, l2_loss_local)
+    jx = jax.make_jaxpr(jax.grad(lambda p: loss_fn(p, x, t)))(params)
+    assert "conv_general_dilated" not in str(jx)
+
+
+def test_hybrid_arch_trains():
+    arch = make_yolo_tiled_arch(
+        input_hw=(32, 32), depth=4, n=1, m=1, groups="auto", crossover=2
+    )
+    assert arch.crossover == 2
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.train.trainer import make_train_step
+
+    tcfg = TrainConfig(lr=1e-2, optimizer="sgd", warmup=0, steps=20)
+    init_state, step = make_train_step(arch, ParallelConfig(grad_accum=2), tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    t = 0.05 * jax.random.normal(jax.random.PRNGKey(2), arch.target_shape(4))
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(3):
+        state, m = jstep(state, {"x": x, "t": t})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# joint grouping + crossover DP vs brute force
+# ---------------------------------------------------------------------------
+
+
+def _enumerate_hybrid_profiles(n_layers):
+    """All (contiguous spatial grouping of [0, c)) x (crossover c) plans."""
+    for c in [None] + list(range(n_layers)):
+        pre = n_layers if c is None else c
+        tail = [] if c is None else [Group(c, n_layers - 1, "data")]
+        if pre == 0:
+            yield tail
+            continue
+        for bits in itertools.product([0, 1], repeat=pre - 1):
+            groups, s = [], 0
+            for i, b in enumerate(bits):
+                if b:
+                    groups.append(Group(s, i))
+                    s = i + 1
+            groups.append(Group(s, pre - 1))
+            yield groups + tail
+
+
+@pytest.mark.parametrize("schedule", ["sync", "overlap"])
+@pytest.mark.parametrize(
+    "hw", [PI3_PROFILE, JETSON_EDGE_PROFILE], ids=["pi", "jetson-edge"]
+)
+@pytest.mark.parametrize("n_layers", [3, 4, 5])
+def test_joint_dp_matches_bruteforce(hw, n_layers, schedule):
+    """optimize_grouping(crossover="auto") is exactly optimal over the full
+    (grouping x crossover) space under the cost model."""
+    layers = YOLO[:n_layers]
+
+    def cost(groups):
+        validate_profile(groups, n_layers)
+        return profile_cost((64, 64), layers, groups, 2, 2, hw, batch=4,
+                            schedule=schedule)["total"]
+
+    best = min(cost(g) for g in _enumerate_hybrid_profiles(n_layers))
+    dp = optimize_grouping((64, 64), layers, 2, 2, hw, batch=4,
+                           schedule=schedule, crossover="auto")
+    assert cost(dp) == pytest.approx(best, rel=1e-9)
+
+
+def test_fixed_crossover_respected():
+    g = optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, batch=2, crossover=12)
+    assert crossover_of(g) == 12
+    g = optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, batch=2,
+                          crossover=len(YOLO))
+    assert crossover_of(g) is None
+    with pytest.raises(ValueError, match="crossover must be"):
+        optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, crossover=99)
+    with pytest.raises(ValueError, match="crossover must be"):
+        optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, crossover="sideways")
+
+
+# ---------------------------------------------------------------------------
+# the paper's regimes + acceptance comparisons
+# ---------------------------------------------------------------------------
+
+
+def test_pi_profile_selects_no_crossover():
+    """Compute-bound Pi cluster over 100 Mbps: resharding full maps is
+    brutal and data mode idles 23 of 24 tiles at small batch - spatial
+    everywhere, exactly the paper's regime."""
+    for batch in (1, 4, 8):
+        g = optimize_grouping(YHW, YOLO, 4, 6, PI3_PROFILE, batch=batch,
+                              crossover="auto")
+        assert crossover_of(g) is None
+
+
+def test_jetson_edge_profile_selects_midstack_crossover():
+    """GPU-rate compute on a Pi-rate network: the weight-dominated tail's
+    halo+sync swamps its compute, so the optimizer tiles the
+    feature-dominated front and batch-splits the tail - a strictly interior
+    crossover (the paper's "tile the front, replicate the back")."""
+    for batch in (1, 2, 4):
+        g = optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, batch=batch,
+                              crossover="auto")
+        c = crossover_of(g)
+        assert c is not None and 0 < c < len(YOLO)
+        # the crossover lands in the weight-dominated 512-channel stage
+        assert c >= 12
+
+
+def test_auto_crossover_cost_beats_spatial_only():
+    """Acceptance: the joint-auto plan's modeled cost <= (and on the
+    comm-bound shipped profiles strictly <) the spatial-only auto plan's."""
+    for name, hw in PROFILES.items():
+        auto = optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover="auto")
+        spat = optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover=None)
+        ca = profile_cost(YHW, YOLO, auto, 1, 2, hw, batch=2)["total"]
+        cs = profile_cost(YHW, YOLO, spat, 1, 2, hw, batch=2)["total"]
+        assert ca <= cs * (1 + 1e-12), name
+    edge = optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, batch=2,
+                             crossover="auto")
+    spat = optimize_grouping(YHW, YOLO, 1, 2, JETSON_EDGE_PROFILE, batch=2)
+    assert (
+        profile_cost(YHW, YOLO, edge, 1, 2, JETSON_EDGE_PROFILE, batch=2)["total"]
+        < profile_cost(YHW, YOLO, spat, 1, 2, JETSON_EDGE_PROFILE, batch=2)["total"]
+    )
+
+
+def test_weights_term_counts_only_replicated_filters():
+    """Satellite fix: under a hybrid plan the per-batch weight all-reduce
+    charges the data-mode (replicated) tail only; a pure-spatial plan keeps
+    the full-stack charge."""
+    L = len(YOLO)
+    spatial = no_grouping(L)
+    hybrid = apply_crossover(spatial, 12)
+    hw = JETSON_EDGE_PROFILE
+    c_sp = profile_cost(YHW, YOLO, spatial, 1, 2, hw)
+    c_hy = profile_cost(YHW, YOLO, hybrid, 1, 2, hw)
+    assert c_hy["weights"] < c_sp["weights"]
+    # exact: the hybrid charge is the data-tail filter bytes only
+    wtail = sum(
+        l.kernel ** 2 * l.in_channels * l.out_channels * hw.dtype_bytes
+        for l in YOLO[12:] if not l.pool
+    )
+    assert c_hy["weights"] == pytest.approx(
+        2.0 * wtail * (2 - 1) / 2 / hw.agg_bw + hw.sync_latency
+    )
+    # and the reshard term exists only for hybrid plans
+    assert c_sp["reshard"] == 0.0
+    assert c_hy["reshard"] > 0.0
+
+
+def test_data_groups_have_no_boundary_or_sync_cost():
+    all_data = [Group(0, len(YOLO) - 1, "data")]
+    c = profile_cost(YHW, YOLO, all_data, 2, 2, PI3_PROFILE, batch=4)
+    assert c["boundary"] == 0.0 and c["sync"] == 0.0 and c["hidden"] == 0.0
+    assert c["compute"] > 0 and c["weights"] > 0 and c["reshard"] > 0
+
+
+# ---------------------------------------------------------------------------
+# per-device peak-memory estimator
+# ---------------------------------------------------------------------------
+
+
+def test_memory_estimator_reproduces_paper_reduction():
+    """Paper Fig. 6: tiling divides the activation working set by ~the tile
+    count (filters are the constant floor)."""
+    prof = no_grouping(len(YOLO))
+    m1 = peak_device_memory(YHW, YOLO, prof, 1, 1)
+    m24 = peak_device_memory(YHW, YOLO, prof, 4, 6)
+    assert m24["filters"] == m1["filters"]                # full copy per device
+    assert m1["activations"] / m24["activations"] > 8.0   # "up to 8x" claim
+    assert m1["total"] / m24["total"] > 4.0
+
+
+def test_memory_estimator_hybrid_activation_neutral():
+    """The crossover is memory-neutral on the activation term (tile x full
+    batch == full map x batch shard) - the savings it keeps are shed halos,
+    and the one-instant reshard transient (full gathered map for the whole
+    local microbatch) is charged explicitly."""
+    spatial = no_grouping(len(YOLO))
+    hybrid = apply_crossover(spatial, 12)
+    ms = peak_device_memory(YHW, YOLO, spatial, 2, 2, batch=4)
+    mh = peak_device_memory(YHW, YOLO, hybrid, 2, 2, batch=4)
+    assert mh["activations"] == pytest.approx(ms["activations"], rel=0.02)
+    assert mh["halo"] < ms["halo"]
+    assert ms["reshard_transient"] == 0.0
+    # (batch - ceil(batch/T)) whole maps at the crossover input
+    assert mh["reshard_transient"] == pytest.approx(3 * 26 * 26 * 256 * 4)
+    assert mh["total"] <= ms["total"] + mh["reshard_transient"]
+
+
+def test_mem_limit_constrains_auto_grouping():
+    """A tight per-device budget steers the optimizer away from halo-grown
+    fused groups; an impossible budget raises."""
+    hw = JETSON_EDGE_PROFILE
+    free = optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover="auto")
+    free_mem = peak_device_memory(YHW, YOLO, free, 1, 2, batch=2)["total"]
+    limit = free_mem * 0.999
+    tight = optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover="auto",
+                              mem_limit=limit)
+    assert peak_device_memory(YHW, YOLO, tight, 1, 2, batch=2)["total"] <= limit
+    with pytest.raises(ValueError, match="mem_limit"):
+        optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover="auto",
+                          mem_limit=1.0)
+    # the legacy crossover=None path enforces the limit too (the constant
+    # filters term alone sinks any spatial plan under a 1-byte budget)
+    with pytest.raises(ValueError, match="mem_limit"):
+        optimize_grouping(YHW, YOLO, 1, 2, hw, batch=2, crossover=None,
+                          mem_limit=1.0)
+
+
+def test_memory_estimator_data_mode_uses_whole_samples():
+    """batch < tiles: a data-mode device still holds >= 1 whole sample
+    (ceil, matching the cost model's idle-device term), not a fraction."""
+    hybrid = apply_crossover(no_grouping(len(YOLO)), 0)
+    m1 = peak_device_memory(YHW, YOLO, hybrid, 2, 2, batch=1)
+    m4 = peak_device_memory(YHW, YOLO, hybrid, 2, 2, batch=4)
+    assert m1["activations"] == pytest.approx(m4["activations"])
+
+
+def test_tpu_profile_auto_crossover_valid():
+    g = optimize_grouping((64, 64), YOLO[:6], 4, 4, TPU_V5E_PROFILE, batch=16,
+                          crossover="auto")
+    validate_profile(g, 6)
