@@ -109,7 +109,71 @@ def run(quick: bool = False) -> list[dict]:
                 )
             )
     rows.extend(_mode_sweep_rows(iters, params, x, t, lr, gr, t_ref))
+    rows.extend(_hetero_sweep_rows(iters))
     rows.extend(_bwd_kernel_rows(iters))
+    return rows
+
+
+def _hetero_sweep_rows(iters: int) -> list[dict]:
+    """Heterogeneous-cluster sweep (DESIGN.md §8): uniform vs FLOPs-balanced
+    tile partition on a mixed ``pi3x3+jetson`` 2x2 ClusterSpec - modeled
+    makespan from the max-over-devices cost model plus the *measured* step
+    time of each partition's executor on a real 2x2 (fake-device) mesh,
+    exactness-checked against the untiled reference.  The balanced row runs
+    the padded-tile ragged executor, so this keeps the ragged path measured
+    every commit.  Skipped (empty) when fewer than 4 devices are visible;
+    benchmarks/run.py fakes 4 host devices for the trajectory run."""
+    import jax as _jax
+
+    if len(_jax.devices()) < 4:
+        return []
+    from repro.core.grouping import parse_cluster_spec, profile_cost
+    from repro.core.tiling import TilePartition
+    from repro.core.fusion import build_stack_plan as _bsp
+
+    cluster = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    mesh = make_tile_mesh(2, 2)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *HW, 3))
+    plan0 = build_stack_plan(HW, LAYERS, 1, 1)
+    t = jax.random.normal(
+        jax.random.PRNGKey(2), (2, *plan0.out_hw(), LAYERS[-1].out_channels)
+    )
+    ref_loss = jax.jit(lambda p: reference_loss(p, x, t, plan0, l2_loss_local))
+    lr = float(ref_loss(params))
+    gr = jax.jit(jax.grad(lambda p: ref_loss(p)))(params)
+
+    rows = []
+    for kind in ("uniform", "balanced"):
+        part = TilePartition.even(*HW, 2, 2) if kind == "uniform" else None
+        plan = _bsp(HW, LAYERS, 2, 2, hw=cluster, partition=part)
+        makespan = profile_cost(
+            HW, LAYERS, plan.groups, 2, 2, cluster, partition=plan.partition
+        )["total"]
+        tiled_loss = jax.jit(make_tiled_loss(plan, mesh, l2_loss_local))
+        tiled_grad = jax.jit(jax.grad(lambda p: tiled_loss(p, x, t)))
+        lerr = abs(float(tiled_loss(params, x, t)) - lr)
+        gt = tiled_grad(params)
+        gerr = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(gt), jax.tree.leaves(gr))
+        )
+        t_tiled = _time(lambda: tiled_grad(params), n=iters)
+        rows.append(
+            dict(
+                name=f"tiled_step/hetero/{kind}/fwd_loss_err",
+                value=lerr,
+                backend="xla",
+                schedule="sync",
+                partition=kind,
+                cluster=cluster.name,
+                row_bounds=list(plan.partition.row_bounds),
+                col_bounds=list(plan.partition.col_bounds),
+                modeled_makespan_s=makespan,
+                tiled_us=round(t_tiled * 1e6, 1),
+                grad_maxerr=gerr,
+            )
+        )
     return rows
 
 
@@ -208,7 +272,30 @@ def check(rows) -> list[str]:
         "mode sweep rows (spatial + hybrid crossover) present: "
         f"{'OK' if {'spatial', 'hybrid'} <= modes else 'OFF'}"
     )
+    hetero = {r["partition"]: r for r in rows if "/hetero/" in r["name"]}
+    if hetero:
+        out.append(
+            "hetero sweep rows (uniform + balanced partition) present: "
+            f"{'OK' if {'uniform', 'balanced'} <= set(hetero) else 'OFF'}"
+        )
+        if {"uniform", "balanced"} <= set(hetero):
+            u, b = hetero["uniform"], hetero["balanced"]
+            out.append(
+                "[hetero] balanced modeled makespan < uniform: "
+                f"{'OK' if b['modeled_makespan_s'] < u['modeled_makespan_s'] else 'OFF'} "
+                f"({b['modeled_makespan_s']:.4f}s vs {u['modeled_makespan_s']:.4f}s, "
+                f"measured {b['tiled_us']}us vs {u['tiled_us']}us)"
+            )
+            for kind, r in hetero.items():
+                out.append(
+                    f"[hetero/{kind}] 2x2 loss+grads == reference: "
+                    f"{'OK' if r['value'] < 1e-4 and r['grad_maxerr'] < 1e-4 else 'OFF'}"
+                )
+    else:
+        out.append("hetero sweep skipped (<4 devices)")
     for r in rows:
+        if "/hetero/" in r["name"]:
+            continue
         if "/mode/" in r["name"]:
             tag = f"mode/{r['mode']}"
             out.append(

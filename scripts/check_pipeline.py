@@ -297,6 +297,83 @@ except ValueError as e:
     assert "divisible by the tile count" in str(e)
     print("[hybrid] indivisible batch rejected at trace time")
 
+# ---------------------------------------------------------------------------
+# Non-uniform tile partitions (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+import re  # noqa: E402
+
+from repro.core import make_tiled_loss as _mtl  # noqa: E402
+from repro.core.grouping import parse_cluster_spec, profile_cost  # noqa: E402
+from repro.core.tiling import TilePartition  # noqa: E402
+
+# (a) uniform equivalence: an explicit equal-boundary TilePartition produces
+# the identical plan AND the identical deferred-train-step jaxpr on the 2x2
+# mesh (addresses normalised: custom_vjp closures embed object ids).
+_norm = lambda s: re.sub(r"0x[0-9a-f]+", "0x*", s)
+for backend in ("xla", "pallas"):
+    pu = build_stack_plan((H, W), LAYERS, 2, 2, backend=backend)
+    pe = build_stack_plan((H, W), LAYERS, 2, 2, backend=backend,
+                          partition=TilePartition.even(H, W, 2, 2))
+    assert pu == pe and pu.is_uniform
+    args = (params0, x.reshape(MB, B, H, W, 3), t.reshape((MB, B) + out_shape[1:]))
+    ju = _norm(str(jax.make_jaxpr(make_deferred_grad_step(pu, mesh, l2_loss_local,
+                                                          microbatches=MB))(*args)))
+    je = _norm(str(jax.make_jaxpr(make_deferred_grad_step(pe, mesh, l2_loss_local,
+                                                          microbatches=MB))(*args)))
+    assert ju == je, f"equal-boundary partition changed the {backend} jaxpr"
+    print(f"[partition/{backend}] equal-boundary plan + 2x2 deferred-step jaxpr identical")
+
+# (b) ragged even split: extents that used to raise the divisibility
+# ValueError now train exactly (7x7 on 2x2; ragged 17x17 mid-extent).
+for label, rhw, rlayers in (
+    ("7x7 conv", (7, 7), [LAYERS[0]]),
+    ("34x34 yolo4", (34, 34), LAYERS),
+):
+    rplan2 = build_stack_plan(rhw, rlayers, 2, 2)
+    assert not rplan2.is_uniform
+    rp = init_stack_params(key, rlayers)
+    rx2 = jax.random.normal(jax.random.PRNGKey(9), (4, *rhw, 3))
+    rt2 = 0.05 * jax.random.normal(
+        jax.random.PRNGKey(10), (4, *rplan2.out_hw(), rlayers[-1].out_channels))
+    rloss = jax.jit(_mtl(rplan2, mesh, l2_loss_local))
+    rref2 = float(reference_loss(rp, rx2, rt2, rplan2, l2_loss_local))
+    rerr2 = abs(float(rloss(rp, rx2, rt2)) - rref2)
+    rg2 = jax.jit(jax.grad(lambda p: rloss(p, rx2, rt2)))(rp)
+    rgr2 = jax.grad(lambda p: reference_loss(p, rx2, rt2, rplan2, l2_loss_local))(rp)
+    rgerr2 = max_leaf_err(rg2, rgr2)
+    print(f"[partition] ragged even {label}: loss err={rerr2:.3e} grad maxerr={rgerr2:.3e}")
+    assert rerr2 < 1e-5 * max(1.0, abs(rref2)) and rgerr2 < 1e-4
+
+# (c) heterogeneous cluster end-to-end: pi3x3+jetson on the 2x2 mesh -
+# FLOPs-balanced non-uniform partition, modeled makespan strictly below
+# uniform tiling, and the full deferred train step exact vs the reference.
+cluster = parse_cluster_spec("pi3x3+jetson", 2, 2)
+cplan = build_stack_plan((H, W), LAYERS, 2, 2, hw=cluster)
+assert not cplan.is_uniform, "mixed-FLOPs cluster must yield a non-uniform partition"
+cost_bal = profile_cost((H, W), LAYERS, cplan.groups, 2, 2, cluster,
+                        partition=cplan.partition)["total"]
+cost_uni = profile_cost((H, W), LAYERS, cplan.groups, 2, 2, cluster,
+                        partition=TilePartition.even(H, W, 2, 2))["total"]
+print(f"[cluster] pi3x3+jetson partition rows={cplan.partition.row_bounds} "
+      f"cols={cplan.partition.col_bounds}")
+print(f"[cluster] modeled cycle: balanced={cost_bal:.4f}s uniform={cost_uni:.4f}s")
+assert cost_bal < cost_uni, "balanced partition must beat uniform tiling"
+cstep = make_deferred_grad_step(cplan, mesh, l2_loss_local, microbatches=MB)
+closs, cgrads = jax.jit(cstep)(
+    params0, x.reshape(MB, B, H, W, 3), t.reshape((MB, B) + out_shape[1:]))
+clerr = abs(float(closs - ref_loss))
+cgerr = max_leaf_err(cgrads, ref_grads)
+print(f"[cluster] deferred loss err={clerr:.3e} grad maxerr={cgerr:.3e}")
+assert clerr < 1e-5 * max(1.0, abs(float(ref_loss)))
+assert cgerr < 1e-4
+carch = TiledCNNArch(plan=cplan, mesh=mesh, loss_local=l2_loss_local)
+cinit, ctrain = make_train_step(carch, pcfg, tcfg)
+cstate = cinit(jax.random.PRNGKey(0))
+cstate2, cmetrics = jax.jit(ctrain)(cstate, {"x": x, "t": t})
+cuerr = max_leaf_err(cstate2.params, ref_params1)
+print(f"[cluster] trainer update maxerr={cuerr:.3e}")
+assert cuerr < 1e-4
+
 # BN batch_global regression: with a batch mesh axis, cross-tile BN must
 # normalise by the *global* batch, not the per-shard batch.
 mesh_b = jax.make_mesh((2, 2, 1), ("b", "th", "tw"))

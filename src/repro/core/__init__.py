@@ -3,11 +3,13 @@ from repro.core.tiling import (
     ConvSpec,
     Span,
     TileBox,
+    TilePartition,
     Group,
     MODES,
     apply_crossover,
     crossover_of,
     dependent_region_1d,
+    even_bounds_1d,
     forward_region_1d,
     partition_1d,
     partition_grid,
@@ -16,6 +18,8 @@ from repro.core.tiling import (
     uniform_grouping,
     build_tiling_plan,
     group_halo_width,
+    pull_bounds_1d,
+    push_bounds_1d,
     validate_profile,
 )
 from repro.core.spatial import (
@@ -49,12 +53,16 @@ from repro.core.fusion import (
     resolve_hw_profile,
 )
 from repro.core.grouping import (
+    ClusterSpec,
     HardwareProfile,
     PI3_PROFILE,
     JETSON_PROFILE,
     JETSON_EDGE_PROFILE,
     TPU_V5E_PROFILE,
     PROFILES,
+    balance_bounds,
+    cluster_partition,
+    parse_cluster_spec,
     peak_device_memory,
     profile_cost,
     optimize_grouping,

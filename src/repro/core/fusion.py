@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import re
 from typing import Sequence
 
 import jax
@@ -32,27 +33,35 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.tiling import (
     Group,
+    TilePartition,
     apply_crossover,
+    bounds_sizes,
     crossover_of,
+    derive_axis_bounds,
     no_grouping,
     validate_profile,
 )
-from repro.core.halo import axis_size, halo_exchange_2d
+from repro.core.halo import axis_size, halo_exchange_2d, halo_exchange_2d_ragged
 from repro.core.backend import get_conv_backend
 from repro.core.spatial import (
     LayerDef,
     apply_group_lead_overlap,
     apply_layer_data,
     apply_layer_local,
+    apply_layer_local_ragged,
     reshard_spatial_to_data,
+    reshard_spatial_to_data_ragged,
     stack_reference,
 )
 from repro.core.grouping import (
+    ClusterSpec,
     HardwareProfile,
     PI3_PROFILE,
     PROFILES,
     check_crossover_arg,
+    cluster_partition,
     optimize_grouping,
+    parse_cluster_spec,
     score_profile,
 )
 
@@ -65,8 +74,14 @@ class StackPlan:
     data suffix exists, ``crossover`` records its first layer - the point
     where the executor reshards the tile grid into batch shards
     (DESIGN.md §7).  ``shard_hw`` entries at data-mode layer inputs are the
-    *full* map extents (nothing is spatially sharded there), and data-mode
-    map extents are exempt from the tile-grid divisibility requirement.
+    *full* map extents (nothing is spatially sharded there).
+
+    The tile grid is an explicit ``TilePartition`` (DESIGN.md §8):
+    ``tile_rows[l]`` / ``tile_cols[l]`` are the per-tile owned extents at
+    each layer input (full-extent entries past the crossover), and
+    ``shard_hw`` is the *padded* (max-tile) shard extent.  Uniform
+    partitions (every tile equal) run the legacy executor byte-for-byte;
+    non-uniform ones run the padded-to-max ragged executor.
     """
 
     layers: tuple[LayerDef, ...]
@@ -75,7 +90,7 @@ class StackPlan:
     m: int
     input_hw: tuple[int, int]
     map_hw: tuple[tuple[int, int], ...]          # extent at each layer input; [-1] = output
-    shard_hw: tuple[tuple[int, int], ...]        # core shard extent per layer input
+    shard_hw: tuple[tuple[int, int], ...]        # (padded) shard extent per layer input
     group_halos: tuple[tuple[int, int, int, int], ...]   # (top,bot,left,right) @ group input
     rem_halos: tuple[tuple[int, int, int, int], ...]     # remaining halo after each layer
     group_of_layer: tuple[int, ...]
@@ -83,6 +98,9 @@ class StackPlan:
     schedule: str = "sync"                       # "sync" | "overlap" (DESIGN.md §5)
     block_oh: int | None = None                  # conv output-row block (None = auto)
     crossover: int | None = None                 # first data-mode layer (None = all spatial)
+    partition: TilePartition | None = None       # input-level tile boundaries
+    tile_rows: tuple[tuple[int, ...], ...] = ()  # per layer input: per-tile-row extents
+    tile_cols: tuple[tuple[int, ...], ...] = ()
 
     @property
     def n_layers(self) -> int:
@@ -91,9 +109,29 @@ class StackPlan:
     def out_hw(self) -> tuple[int, int]:
         return self.map_hw[-1]
 
+    @property
+    def spatial_last(self) -> int:
+        """Deepest spatially-sharded layer-input index (crossover input, or
+        the stack output for all-spatial plans)."""
+        return self.n_layers if self.crossover is None else self.crossover
 
-def resolve_hw_profile(hw: HardwareProfile | str | None) -> HardwareProfile:
-    """Profile object from a profile, a registered name, or None (Pi default)."""
+    @property
+    def is_uniform(self) -> bool:
+        """True when every tile has the same shape at every spatially-
+        sharded layer - the equal-boundary special case that runs the
+        legacy (padding-free) executor and reproduces pre-partition jaxprs
+        exactly."""
+        if not self.tile_rows:
+            return True     # directly-constructed legacy plans
+        return all(
+            len(set(self.tile_rows[l])) == 1 and len(set(self.tile_cols[l])) == 1
+            for l in range(self.spatial_last + 1)
+        )
+
+
+def resolve_hw_profile(hw: HardwareProfile | ClusterSpec | str | None):
+    """Profile object from a profile, a ClusterSpec, a registered name, or
+    None (Pi default)."""
     if hw is None:
         return PI3_PROFILE
     if isinstance(hw, str):
@@ -104,6 +142,18 @@ def resolve_hw_profile(hw: HardwareProfile | str | None) -> HardwareProfile:
                 f"unknown hardware profile {hw!r}; available: {sorted(PROFILES)}"
             ) from None
     return hw
+
+
+def _resolve_hw(hw, n: int, m: int):
+    """Like ``resolve_hw_profile`` but also accepts cluster spec strings
+    ("pi3x3+jetson") - resolvable only here, where the grid is known.
+    Strings that *look* like cluster specs ('+'-joined or counted parts)
+    surface parse_cluster_spec's own error (device-count mismatch, unknown
+    device) instead of the misleading unknown-profile KeyError."""
+    if isinstance(hw, str) and hw not in PROFILES:
+        if "+" in hw or re.search(r"x\d+$", hw):
+            return parse_cluster_spec(hw, n, m)
+    return resolve_hw_profile(hw)
 
 
 def _resolve_crossover(
@@ -117,6 +167,7 @@ def _resolve_crossover(
     batch: int,
     schedule: str,
     mem_limit: float | None = None,
+    partition: TilePartition | None = None,
 ) -> tuple[Group, ...]:
     """Assign partition modes to an *explicit* grouping profile.
 
@@ -131,12 +182,12 @@ def _resolve_crossover(
     check_crossover_arg(crossover, len(layers))
     if isinstance(crossover, int):
         return tuple(apply_crossover(groups, crossover))
-    hwp = resolve_hw_profile(hw)
     best = None
     for c in [None] + [g.start for g in groups]:
         cand = tuple(apply_crossover(groups, c))
         cost = score_profile(
-            input_hw, layers, cand, n, m, hwp, batch, schedule, mem_limit
+            input_hw, layers, cand, n, m, hw, batch, schedule, mem_limit,
+            partition=partition,
         )
         if cost is None:
             continue
@@ -159,10 +210,11 @@ def build_stack_plan(
     backend: str = "xla",
     schedule: str = "sync",
     block_oh: int | None = None,
-    hw: HardwareProfile | str | None = None,
+    hw: HardwareProfile | ClusterSpec | str | None = None,
     batch: int = 1,
     crossover: int | str | None = None,
     mem_limit: float | None = None,
+    partition: TilePartition | None = None,
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
 
@@ -188,6 +240,17 @@ def build_stack_plan(
     ``groups="auto"`` (the DP scans every candidate crossover), else among
     the given profile's boundaries.  ``mem_limit`` (bytes/device) bounds
     the modelled peak working set during ``groups="auto"`` selection.
+
+    partition (DESIGN.md §8): explicit input-level ``TilePartition``
+    boundary arrays.  ``None`` derives a default: the FLOPs-balanced
+    makespan partition when ``hw`` is a ``ClusterSpec`` (or a cluster spec
+    string like ``"pi3x3+jetson"``), else the stride-aligned ragged-even
+    split - which *is* the old uniform grid whenever the extents divide, so
+    existing plans are bit-identical, and which replaces the old
+    divisibility ``ValueError`` for ragged extents (a 7x7 map on a 2x2 mesh
+    now plans as 4+3 tile rows).  Non-uniform partitions run the
+    padded-to-max executor; the overlap schedule's interior/boundary split
+    applies only to uniform groups (ragged groups use the sync exchange).
     """
     get_conv_backend(backend)   # fail fast on unknown backends
     if schedule not in ("sync", "overlap"):
@@ -195,13 +258,22 @@ def build_stack_plan(
     if block_oh is not None and block_oh < 1:
         raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
     layers = tuple(layers)
+    hw = _resolve_hw(hw, n, m) if hw is not None else None
+    if isinstance(hw, ClusterSpec) and (hw.n, hw.m) != (n, m):
+        raise ValueError(f"cluster grid {(hw.n, hw.m)} != tile grid {(n, m)}")
+    if partition is not None and (partition.n, partition.m) != (n, m):
+        raise ValueError(
+            f"partition grid {(partition.n, partition.m)} != tile grid {(n, m)}"
+        )
     if isinstance(groups, str):
         if groups != "auto":
             raise ValueError(f"groups must be a profile, None, or 'auto'; got {groups!r}")
         groups = tuple(
             optimize_grouping(
-                input_hw, layers, n, m, resolve_hw_profile(hw), batch=batch,
-                schedule=schedule, crossover=crossover, mem_limit=mem_limit,
+                input_hw, layers, n, m,
+                hw if isinstance(hw, ClusterSpec) else resolve_hw_profile(hw),
+                batch=batch, schedule=schedule, crossover=crossover,
+                mem_limit=mem_limit, partition=partition,
             )
         )
     else:
@@ -210,35 +282,50 @@ def build_stack_plan(
         else:
             groups = tuple(groups)
         groups = _resolve_crossover(
-            input_hw, layers, groups, crossover, n, m, hw, batch, schedule, mem_limit
+            input_hw, layers, groups, crossover, n, m,
+            hw if isinstance(hw, ClusterSpec) else resolve_hw_profile(hw),
+            batch, schedule, mem_limit, partition,
         )
     validate_profile(groups, len(layers))
     cross = crossover_of(groups)
 
-    # Map + shard extents per layer.  Data-mode layers hold *full* maps, so
-    # only the spatial prefix (through the crossover input, which the
-    # spatial part produces as shards) must divide by the tile grid.
+    # Map extents per layer input ([-1] = output).
     map_hw = [tuple(input_hw)]
     for l in layers:
         h, w = map_hw[-1]
         map_hw.append((l.out_extent(h), l.out_extent(w)))
-    shard_hw = []
-    for li, (h, w) in enumerate(map_hw):
-        if cross is not None and li > cross:
-            shard_hw.append((h, w))
-            continue
-        if h % n or w % m:
-            raise ValueError(
-                f"map extent {(h, w)} not divisible by tile grid {(n, m)}; "
-                "pad the input or choose a different grid"
-            )
-        shard_hw.append((h // n, w // m))
-    for li, l in enumerate(layers):
-        if cross is not None and li >= cross:
-            break
-        sh, sw = shard_hw[li]
-        if sh % l.stride or sw % l.stride:
-            raise ValueError(f"shard extent {(sh, sw)} not divisible by stride of layer {li}")
+
+    # Resolve the tile partition over the spatial prefix (through the
+    # crossover input; data-mode layers hold full maps and are exempt).
+    last = len(layers) if cross is None else cross
+    strides = [l.stride for l in layers[:last]]
+    hs = [map_hw[l][0] for l in range(last + 1)]
+    ws = [map_hw[l][1] for l in range(last + 1)]
+    if partition is None and isinstance(hw, ClusterSpec):
+        partition = cluster_partition(input_hw, layers, hw, cross)
+    try:
+        row_bounds = derive_axis_bounds(
+            partition.row_bounds if partition else None, strides, hs, n
+        )
+        col_bounds = derive_axis_bounds(
+            partition.col_bounds if partition else None, strides, ws, m
+        )
+    except ValueError as e:
+        raise ValueError(
+            f"cannot partition map extents over the {n}x{m} tile grid: {e}; "
+            "use a coarser grid, an earlier crossover, or different boundaries"
+        ) from None
+    if partition is None:
+        partition = TilePartition(row_bounds[0], col_bounds[0])
+
+    tile_rows = [bounds_sizes(b) for b in row_bounds]
+    tile_cols = [bounds_sizes(b) for b in col_bounds]
+    shard_hw = [(max(r), max(c)) for r, c in zip(tile_rows, tile_cols)]
+    for li in range(last + 1, len(layers) + 1):
+        h, w = map_hw[li]
+        tile_rows.append((h,) * n)
+        tile_cols.append((w,) * m)
+        shard_hw.append((h, w))
 
     # Group halos + per-layer remaining halos (zero for data-mode groups:
     # full maps have no neighbours).
@@ -261,6 +348,15 @@ def build_stack_plan(
             hh += q * sprod
             sprod *= layers[l].stride
         group_halos.append((hl, hh, hl, hh))
+        # The exchange ships at most one neighbour strip per side, so the
+        # group halo must fit inside the smallest neighbouring tile.
+        if min(tile_rows[g.start]) < max(hl, hh) or min(tile_cols[g.start]) < max(hl, hh):
+            raise ValueError(
+                f"group ({g.start}, {g.end}) halo ({hl}, {hh}) exceeds the "
+                f"smallest tile of partition rows={tile_rows[g.start]} "
+                f"cols={tile_cols[g.start]}; use a finer grouping or a less "
+                "skewed partition"
+            )
         # remaining halo after each layer inside the group
         cur_lo, cur_hi = hl, hh
         for l in g.layers:
@@ -287,12 +383,123 @@ def build_stack_plan(
         schedule=schedule,
         block_oh=block_oh,
         crossover=cross,
+        partition=partition,
+        tile_rows=tuple(tile_rows),
+        tile_cols=tuple(tile_cols),
     )
 
 
 # ---------------------------------------------------------------------------
 # Shard-local executor (runs inside shard_map)
 # ---------------------------------------------------------------------------
+
+
+def _ragged_group_geom(plan: StackPlan, gi: int) -> dict:
+    """Static geometry of one spatial group under the ragged executor
+    (DESIGN.md §8): per-layer canonical (padded) extended extents.
+
+    For layer k of the group (input halos (lo, hi), output halos (lo',
+    hi')), a tile's *valid* extended input occupies rows [0, lo + own_i +
+    hi) of the padded layout and its valid outputs rows [0, lo' + own'_i +
+    hi').  The canonical static input extent must cover both the largest
+    valid window and the largest window any tile's valid outputs read -
+    ``(max_valid_out - 1) * stride + kernel`` (the last tile's off-map
+    reach can exceed its valid input rows; those reads hit zeros = the
+    global SAME padding)."""
+    g = plan.groups[gi]
+    halos = [plan.group_halos[gi]] + [plan.rem_halos[l] for l in g.layers]
+    ein = []        # canonical extended input extent (rows, cols) per layer
+    for k, l in enumerate(g.layers):
+        top, bottom, left, right = halos[k]
+        ntop, nbot, nleft, nright = halos[k + 1]
+        ker, s = plan.layers[l].kernel, plan.layers[l].stride
+        rows = max(
+            max(plan.tile_rows[l]) + top + bottom,
+            max(
+                (ntop + r + nbot - 1) * s + ker for r in plan.tile_rows[l + 1]
+            ),
+        )
+        cols = max(
+            max(plan.tile_cols[l]) + left + right,
+            max(
+                (nleft + c + nright - 1) * s + ker for c in plan.tile_cols[l + 1]
+            ),
+        )
+        ein.append((rows, cols))
+    # canonical output extent of layer k = input extent of layer k+1; the
+    # group-end output is the padded core (next group re-exchanges halos)
+    eout = ein[1:] + [(max(plan.tile_rows[g.end + 1]), max(plan.tile_cols[g.end + 1]))]
+    return {"ein": ein, "eout": eout, "halos": halos}
+
+
+def _offsets(sizes: tuple[int, ...]) -> tuple[int, ...]:
+    out, acc = [], 0
+    for s in sizes:
+        out.append(acc)
+        acc += s
+    return tuple(out)
+
+
+def _apply_group_ragged(
+    x: jax.Array,
+    params: Sequence[dict],
+    plan: StackPlan,
+    gi: int,
+    *,
+    row_axis: str,
+    col_axis: str,
+    batch_axis: str | None,
+    batch_global: int,
+) -> jax.Array:
+    """One spatial group on a ragged (non-uniform partition) tile.
+
+    ``x`` enters as the padded core (b, Hmax, Wmax, c) with pad slots zero;
+    the ragged halo exchange assembles the canonical extended tile with
+    per-device dynamic strip offsets, then every layer runs conv ->
+    refit-to-canonical-extent -> mask (``apply_layer_local_ragged``), which
+    restores the padded-tile invariant for the next layer/group.  Runs the
+    sync exchange regardless of ``plan.schedule`` - the overlap split's
+    interior geometry is per-device and is left to future work."""
+    g = plan.groups[gi]
+    geom = _ragged_group_geom(plan, gi)
+    i = jax.lax.axis_index(row_axis)
+    j = jax.lax.axis_index(col_axis)
+    x = halo_exchange_2d_ragged(
+        x,
+        plan.group_halos[gi],
+        row_axis,
+        col_axis,
+        plan.tile_rows[g.start],
+        plan.tile_cols[g.start],
+        dims=(1, 2),
+        out_extents=geom["ein"][0],
+    )
+    for k, l in enumerate(g.layers):
+        out_rows = plan.tile_rows[l + 1]
+        out_cols = plan.tile_cols[l + 1]
+        x = apply_layer_local_ragged(
+            x,
+            params[l],
+            plan.layers[l],
+            out_halo=geom["halos"][k + 1],
+            out_size=(
+                jnp.asarray(out_rows, jnp.int32)[i],
+                jnp.asarray(out_cols, jnp.int32)[j],
+            ),
+            out_off=(
+                jnp.asarray(_offsets(out_rows), jnp.int32)[i],
+                jnp.asarray(_offsets(out_cols), jnp.int32)[j],
+            ),
+            canon_out_hw=geom["eout"][k],
+            map_out_hw=plan.map_hw[l + 1],
+            row_axis=row_axis,
+            col_axis=col_axis,
+            batch_global=batch_global,
+            batch_axis=batch_axis,
+            backend=plan.backend,
+            block_oh=plan.block_oh,
+        )
+    return x
 
 
 def _global_batch(
@@ -331,12 +538,24 @@ def apply_stack_local(
     every following layer runs on full, unhaloed maps with no collectives.
     The global batch for BN statistics is read off the *entry* shape, so
     it stays correct on both sides of the crossover.
+
+    Non-uniform partitions (DESIGN.md §8): spatial groups route through
+    the padded-to-max ragged executor (``_apply_group_ragged``; sync
+    exchange regardless of schedule) and the crossover through the ragged
+    reshard; uniform plans take exactly the pre-partition code path.
     """
     bg = _global_batch(x.shape[0], batch_axis, batch_global)
+    uniform = plan.is_uniform
     for gi, g in enumerate(plan.groups):
         if g.mode == "data":
             if gi == 0 or plan.groups[gi - 1].mode != "data":
-                x = reshard_spatial_to_data(x, row_axis, col_axis)
+                if uniform:
+                    x = reshard_spatial_to_data(x, row_axis, col_axis)
+                else:
+                    x = reshard_spatial_to_data_ragged(
+                        x, row_axis, col_axis,
+                        plan.tile_rows[g.start], plan.tile_cols[g.start],
+                    )
             for l in g.layers:
                 x = apply_layer_data(
                     x,
@@ -350,6 +569,13 @@ def apply_stack_local(
                     batch_axis=batch_axis,
                     block_oh=plan.block_oh,
                 )
+            continue
+        if not uniform:
+            x = _apply_group_ragged(
+                x, params, plan, gi,
+                row_axis=row_axis, col_axis=col_axis,
+                batch_axis=batch_axis, batch_global=bg,
+            )
             continue
         layers = list(g.layers)
         if plan.schedule == "overlap" and any(plan.group_halos[gi]):
@@ -396,6 +622,58 @@ def apply_stack_local(
 # ---------------------------------------------------------------------------
 
 
+def _pack_axis(a: jax.Array, sizes: tuple[int, ...], dim: int) -> jax.Array:
+    """Global -> padded-tile layout along one axis: slice each tile's span
+    and zero-pad it to the max tile size, so ``P(..., axis, ...)`` sharding
+    hands every device its (padded) tile.  All-static; inverse of
+    ``_unpack_axis``."""
+    mx = max(sizes)
+    if len(set(sizes)) == 1:
+        return a
+    parts = []
+    off = 0
+    for s in sizes:
+        seg = lax.slice_in_dim(a, off, off + s, axis=dim)
+        if s < mx:
+            pad = [(0, 0)] * a.ndim
+            pad[dim] = (0, mx - s)
+            seg = jnp.pad(seg, pad)
+        parts.append(seg)
+        off += s
+    return jnp.concatenate(parts, axis=dim)
+
+
+def _unpack_axis(a: jax.Array, sizes: tuple[int, ...], dim: int) -> jax.Array:
+    mx = max(sizes)
+    if len(set(sizes)) == 1:
+        return a
+    parts = [
+        lax.slice_in_dim(a, k * mx, k * mx + s, axis=dim)
+        for k, s in enumerate(sizes)
+    ]
+    return jnp.concatenate(parts, axis=dim)
+
+
+def _pack_grid(a, rows, cols, dims=(1, 2)):
+    return _pack_axis(_pack_axis(a, rows, dims[0]), cols, dims[1])
+
+
+def _unpack_grid(a, rows, cols, dims=(1, 2)):
+    return _unpack_axis(_unpack_axis(a, rows, dims[0]), cols, dims[1])
+
+
+def _ragged_count_scale(plan: StackPlan, row_axis: str, col_axis: str):
+    """Fraction of a padded output tile that is valid, per device - scales
+    ``loss_local``'s element count (pad slots hold y = t = 0, so the *sum*
+    is already exact; only the count over-reads).  Requires the loss count
+    to be proportional to the element count, as ``l2_loss_local``'s is."""
+    rows = plan.tile_rows[-1]
+    cols = plan.tile_cols[-1]
+    oh = jnp.asarray(rows, jnp.float32)[lax.axis_index(row_axis)]
+    ow = jnp.asarray(cols, jnp.float32)[lax.axis_index(col_axis)]
+    return (oh * ow) / float(max(rows) * max(cols))
+
+
 def make_tiled_forward(
     plan: StackPlan,
     mesh: Mesh,
@@ -412,6 +690,12 @@ def make_tiled_forward(
     leaves in data layout instead: full maps with the batch dim sharded
     over (batch_axis?, row_axis, col_axis) - the assembly order of
     ``reshard_spatial_to_data``'s batch blocks.
+
+    Ragged plans wrap the shard_map'd executor in the padded-tile layout
+    transforms (``_pack_grid`` on the input, ``_unpack_grid`` on a
+    spatial output) so the caller-facing contract - global arrays in, global
+    arrays out - is partition-independent; uniform plans return the bare
+    shard_map'd function, jaxpr-identical to the pre-partition executor.
     """
     aspec = P(batch_axis, row_axis, col_axis, None)
     out_spec = _out_spec(plan, row_axis, col_axis, batch_axis)
@@ -423,13 +707,24 @@ def make_tiled_forward(
         batch_axis=batch_axis,
         batch_global=batch_global,
     )
-    return shard_map(
+    mapped = shard_map(
         lambda params, x: local(params, x),
         mesh=mesh,
         in_specs=(P(), aspec),
         out_specs=out_spec,
         check_rep=False,
     )
+    if plan.is_uniform:
+        return mapped
+
+    def fwd(params, x):
+        x = _pack_grid(x, plan.tile_rows[0], plan.tile_cols[0])
+        y = mapped(params, x)
+        if plan.crossover is None:
+            y = _unpack_grid(y, plan.tile_rows[-1], plan.tile_cols[-1])
+        return y
+
+    return fwd
 
 
 def _out_spec(plan: StackPlan, row_axis: str, col_axis: str, batch_axis: str | None):
@@ -490,6 +785,7 @@ def make_tiled_loss(
     aspec = P(batch_axis, row_axis, col_axis, None)
     tspec = _out_spec(plan, row_axis, col_axis, batch_axis)
     axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
+    ragged_out = not plan.is_uniform and plan.crossover is None
 
     def fn(params, x, target):
         y = apply_stack_local(
@@ -498,6 +794,10 @@ def make_tiled_loss(
             batch_axis=batch_axis, batch_global=batch_global,
         )
         s, c = loss_local(y, target)
+        if ragged_out:
+            # pad slots hold y = t = 0 (executor mask / packed target), so
+            # the sum is exact; rescale the count to valid elements only.
+            c = c * _ragged_count_scale(plan, row_axis, col_axis)
         s = lax.psum(s, axes)
         c = lax.psum(c, axes)
         return s / c
@@ -512,6 +812,10 @@ def make_tiled_loss(
 
     def loss(params, x, target):
         _check_data_batch(plan, mesh, x.shape[0], batch_axis)
+        if not plan.is_uniform:
+            x = _pack_grid(x, plan.tile_rows[0], plan.tile_cols[0])
+            if plan.crossover is None:
+                target = _pack_grid(target, plan.tile_rows[-1], plan.tile_cols[-1])
         return mapped(params, x, target)
 
     return loss
@@ -547,6 +851,7 @@ def make_deferred_grad_step(
     ospec = _out_spec(plan, row_axis, col_axis, batch_axis)
     tspec = P(None, *ospec)
     tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
+    ragged_out = not plan.is_uniform and plan.crossover is None
 
     def local_loss(params, x, t):
         y = apply_stack_local(
@@ -555,6 +860,8 @@ def make_deferred_grad_step(
             batch_axis=batch_axis, batch_global=batch_global,
         )
         s, c = loss_local(y, t)
+        if ragged_out:
+            c = c * _ragged_count_scale(plan, row_axis, col_axis)
         # Divide by the *global* count; the cross-tile sum is deferred to the
         # gradient aggregation (linearity), matching the paper's schedule.
         return s, c
@@ -589,6 +896,10 @@ def make_deferred_grad_step(
 
     def step(params, xs, ts):
         _check_data_batch(plan, mesh, xs.shape[1], batch_axis)
+        if not plan.is_uniform:
+            xs = _pack_grid(xs, plan.tile_rows[0], plan.tile_cols[0], dims=(2, 3))
+            if plan.crossover is None:
+                ts = _pack_grid(ts, plan.tile_rows[-1], plan.tile_cols[-1], dims=(2, 3))
         return mapped(params, xs, ts)
 
     return step

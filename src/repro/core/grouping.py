@@ -35,10 +35,19 @@ the one-time reshard plus the tail's weight-aggregation charge.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Sequence
 
 from repro.core.spatial import LayerDef, split_1d
-from repro.core.tiling import Group, crossover_of
+from repro.core.tiling import (
+    Group,
+    TilePartition,
+    bounds_sizes,
+    crossover_of,
+    derive_axis_bounds,
+    even_bounds_1d,
+    pull_bounds_1d,
+)
 
 SCHEDULES = ("sync", "overlap")
 
@@ -106,6 +115,300 @@ PROFILES = {
     p.name: p
     for p in (PI3_PROFILE, JETSON_PROFILE, JETSON_EDGE_PROFILE, TPU_V5E_PROFILE)
 }
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous clusters: per-device profiles + makespan-balanced partitions
+# (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """An n x m tile grid of per-device ``HardwareProfile``s.
+
+    The paper's cluster is homogeneous (equal Pi cores => equal tiles); real
+    edge deployments mix device classes (DistrEdge, arXiv:2202.01699).  A
+    ClusterSpec drives both the makespan-balancing partitioner
+    (``cluster_partition``: tile area ∝ device FLOPs) and the cost model's
+    max-over-devices makespan terms (each device's time from *its* tile and
+    *its* link, the slowest device bounding the cycle)."""
+
+    name: str
+    grid: tuple[tuple[HardwareProfile, ...], ...]
+
+    def __post_init__(self):
+        if not self.grid or any(len(r) != len(self.grid[0]) for r in self.grid):
+            raise ValueError(f"cluster grid must be rectangular; got {self.grid}")
+
+    @property
+    def n(self) -> int:
+        return len(self.grid)
+
+    @property
+    def m(self) -> int:
+        return len(self.grid[0])
+
+    @property
+    def devices(self) -> tuple[HardwareProfile, ...]:
+        return tuple(p for row in self.grid for p in row)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(set(self.devices)) == 1
+
+    @property
+    def dtype_bytes(self) -> int:
+        return max(p.dtype_bytes for p in self.devices)
+
+    @property
+    def min_flops(self) -> float:
+        return min(p.flops for p in self.devices)
+
+    @property
+    def min_link_bw(self) -> float:
+        return min(p.link_bw for p in self.devices)
+
+    @property
+    def min_agg_bw(self) -> float:
+        return min(p.agg_bw for p in self.devices)
+
+    @property
+    def max_sync_latency(self) -> float:
+        return max(p.sync_latency for p in self.devices)
+
+    # Conservative scalar views so plan-level terms (reshard, weight
+    # aggregation) that read a single profile's fields work on clusters
+    # unchanged: a collective is paced by the slowest link / latest arriver.
+    @property
+    def link_bw(self) -> float:
+        return self.min_link_bw
+
+    @property
+    def agg_bw(self) -> float:
+        return self.min_agg_bw
+
+    @property
+    def sync_latency(self) -> float:
+        return self.max_sync_latency
+
+    @property
+    def flops(self) -> float:
+        return self.min_flops
+
+
+#: Short spellings accepted by ``parse_cluster_spec`` (full registered
+#: profile names work too).
+CLUSTER_ALIASES = {
+    "pi3": PI3_PROFILE,
+    "jetson": JETSON_PROFILE,
+    "jetson-edge": JETSON_EDGE_PROFILE,
+    "tpu": TPU_V5E_PROFILE,
+    **PROFILES,
+}
+
+_SPEC_PART = re.compile(r"^(.+?)(?:x(\d+))?$")
+
+
+def parse_cluster_spec(spec: str, n: int, m: int) -> ClusterSpec:
+    """``"pi3x3+jetson"`` -> 3 Pi tiles + 1 Jetson filling an n x m grid
+    row-major.  Each '+'-separated part is ``<profile>[x<count>]`` with
+    profile an alias or registered name; counts must sum to n*m."""
+    devs: list[HardwareProfile] = []
+    for part in spec.split("+"):
+        mt = _SPEC_PART.match(part.strip())
+        name, cnt = (mt.group(1), mt.group(2)) if mt else (part, None)
+        if name not in CLUSTER_ALIASES:
+            raise ValueError(
+                f"unknown device {name!r} in cluster spec {spec!r}; "
+                f"known: {sorted(set(CLUSTER_ALIASES))}"
+            )
+        devs.extend([CLUSTER_ALIASES[name]] * (int(cnt) if cnt else 1))
+    if len(devs) != n * m:
+        raise ValueError(
+            f"cluster spec {spec!r} names {len(devs)} devices; grid {n}x{m} "
+            f"needs {n * m}"
+        )
+    grid = tuple(tuple(devs[i * m : (i + 1) * m]) for i in range(n))
+    return ClusterSpec(name=spec, grid=grid)
+
+
+def _bounds_makespan(
+    row_bounds: Sequence[int], col_bounds: Sequence[int], flops
+) -> float:
+    """max over devices of tile_area / device_flops - the work-balance
+    objective the partitioner minimises (a per-layer-area proxy: every
+    layer's tile area scales with the same fractions)."""
+    rs = [hi - lo for lo, hi in zip(row_bounds, row_bounds[1:])]
+    cs = [hi - lo for lo, hi in zip(col_bounds, col_bounds[1:])]
+    return max(
+        rs[i] * cs[j] / flops[i][j] for i in range(len(rs)) for j in range(len(cs))
+    )
+
+
+def _bounds_of(sizes: Sequence[int]) -> list[int]:
+    out = [0]
+    for s in sizes:
+        out.append(out[-1] + s)
+    return out
+
+
+def _waterfill(weights: Sequence[float], total: int) -> list[int]:
+    """Integer sizes >= 1 summing to ``total``, ~proportional to 1/weight
+    (minimising max_k weight_k * size_k), fixed up greedily."""
+    inv = [1.0 / w for w in weights]
+    s = sum(inv)
+    sizes = [max(1, round(total * v / s)) for v in inv]
+    while sum(sizes) > total:
+        k = min(
+            (k for k in range(len(sizes)) if sizes[k] > 1),
+            key=lambda k: weights[k] * (sizes[k] - 1),
+        )
+        sizes[k] -= 1
+    while sum(sizes) < total:
+        k = min(range(len(sizes)), key=lambda k: weights[k] * (sizes[k] + 1))
+        sizes[k] += 1
+    return sizes
+
+
+def balance_bounds(
+    extent_hw: tuple[int, int], cluster: ClusterSpec
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """FLOPs-proportional boundary arrays at one map extent, minimising
+    ``max_ij area_ij / flops_ij`` (every layer's tile area scales with the
+    same fractions, so one extent-level balance serves the whole stack).
+
+    Pure single-boundary descent stalls on the even split (a 2x2 mixed grid
+    needs a row and a column boundary to move *together*), so this runs
+    alternating per-axis water-filling - for fixed rows, the optimal integer
+    column sizes are ∝ 1 / max_i(row_i / flops_ij) - from several starts
+    (even + FLOPs-marginal), polishes with greedy ±1 moves, and keeps the
+    best.  The even split is always a candidate, so the result is never
+    worse than uniform tiling; tests brute-force small grids to confirm it
+    beats uniform whenever device FLOPs differ."""
+    h, w = extent_hw
+    n, m = cluster.n, cluster.m
+    flops = [[p.flops for p in row] for row in cluster.grid]
+    even = (list(even_bounds_1d(h, n)), list(even_bounds_1d(w, m)))
+    if cluster.is_uniform:
+        return tuple(even[0]), tuple(even[1])
+
+    def col_weights(rs):
+        return [max(rs[i] / flops[i][j] for i in range(n)) for j in range(m)]
+
+    def row_weights(cs):
+        return [max(cs[j] / flops[i][j] for j in range(m)) for i in range(n)]
+
+    def alternate(rs, cs):
+        for _ in range(32):
+            cs2 = _waterfill(col_weights(rs), w)
+            rs2 = _waterfill(row_weights(cs2), h)
+            if rs2 == rs and cs2 == cs:
+                break
+            rs, cs = rs2, cs2
+        return rs, cs
+
+    starts = [(list(bounds_sizes(even[0])), list(bounds_sizes(even[1])))]
+    row_marg = [sum(flops[i]) for i in range(n)]
+    col_marg = [sum(flops[i][j] for i in range(n)) for j in range(m)]
+    starts.append(
+        (
+            _waterfill([1.0 / f for f in row_marg], h),
+            _waterfill([1.0 / f for f in col_marg], w),
+        )
+    )
+    cands = [even]
+    for rs0, cs0 in starts:
+        rs, cs = alternate(list(rs0), list(cs0))
+        cands.append((_bounds_of(rs), _bounds_of(cs)))
+
+    def polish(rb, cb):
+        # Greedy descent over single-boundary moves AND paired (row, col)
+        # moves: the makespan is flat against any single move at symmetric
+        # points (shrinking one side of a slow tile grows its neighbour),
+        # so escaping them needs a row and a column boundary stepping
+        # together.
+        moves = [[(br, k, d)] for br in (0, 1) for k in range(1, (n, m)[br]) for d in (1, -1)]
+        moves += [
+            [(0, kr, dr), (1, kc, dc)]
+            for kr in range(1, n) for kc in range(1, m)
+            for dr in (1, -1) for dc in (1, -1)
+        ]
+        bounds = (rb, cb)
+        best = _bounds_makespan(rb, cb, flops)
+        improved = True
+        while improved:
+            improved = False
+            for mv in moves:
+                while True:
+                    ok = all(
+                        bounds[br][k - 1] < bounds[br][k] + d < bounds[br][k + 1]
+                        for br, k, d in mv
+                    )
+                    if not ok:
+                        break
+                    for br, k, d in mv:
+                        bounds[br][k] += d
+                    cost = _bounds_makespan(rb, cb, flops)
+                    if cost < best - 1e-15:
+                        best = cost
+                        improved = True
+                    else:
+                        for br, k, d in mv:
+                            bounds[br][k] -= d
+                        break
+        return best
+
+    scored = []
+    for rb, cb in cands:
+        rb, cb = list(rb), list(cb)
+        scored.append((polish(rb, cb), rb, cb))
+    _, rb, cb = min(scored, key=lambda t: t[0])
+    return tuple(rb), tuple(cb)
+
+
+def cluster_partition(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    cluster: ClusterSpec,
+    cross: int | None = None,
+) -> TilePartition:
+    """Makespan-balanced input-level partition for a heterogeneous cluster:
+    balance the boundaries at the last spatially-sharded extent (the
+    crossover input, or the stack output), then pull them back through the
+    strides so every layer's boundaries stay stride-aligned."""
+    ext = _map_extents(input_hw, layers)
+    last = len(layers) if cross is None else cross
+    rb, cb = balance_bounds(ext[last], cluster)
+    for l in range(last - 1, -1, -1):
+        rb = pull_bounds_1d(rb, layers[l].stride, ext[l][0])
+        cb = pull_bounds_1d(cb, layers[l].stride, ext[l][1])
+    return TilePartition(rb, cb)
+
+
+def _layer_tiles(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    n: int,
+    m: int,
+    partition: TilePartition | None,
+    cross: int | None = None,
+):
+    """(row_sizes, col_sizes) per layer extent 0..last for the cost model:
+    per-tile owned extents under ``partition`` (or the stride-aligned
+    ragged-even default)."""
+    ext = _map_extents(input_hw, layers)
+    last = len(layers) if cross is None else cross
+    strides = [l.stride for l in layers[:last]]
+    rb = derive_axis_bounds(
+        partition.row_bounds if partition else None, strides,
+        [e[0] for e in ext[: last + 1]], n,
+    )
+    cb = derive_axis_bounds(
+        partition.col_bounds if partition else None, strides,
+        [e[1] for e in ext[: last + 1]], m,
+    )
+    return [bounds_sizes(b) for b in rb], [bounds_sizes(b) for b in cb]
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +532,87 @@ def _group_cost(
     return compute_s, boundary_s, sync_s, hidden_s
 
 
+def _group_cost_cluster(
+    layers: Sequence[LayerDef],
+    ext: Sequence[tuple[int, int]],
+    tiles,
+    s: int,
+    e: int,
+    cluster: ClusterSpec,
+    batch: int,
+    mode: str = "spatial",
+) -> tuple[float, float, float, float]:
+    """Heterogeneous-cluster group cost: per-*device* times from each
+    device's own tile extents (the partition's boundary arrays) and its own
+    link, reduced with max - the makespan of the group, since halo syncs
+    are barriers at every group input.  Returned as (compute, boundary,
+    sync, hidden) with compute/boundary the per-component maxima and
+    ``hidden = max(compute) + max(boundary) - max(compute + boundary)``
+    (subadditivity slack, >= 0) so the DP's ``c + b + y - h`` is exactly
+    ``makespan + sync``.  No overlap-hiding credit: ragged groups run the
+    sync exchange (DESIGN.md §8).
+
+    ``mode="data"``: every device computes ceil(batch/T) whole samples of
+    the identical full-map work, so the slowest device bounds the group -
+    exact MACs / min FLOPs, no boundary, no sync."""
+    rows, cols = tiles
+    n, m = cluster.n, cluster.m
+    if mode == "data":
+        compute = 0.0
+        for idx in range(s, e + 1):
+            l = layers[idx]
+            oh, ow = ext[idx + 1]
+            if l.pool:
+                macs = oh * ow * max(l.in_channels, 1) * l.kernel * l.kernel
+                passes = 1.0
+            else:
+                macs = oh * ow * l.kernel * l.kernel * l.in_channels * l.out_channels
+                passes = 3.0
+            compute += passes * macs
+        return -(-batch // (n * m)) * compute / cluster.min_flops, 0.0, 0.0, 0.0
+    halo_lo, halo_hi = _halo_widths(layers, s, e)
+    cin = max(layers[s].in_channels, 1)
+    db = cluster.dtype_bytes
+    comp_max = bound_max = tot_max = 0.0
+    for i in range(n):
+        for j in range(m):
+            p = cluster.grid[i][j]
+            macs = 0.0
+            for idx in range(s, e + 1):
+                l = layers[idx]
+                k = idx - s
+                ext_oh = rows[idx + 1][i] + halo_lo[k + 1] + halo_hi[k + 1]
+                ext_ow = cols[idx + 1][j] + halo_lo[k + 1] + halo_hi[k + 1]
+                if l.pool:
+                    macs += ext_oh * ext_ow * max(l.in_channels, 1) * l.kernel ** 2
+                else:
+                    macs += (
+                        3.0 * ext_oh * ext_ow * l.kernel ** 2
+                        * l.in_channels * l.out_channels
+                    )
+            compute_ij = batch * macs / p.flops
+            ch, cw = rows[s][i], cols[s][j]
+            halo_elems = (
+                (ch + halo_lo[0] + halo_hi[0]) * (cw + halo_lo[0] + halo_hi[0])
+                - ch * cw
+            )
+            boundary_ij = batch * 2 * halo_elems * cin * db / p.link_bw
+            comp_max = max(comp_max, compute_ij)
+            bound_max = max(bound_max, boundary_ij)
+            tot_max = max(tot_max, compute_ij + boundary_ij)
+    sync_s = batch * 2 * cluster.max_sync_latency
+    return comp_max, bound_max, sync_s, comp_max + bound_max - tot_max
+
+
+def _any_group_cost(
+    layers, ext, tiles, s, e, n, m, hw, batch, schedule, mode="spatial"
+) -> tuple[float, float, float, float]:
+    """Dispatch: homogeneous symmetric-tile model vs cluster makespan model."""
+    if isinstance(hw, ClusterSpec):
+        return _group_cost_cluster(layers, ext, tiles, s, e, hw, batch, mode)
+    return _group_cost(layers, ext, s, e, n, m, hw, batch, schedule, mode)
+
+
 def _filter_bytes(layers: Sequence[LayerDef], idxs, dtype_bytes: int) -> float:
     return sum(
         layers[i].kernel ** 2 * layers[i].in_channels * layers[i].out_channels * dtype_bytes
@@ -261,9 +645,11 @@ def profile_cost(
     groups: Sequence[Group],
     n: int,
     m: int,
-    hw: HardwareProfile,
+    hw: HardwareProfile | ClusterSpec,
     batch: int = 1,
     schedule: str = "sync",
+    *,
+    partition: TilePartition | None = None,
 ) -> dict:
     """Total cycle cost split by component for a (possibly hybrid) grouping
     profile - per-group modes are read off the groups themselves.
@@ -278,13 +664,29 @@ def profile_cost(
     folds into the same collective - a modeling choice recorded in
     DESIGN.md §7); a pure-spatial plan keeps the full-stack charge, which
     is the executor's actual batch-end psum payload.
+
+    ``hw`` may be a ``ClusterSpec``: spatial groups then cost the *makespan*
+    over the per-device (tile, link) pairs of ``partition`` (or the
+    ragged-even default partition when None), plan-level collective terms
+    take the conservative cluster scalars, and the ``hidden`` overlap credit
+    is the makespan's subadditivity slack (DESIGN.md §8).
     """
     _check_schedule(schedule)
     ext = _map_extents(input_hw, layers)
+    tiles_rc = None
+    if isinstance(hw, ClusterSpec):
+        if (hw.n, hw.m) != (n, m):
+            raise ValueError(f"cluster grid {(hw.n, hw.m)} != tile grid {(n, m)}")
+        cross = crossover_of(groups)
+        if partition is None:
+            # score against the partition the planner would build
+            partition = cluster_partition(input_hw, layers, hw, cross)
+        tiles_rc = _layer_tiles(input_hw, layers, n, m, partition, cross)
     compute = boundary = sync = hidden = 0.0
     for g in groups:
-        c, b, s_, h = _group_cost(
-            layers, ext, g.start, g.end, n, m, hw, batch, schedule, mode=g.mode
+        c, b, s_, h = _any_group_cost(
+            layers, ext, tiles_rc, g.start, g.end, n, m, hw, batch, schedule,
+            mode=g.mode,
         )
         compute += c
         boundary += b
@@ -315,23 +717,32 @@ def profile_cost(
 
 def _spatial_group_mem(
     layers: Sequence[LayerDef], ext, s: int, e: int, n: int, m: int,
-    batch: int, dtype_bytes: int,
+    batch: int, dtype_bytes: int, tiles=None,
 ) -> tuple[float, float]:
     """(activation_bytes, halo_bytes) of spatial group [s, e] on one device:
     halo-extended input tiles stored for backward (x2: feature + delta map)
-    plus the transient group-input halo strips."""
+    plus the transient group-input halo strips.  ``tiles`` (per-layer
+    per-tile sizes): the ragged executor pads every device to the *largest*
+    tile, so non-uniform partitions charge the max tile extent."""
     halo_lo, halo_hi = _halo_widths(layers, s, e)
+
+    def shard(idx):
+        if tiles is not None:
+            return max(tiles[0][idx]), max(tiles[1][idx])
+        ih, iw = ext[idx]
+        return ih // n, iw // m
+
     act = 0.0
     for idx in range(s, e + 1):
         l = layers[idx]
-        ih, iw = ext[idx]
+        sh, sw = shard(idx)
         k = idx - s
-        eh = ih // n + halo_lo[k] + halo_hi[k]
-        ew = iw // m + halo_lo[k] + halo_hi[k]
+        eh = sh + halo_lo[k] + halo_hi[k]
+        ew = sw + halo_lo[k] + halo_hi[k]
         act += 2.0 * batch * eh * ew * max(l.in_channels, 1) * dtype_bytes
-    ih, iw = ext[s]
-    core = (ih // n) * (iw // m)
-    ext_elems = (ih // n + halo_lo[0] + halo_hi[0]) * (iw // m + halo_lo[0] + halo_hi[0])
+    sh, sw = shard(s)
+    core = sh * sw
+    ext_elems = (sh + halo_lo[0] + halo_hi[0]) * (sw + halo_lo[0] + halo_hi[0])
     halo = batch * (ext_elems - core) * max(layers[s].in_channels, 1) * dtype_bytes
     return act, halo
 
@@ -345,6 +756,7 @@ def peak_device_memory(
     *,
     batch: int = 1,
     dtype_bytes: int = 4,
+    partition: TilePartition | None = None,
 ) -> dict:
     """Per-device training working set (bytes) under a (possibly hybrid)
     grouping profile - the quantity behind the paper's "up to 8x memory
@@ -369,6 +781,11 @@ def peak_device_memory(
     """
     ext = _map_extents(input_hw, layers)
     tiles = n * m
+    tiles_rc = (
+        None
+        if partition is None
+        else _layer_tiles(input_hw, layers, n, m, partition, crossover_of(groups))
+    )
     act = halo = 0.0
     for g in groups:
         if g.mode == "data":
@@ -379,7 +796,9 @@ def peak_device_memory(
                     * max(layers[idx].in_channels, 1) * dtype_bytes
                 )
             continue
-        a, h = _spatial_group_mem(layers, ext, g.start, g.end, n, m, batch, dtype_bytes)
+        a, h = _spatial_group_mem(
+            layers, ext, g.start, g.end, n, m, batch, dtype_bytes, tiles_rc
+        )
         act += a
         halo += h
     # Reshard transient: the two tiled all-gathers materialise the full map
@@ -425,24 +844,35 @@ def score_profile(
     groups: Sequence[Group],
     n: int,
     m: int,
-    hw: HardwareProfile,
+    hw: HardwareProfile | ClusterSpec,
     batch: int = 1,
     schedule: str = "sync",
     mem_limit: float | None = None,
+    partition: TilePartition | None = None,
 ) -> float | None:
     """Modeled cycle total for a candidate profile, or None when its
     ``peak_device_memory`` total exceeds ``mem_limit``.  The single scoring
     routine behind every crossover-candidate comparison - the optimizer's
     joint DP scan and the planner's fixed-profile scan
     (``fusion._resolve_crossover``) both call this, so cost and feasibility
-    can never diverge between the two."""
+    can never diverge between the two.
+
+    A ClusterSpec with no explicit partition resolves to the balanced
+    partition the planner would build, so *both* the cost and the memory
+    feasibility check model the padded tiles the ragged executor actually
+    allocates."""
+    if isinstance(hw, ClusterSpec) and partition is None:
+        partition = cluster_partition(input_hw, layers, hw, crossover_of(groups))
     if mem_limit is not None:
         mem = peak_device_memory(
-            input_hw, layers, groups, n, m, batch=batch, dtype_bytes=hw.dtype_bytes
+            input_hw, layers, groups, n, m, batch=batch,
+            dtype_bytes=hw.dtype_bytes, partition=partition,
         )["total"]
         if mem > mem_limit:
             return None
-    return profile_cost(input_hw, layers, groups, n, m, hw, batch, schedule)["total"]
+    return profile_cost(
+        input_hw, layers, groups, n, m, hw, batch, schedule, partition=partition
+    )["total"]
 
 
 def optimize_grouping(
@@ -450,12 +880,13 @@ def optimize_grouping(
     layers: Sequence[LayerDef],
     n: int,
     m: int,
-    hw: HardwareProfile,
+    hw: HardwareProfile | ClusterSpec,
     batch: int = 1,
     max_group: int | None = None,
     schedule: str = "sync",
     crossover: int | str | None = None,
     mem_limit: float | None = None,
+    partition: TilePartition | None = None,
 ) -> list[Group]:
     """DP over group boundaries minimising modelled cycle time, optionally
     jointly with the spatial->data crossover layer.
@@ -489,6 +920,25 @@ def optimize_grouping(
     _check_schedule(schedule)
     L = len(layers)
     ext = _map_extents(input_hw, layers)
+    tiles_rc = None
+    if isinstance(hw, ClusterSpec):
+        if (hw.n, hw.m) != (n, m):
+            raise ValueError(f"cluster grid {(hw.n, hw.m)} != tile grid {(n, m)}")
+        # The DP scores spatial groups against the full-stack partition (the
+        # crossover scan re-scores each candidate through profile_cost,
+        # which re-balances per candidate); stacks whose final extent cannot
+        # be partitioned need an explicit crossover.
+        part_dp = (
+            partition
+            if partition is not None
+            else cluster_partition(input_hw, layers, hw, None)
+        )
+        tiles_rc = _layer_tiles(input_hw, layers, n, m, part_dp, None)
+    elif partition is not None:
+        tiles_rc = _layer_tiles(input_hw, layers, n, m, partition, None)
+    # the per-group memory prune charges the padded (max-tile) extents the
+    # ragged executor allocates, matching score_profile's full check
+    mem_tiles = tiles_rc
     max_group = max_group or L
     INF = float("inf")
     dp = [INF] * (L + 1)
@@ -496,11 +946,13 @@ def optimize_grouping(
     choice = [0] * (L + 1)
     for e in range(1, L + 1):
         for s in range(max(1, e - max_group + 1), e + 1):
-            c, b, y, h = _group_cost(layers, ext, s - 1, e - 1, n, m, hw, batch, schedule)
+            c, b, y, h = _any_group_cost(
+                layers, ext, tiles_rc, s - 1, e - 1, n, m, hw, batch, schedule
+            )
             if mem_limit is not None:
                 # necessary condition: one group's own working set must fit
                 a, hl = _spatial_group_mem(layers, ext, s - 1, e - 1, n, m, batch,
-                                           hw.dtype_bytes)
+                                           hw.dtype_bytes, mem_tiles)
                 if a + hl > mem_limit:
                     continue
             cand = dp[s - 1] + c + b + y - h
@@ -526,7 +978,7 @@ def optimize_grouping(
         groups = backtrack(L)
         if (
             score_profile(input_hw, layers, groups, n, m, hw, batch, schedule,
-                          mem_limit)
+                          mem_limit, partition=partition)
             is None
         ):
             raise ValueError(
@@ -550,7 +1002,8 @@ def optimize_grouping(
         if c is not None:
             groups = groups + [Group(c, L - 1, mode="data")]
         cost = score_profile(
-            input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit
+            input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit,
+            partition=partition,
         )
         if cost is None:
             continue

@@ -185,6 +185,96 @@ def halo_exchange_2d_packed(
     return x_rows, col_lo, col_hi
 
 
+def _update_in_dim(arr: jax.Array, upd: jax.Array, start, dim: int) -> jax.Array:
+    """dynamic_update_slice along one dim (start may be traced)."""
+    starts = [jnp.int32(0)] * arr.ndim
+    starts[dim] = jnp.asarray(start, jnp.int32)
+    return lax.dynamic_update_slice(arr, upd, starts)
+
+
+def halo_exchange_1d_ragged(
+    x: jax.Array,
+    halo_lo: int,
+    halo_hi: int,
+    axis_name: str,
+    sizes: tuple[int, ...],
+    *,
+    dim: int = 0,
+    out_extent: int | None = None,
+) -> jax.Array:
+    """Halo exchange over *ragged* shards in padded-to-max layout
+    (DESIGN.md §8).
+
+    ``x``: each shard holds ``max(sizes)`` slots along ``dim``; shard i's
+    valid data occupies slots [0, sizes[i]) and the rest MUST be zero (the
+    padded-tile invariant the ragged executor maintains).  The strip a shard
+    sends *up* is its last ``halo_lo`` valid rows - a per-device
+    ``dynamic_slice`` at ``sizes[i] - halo_lo`` (sizes is a static table
+    indexed by ``axis_index``, so the slice start is the only traced value;
+    strip widths stay static as SPMD requires).  The received hi strip lands
+    at slot ``halo_lo + sizes[i]``, immediately after the valid data.
+
+    Returns an array of static extent ``out_extent`` (>= halo_lo +
+    max(sizes) + halo_hi; callers pass the planner's padded extent) laid out
+    ``[recv_lo | valid | recv_hi | zeros]``.  Edge shards receive
+    ``ppermute`` zeros = the global SAME zero padding, exactly like the
+    uniform exchange.  Requires min(sizes) >= max(halo_lo, halo_hi), checked
+    at plan time (``build_stack_plan``).
+    """
+    n = axis_size(axis_name)
+    smax = max(sizes)
+    if x.shape[dim] != smax:
+        raise ValueError(
+            f"ragged exchange expects padded extent {smax} on dim {dim}; "
+            f"got shape {x.shape}"
+        )
+    ext = out_extent if out_extent is not None else smax + halo_lo + halo_hi
+    if ext < halo_lo + smax + halo_hi:
+        raise ValueError(f"out_extent {ext} < {halo_lo}+{smax}+{halo_hi}")
+    if halo_lo == 0 and halo_hi == 0 and ext == smax:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[dim] = (halo_lo, ext - halo_lo - smax)
+    out = jnp.pad(x, pad)
+    h_i = jnp.asarray(sizes, jnp.int32)[lax.axis_index(axis_name)]
+    if halo_hi > 0:
+        send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
+        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+        out = _update_in_dim(out, recv_hi, halo_lo + h_i, dim)
+    if halo_lo > 0:
+        send_up = lax.dynamic_slice_in_dim(x, h_i - halo_lo, halo_lo, axis=dim)
+        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+        out = _update_in_dim(out, recv_lo, 0, dim)
+    return out
+
+
+def halo_exchange_2d_ragged(
+    x: jax.Array,
+    halo: tuple[int, int, int, int],
+    row_axis: str,
+    col_axis: str,
+    row_sizes: tuple[int, ...],
+    col_sizes: tuple[int, ...],
+    *,
+    dims: tuple[int, int] = (0, 1),
+    out_extents: tuple[int, int] | None = None,
+) -> jax.Array:
+    """2-D ragged halo exchange: rows first, then columns over the
+    row-extended array so corner strips ride the second round (same ordering
+    as the uniform exchange).  Neighbours along the column axis share the
+    same tile-row index, hence the same row layout, so the column strips
+    align positionally."""
+    top, bottom, left, right = halo
+    oe = out_extents or (None, None)
+    y = halo_exchange_1d_ragged(
+        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0]
+    )
+    y = halo_exchange_1d_ragged(
+        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1]
+    )
+    return y
+
+
 def send_boundary_sum_1d(
     x: jax.Array,
     overlap_lo: int,

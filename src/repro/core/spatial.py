@@ -33,7 +33,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.tiling import ConvSpec
-from repro.core.halo import axis_size, halo_exchange_2d, halo_exchange_1d_packed
+from repro.core.halo import (
+    axis_size,
+    halo_exchange_2d,
+    halo_exchange_1d_packed,
+)
 from repro.core.backend import (
     ACTIVATIONS as _ACTIVATIONS,
     Activation,
@@ -333,6 +337,121 @@ def _finish_layer(
 
 
 # ---------------------------------------------------------------------------
+# Ragged (non-uniform partition) execution: padded-to-max tiles + validity
+# masks (DESIGN.md §8).  Everything below runs INSIDE shard_map.
+# ---------------------------------------------------------------------------
+
+
+def _fit_extent(y: jax.Array, target_hw: tuple[int, int], dims: tuple[int, int] = (1, 2)) -> jax.Array:
+    """Pad (zeros) or slice ``y`` to the canonical static extent the next
+    ragged layer expects.  Rows/cols beyond every tile's valid count are
+    garbage-or-zero either way and are re-zeroed by the validity mask."""
+    for d, tgt in zip(dims, target_hw):
+        cur = y.shape[d]
+        if cur > tgt:
+            y = lax.slice_in_dim(y, 0, tgt, axis=d)
+        elif cur < tgt:
+            pad = [(0, 0)] * y.ndim
+            pad[d] = (0, tgt - cur)
+            y = jnp.pad(y, pad)
+    return y
+
+
+def _ragged_mask(
+    ext_h: int,
+    ext_w: int,
+    halo: tuple[int, int, int, int],
+    out_size: tuple[jax.Array, jax.Array],
+    out_off: tuple[jax.Array, jax.Array],
+    map_hw: tuple[int, int],
+) -> jax.Array:
+    """0/1 mask over a ragged tile's canonical (padded) extended output.
+
+    A position survives iff it is (a) inside this tile's *valid* window -
+    rows [0, top + own_i + bottom) of the padded layout, the rest being
+    pad slots other tiles own - and (b) inside the true map bounds (the
+    off-map condition of `_offmap_mask`, with the tile origin read from the
+    boundary table instead of i * shard).  Zeroing both restores the
+    padded-tile invariant (pad slots exactly zero) that the halo exchange,
+    BN statistics, loss sums, and AD-derived weight-gradient partial sums
+    all rely on."""
+    top, bottom, left, right = halo
+    oh_i, ow_j = out_size
+    r0, c0 = out_off
+    rows = lax.iota(jnp.int32, ext_h)
+    cols = lax.iota(jnp.int32, ext_w)
+    gr = r0 - top + rows
+    gc = c0 - left + cols
+    rmask = (rows < top + oh_i + bottom) & (gr >= 0) & (gr < map_hw[0])
+    cmask = (cols < left + ow_j + right) & (gc >= 0) & (gc < map_hw[1])
+    return (rmask[:, None] & cmask[None, :]).astype(jnp.float32)
+
+
+def _core_mask_ragged(
+    ext_h: int,
+    ext_w: int,
+    halo: tuple[int, int, int, int],
+    out_size: tuple[jax.Array, jax.Array],
+) -> jax.Array:
+    """Core (owned) region of a ragged halo-extended tile: rows
+    [top, top + own_i), cols [left, left + own_j)."""
+    top, _, left, _ = halo
+    oh_i, ow_j = out_size
+    rows = lax.iota(jnp.int32, ext_h)
+    cols = lax.iota(jnp.int32, ext_w)
+    rmask = (rows >= top) & (rows < top + oh_i)
+    cmask = (cols >= left) & (cols < left + ow_j)
+    return (rmask[:, None] & cmask[None, :]).astype(jnp.float32)
+
+
+def apply_layer_local_ragged(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    out_halo: tuple[int, int, int, int],
+    out_size: tuple[jax.Array, jax.Array],
+    out_off: tuple[jax.Array, jax.Array],
+    canon_out_hw: tuple[int, int],
+    map_out_hw: tuple[int, int],
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    batch_axis: str | None = None,
+    backend: str = "xla",
+    block_oh: int | None = None,
+) -> jax.Array:
+    """One layer of a ragged (non-uniform partition) tile.
+
+    ``x`` is the canonical padded extended input (valid window [0, lo +
+    own_i + hi), zeros beyond); the VALID conv produces every tile's valid
+    outputs in rows [0, lo' + own_out_i + hi') (windows of valid outputs
+    read only valid-or-correct-zero positions - the padded-tile invariant +
+    stride-aligned boundaries guarantee it, DESIGN.md §8), then the output
+    is refit to the canonical static extent and masked: BN statistics over
+    the ragged core only, and the combined validity/off-map mask re-zeroes
+    pad slots so the invariant holds for the next layer."""
+    y, fused = _conv_or_pool(x, params, layer, backend, block_oh)
+    y = _fit_extent(y, canon_out_hw)
+    if layer.batch_norm and not layer.pool:
+        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+        bn_axes = (row_axis, col_axis)
+        if batch_axis is not None:
+            bn_axes = (batch_axis,) + bn_axes
+        mask = _core_mask_ragged(y.shape[1], y.shape[2], out_halo, out_size)
+        mask = mask[None, :, :, None]
+        s = lax.psum(jnp.sum(y * mask, axis=(0, 1, 2)), bn_axes)
+        ss = lax.psum(jnp.sum(jnp.square(y) * mask, axis=(0, 1, 2)), bn_axes)
+        mean = s / n_global
+        var = ss / n_global - jnp.square(mean)
+        y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+    if not fused:
+        y = _ACTIVATIONS[layer.act](y)
+    m = _ragged_mask(y.shape[1], y.shape[2], out_halo, out_size, out_off, map_out_hw)
+    return y * m[None, :, :, None].astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Hybrid partitioning: spatial->data reshard + data-mode (full-map) layers
 # ---------------------------------------------------------------------------
 
@@ -366,6 +485,12 @@ def reshard_spatial_to_data(
     m = axis_size(col_axis)
     x = lax.all_gather(x, row_axis, axis=dims[0], tiled=True)
     x = lax.all_gather(x, col_axis, axis=dims[1], tiled=True)
+    return _batch_block_slice(x, row_axis, col_axis, n, m)
+
+
+def _batch_block_slice(x: jax.Array, row_axis: str, col_axis: str, n: int, m: int) -> jax.Array:
+    """Device (i, j) keeps batch block i*m + j of the assembled full maps -
+    the P((row_axis, col_axis)) batch sharding of the data-mode tail."""
     t = n * m
     b = x.shape[0]
     if b % t:
@@ -376,6 +501,43 @@ def reshard_spatial_to_data(
     bs = b // t
     d = lax.axis_index(row_axis) * m + lax.axis_index(col_axis)
     return lax.dynamic_slice_in_dim(x, d * bs, bs, axis=0)
+
+
+def reshard_spatial_to_data_ragged(
+    x: jax.Array,
+    row_axis: str,
+    col_axis: str,
+    row_sizes: tuple[int, ...],
+    col_sizes: tuple[int, ...],
+    *,
+    dims: tuple[int, int] = (1, 2),
+) -> jax.Array:
+    """Spatial->data crossover for ragged partitions: the tiled all-gathers
+    assemble *padded* tiles (each block max-sized, pad slots zero), so the
+    full map is re-stitched from each block's valid window with static
+    slices (the boundary tables are plan constants) before the batch split.
+    The adjoint - scatter back into padded blocks, reduce-scatter - is
+    derived by AD, exactly like the uniform reshard."""
+    n, m = len(row_sizes), len(col_sizes)
+    hmax, wmax = max(row_sizes), max(col_sizes)
+    x = lax.all_gather(x, row_axis, axis=dims[0], tiled=True)
+    x = lax.all_gather(x, col_axis, axis=dims[1], tiled=True)
+    if hmax * n != x.shape[dims[0]] or wmax * m != x.shape[dims[1]]:
+        raise ValueError(
+            f"gathered padded grid {x.shape} inconsistent with sizes "
+            f"{row_sizes} x {col_sizes}"
+        )
+    rows = [
+        lax.slice_in_dim(x, i * hmax, i * hmax + h, axis=dims[0])
+        for i, h in enumerate(row_sizes)
+    ]
+    x = jnp.concatenate(rows, axis=dims[0]) if len(rows) > 1 else rows[0]
+    cols = [
+        lax.slice_in_dim(x, j * wmax, j * wmax + w, axis=dims[1])
+        for j, w in enumerate(col_sizes)
+    ]
+    x = jnp.concatenate(cols, axis=dims[1]) if len(cols) > 1 else cols[0]
+    return _batch_block_slice(x, row_axis, col_axis, n, m)
 
 
 def apply_layer_data(

@@ -152,6 +152,198 @@ def partition_grid(height: int, width: int, n: int, m: int) -> list[list[TileBox
 
 
 # ---------------------------------------------------------------------------
+# Explicit tile partitions: per-axis boundary arrays (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def even_bounds_1d(extent: int, parts: int) -> tuple[int, ...]:
+    """Near-equal boundary offsets (0, b1, ..., extent) for ``parts`` tiles -
+    the boundary-array form of ``partition_1d`` (ragged-even: the first
+    ``extent % parts`` tiles are one row taller)."""
+    spans = partition_1d(extent, parts)
+    return tuple(s.lo for s in spans) + (extent,)
+
+
+def spans_from_bounds(bounds: Sequence[int]) -> list[Span]:
+    """Inclusive spans of a boundary array: tile i owns [b_i, b_{i+1})."""
+    return [Span(lo, hi - 1) for lo, hi in zip(bounds, bounds[1:])]
+
+
+def bounds_sizes(bounds: Sequence[int]) -> tuple[int, ...]:
+    """Per-tile extents of a boundary array."""
+    return tuple(hi - lo for lo, hi in zip(bounds, bounds[1:]))
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePartition:
+    """Explicit n x m grid partition of an H x W map: per-axis boundary
+    offsets instead of the implicit uniform H/n x W/m split.
+
+    ``row_bounds`` = (0, b1, ..., H): tile row i owns map rows
+    [row_bounds[i], row_bounds[i+1]).  Uniform grids are the special case of
+    equal boundary gaps; heterogeneous clusters size each tile proportional
+    to its device's throughput (``core.grouping.cluster_partition``), and
+    non-divisible extents get the ragged-even split (``TilePartition.even``).
+
+    Boundaries are *map offsets at the layer the partition is expressed at*
+    (the stack input, for planner-facing partitions); per-layer boundaries
+    derive by ``push_bounds_1d`` through each layer's stride, which requires
+    interior boundaries divisible by the cumulative stride - the invariant
+    that keeps per-layer halo widths uniform across tiles (DESIGN.md §8).
+    """
+
+    row_bounds: tuple[int, ...]
+    col_bounds: tuple[int, ...]
+
+    def __post_init__(self):
+        for name, b in (("row_bounds", self.row_bounds), ("col_bounds", self.col_bounds)):
+            if len(b) < 2 or b[0] != 0:
+                raise ValueError(f"{name} must start at 0 with >= 1 tile; got {b}")
+            if any(hi <= lo for lo, hi in zip(b, b[1:])):
+                raise ValueError(f"{name} must be strictly increasing; got {b}")
+
+    @property
+    def n(self) -> int:
+        return len(self.row_bounds) - 1
+
+    @property
+    def m(self) -> int:
+        return len(self.col_bounds) - 1
+
+    @property
+    def extent(self) -> tuple[int, int]:
+        return (self.row_bounds[-1], self.col_bounds[-1])
+
+    @property
+    def row_sizes(self) -> tuple[int, ...]:
+        return bounds_sizes(self.row_bounds)
+
+    @property
+    def col_sizes(self) -> tuple[int, ...]:
+        return bounds_sizes(self.col_bounds)
+
+    @property
+    def is_uniform(self) -> bool:
+        """Equal-boundary special case: every tile the same shape (the
+        pre-refactor uniform grid; executors take the legacy zero-padding-
+        free path and produce identical jaxprs)."""
+        return len(set(self.row_sizes)) == 1 and len(set(self.col_sizes)) == 1
+
+    @staticmethod
+    def even(h: int, w: int, n: int, m: int) -> "TilePartition":
+        """Near-equal split (uniform when n | h and m | w, ragged-even
+        otherwise) - the boundary-array form of the old implicit grid."""
+        return TilePartition(even_bounds_1d(h, n), even_bounds_1d(w, m))
+
+    @staticmethod
+    def from_sizes(row_sizes: Sequence[int], col_sizes: Sequence[int]) -> "TilePartition":
+        rb, cb = [0], [0]
+        for s in row_sizes:
+            rb.append(rb[-1] + s)
+        for s in col_sizes:
+            cb.append(cb[-1] + s)
+        return TilePartition(tuple(rb), tuple(cb))
+
+    def row_span(self, i: int) -> Span:
+        return Span(self.row_bounds[i], self.row_bounds[i + 1] - 1)
+
+    def col_span(self, j: int) -> Span:
+        return Span(self.col_bounds[j], self.col_bounds[j + 1] - 1)
+
+    def tile_box(self, i: int, j: int) -> TileBox:
+        return TileBox(self.row_span(i), self.col_span(j))
+
+
+def push_bounds_1d(bounds: Sequence[int], stride: int, out_extent: int) -> tuple[int, ...]:
+    """Boundary array at a layer *output* from its input boundary array.
+
+    Tile ownership maps through a stride-S layer as ``r_i = b_i / S``
+    (output row r depends on input rows starting at r*S - P, so input
+    boundary b owned by tile i puts output boundary b/S at the same tile).
+    Interior boundaries must divide by the stride - otherwise a tile's halo
+    width would differ from its neighbours', which a single SPMD program
+    cannot express; `even`/`cluster` partitions are stride-aligned by
+    construction (built by pulling an output-level split back through the
+    strides)."""
+    out = [0]
+    for b in bounds[1:-1]:
+        if b % stride:
+            raise ValueError(
+                f"tile boundary {b} not aligned to stride {stride}; partition "
+                "boundaries must divide by the cumulative stride at each layer"
+            )
+        out.append(b // stride)
+    out.append(out_extent)
+    if any(hi <= lo for lo, hi in zip(out, out[1:])):
+        raise ValueError(
+            f"partition leaves an empty tile at a stride-{stride} layer "
+            f"(output bounds {out}); use a coarser grid or different boundaries"
+        )
+    return tuple(out)
+
+
+def pull_bounds_1d(out_bounds: Sequence[int], stride: int, in_extent: int) -> tuple[int, ...]:
+    """Boundary array at a layer *input* from its output boundary array
+    (inverse of ``push_bounds_1d``; always stride-aligned by construction)."""
+    bounds = (0,) + tuple(r * stride for r in out_bounds[1:-1]) + (in_extent,)
+    if any(hi <= lo for lo, hi in zip(bounds, bounds[1:])):
+        raise ValueError(
+            f"pull-back through stride {stride} leaves an empty tile "
+            f"(bounds {bounds})"
+        )
+    return bounds
+
+
+def propagate_bounds(
+    bounds: Sequence[int], strides: Sequence[int], extents: Sequence[int]
+) -> list[tuple[int, ...]]:
+    """Per-layer boundary arrays 0..len(strides) from an input-level array.
+
+    ``extents[l]`` is the map extent at the input of layer l (entry
+    len(strides) = the final output); validates stride alignment and tile
+    non-emptiness at every layer."""
+    if bounds[-1] != extents[0]:
+        raise ValueError(
+            f"partition extent {bounds[-1]} does not match map extent {extents[0]}"
+        )
+    out = [tuple(bounds)]
+    for l, s in enumerate(strides):
+        out.append(push_bounds_1d(out[-1], s, extents[l + 1]))
+    return out
+
+
+def even_bounds_from_output(
+    strides: Sequence[int], extents: Sequence[int], parts: int
+) -> list[tuple[int, ...]]:
+    """Stride-aligned ragged-even boundary arrays for every layer, built by
+    near-evenly splitting the *final* extent and pulling the boundaries back
+    through the strides (b_l = r_{l+1} * S_l).  For grid-divisible extents
+    this is exactly the uniform i*H/n grid at every layer."""
+    out = [even_bounds_1d(extents[-1], parts)]
+    for l in range(len(strides) - 1, -1, -1):
+        out.append(pull_bounds_1d(out[-1], strides[l], extents[l]))
+    out.reverse()
+    return out
+
+
+def derive_axis_bounds(
+    bounds0: Sequence[int] | None,
+    strides: Sequence[int],
+    extents: Sequence[int],
+    parts: int,
+) -> list[tuple[int, ...]]:
+    """Per-layer boundary arrays for one axis: propagate an explicit
+    input-level boundary array through the strides, or build the
+    stride-aligned ragged-even default.  The single derivation the planner
+    (``fusion.build_stack_plan``) and the cost model
+    (``grouping._layer_tiles``) both use, so the executor's geometry and
+    the modeled cost/memory can never desynchronise."""
+    if bounds0 is None:
+        return even_bounds_from_output(strides, extents, parts)
+    return propagate_bounds(bounds0, strides, extents)
+
+
+# ---------------------------------------------------------------------------
 # Layer grouping
 # ---------------------------------------------------------------------------
 
@@ -335,7 +527,11 @@ class TilingPlan:
     """Complete forward-pass geometry for an (n x m) tiling of a conv stack
     under a grouping profile.  Backward geometry mirrors it (eq. 2) and is
     derived by AD at runtime; `bwd_halo_widths` records the analytic widths
-    for the cost model."""
+    for the cost model.
+
+    ``row_bounds`` / ``col_bounds`` (one boundary array per layer extent,
+    DESIGN.md §8) record the explicit tile partition; ``None`` entries mean
+    the legacy per-extent near-even split."""
 
     n: int
     m: int
@@ -343,9 +539,21 @@ class TilingPlan:
     layer_hw: tuple[tuple[int, int], ...]  # map extent at each layer input
     groups: tuple[Group, ...]
     tiles: tuple[tuple[TilePlan, ...], ...]
+    row_bounds: tuple[tuple[int, ...], ...] | None = None
+    col_bounds: tuple[tuple[int, ...], ...] | None = None
 
     def tile_plan(self, i: int, j: int) -> TilePlan:
         return self.tiles[i][j]
+
+    def extent_spans(self, extent_index: int) -> tuple[list[Span], list[Span]]:
+        """(row spans, col spans) of the partition at a layer extent."""
+        if self.row_bounds is not None:
+            return (
+                spans_from_bounds(self.row_bounds[extent_index]),
+                spans_from_bounds(self.col_bounds[extent_index]),
+            )
+        h, w = self.layer_hw[extent_index]
+        return partition_1d(h, self.n), partition_1d(w, self.m)
 
 
 def _layer_extents(input_hw: tuple[int, int], layers: Sequence[ConvSpec]) -> list[tuple[int, int]]:
@@ -365,13 +573,18 @@ def build_tiling_plan(
     n: int,
     m: int,
     groups: Sequence[Group] | None = None,
+    partition: TilePartition | None = None,
 ) -> TilingPlan:
     """Construct the complete forward tiling plan.
 
     Per paper §4.2: for each group (s, e), the output of layer e is
-    partitioned equally among tiles, then eq. (1) recursively yields each
-    tile's dependent region at every intermediate layer down to the group
-    input, which defines the gather (core+halo) box.
+    partitioned among tiles, then eq. (1) recursively yields each tile's
+    dependent region at every intermediate layer down to the group input,
+    which defines the gather (core+halo) box.
+
+    ``partition``: explicit input-level boundary arrays (DESIGN.md §8);
+    per-layer boundaries derive by pushing them through the strides.  None
+    keeps the legacy behaviour (each extent split near-evenly on its own).
     """
     layers = list(layers)
     n_layers = len(layers)
@@ -379,14 +592,32 @@ def build_tiling_plan(
     validate_profile(groups, n_layers)
     extents = _layer_extents(input_hw, layers)
 
+    row_bounds = col_bounds = None
+    if partition is not None:
+        if (partition.n, partition.m) != (n, m):
+            raise ValueError(
+                f"partition grid {(partition.n, partition.m)} != plan grid {(n, m)}"
+            )
+        strides = [sp.stride for sp in layers]
+        row_bounds = tuple(
+            propagate_bounds(partition.row_bounds, strides, [e[0] for e in extents])
+        )
+        col_bounds = tuple(
+            propagate_bounds(partition.col_bounds, strides, [e[1] for e in extents])
+        )
+
     tiles: list[list[TilePlan]] = [[None] * m for _ in range(n)]  # type: ignore
     for i in range(n):
         for j in range(m):
             gplans = []
             for g in groups:
                 out_h, out_w = extents[g.end + 1]
-                out_rows = partition_1d(out_h, n)[i]
-                out_cols = partition_1d(out_w, m)[j]
+                if row_bounds is not None:
+                    out_rows = spans_from_bounds(row_bounds[g.end + 1])[i]
+                    out_cols = spans_from_bounds(col_bounds[g.end + 1])[j]
+                else:
+                    out_rows = partition_1d(out_h, n)[i]
+                    out_cols = partition_1d(out_w, m)[j]
                 # Recurse eq. (1) from group output back to group input,
                 # recording the (unclipped) in/out boxes of each layer.
                 boxes = [TileBox(out_rows, out_cols)]
@@ -422,6 +653,8 @@ def build_tiling_plan(
         layer_hw=tuple(extents),
         groups=tuple(groups),
         tiles=tuple(tuple(r) for r in tiles),
+        row_bounds=row_bounds,
+        col_bounds=col_bounds,
     )
 
 
@@ -440,11 +673,12 @@ def halo_bytes_per_group(plan: TilingPlan, layers: Sequence[ConvSpec], dtype_byt
         total = 0
         ih, iw = plan.layer_hw[g.start]
         ch = layers[g.start].in_channels
+        in_rows, in_cols = plan.extent_spans(g.start)
         for i in range(plan.n):
             for j in range(plan.m):
                 gp = plan.tiles[i][j].groups[gi]
-                core_rows = partition_1d(ih, plan.n)[i]
-                core_cols = partition_1d(iw, plan.m)[j]
+                core_rows = in_rows[i]
+                core_cols = in_cols[j]
                 gb = gp.gather_box
                 clipped = TileBox(gb.rows.clip(ih), gb.cols.clip(iw))
                 halo_elems = (

@@ -70,6 +70,12 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
                          "grouping DP under --groups auto), or a layer index N")
     ap.add_argument("--hw-profile", default="pi3-core",
                     help="tiled: hardware profile for --groups/--crossover auto")
+    ap.add_argument("--cluster", default=None,
+                    help="tiled: heterogeneous cluster spec, e.g. "
+                         "'pi3x3+jetson' - <profile>[x<count>] parts joined "
+                         "by '+', filling the tile grid row-major; overrides "
+                         "--hw-profile and makespan-balances the tile "
+                         "partition to each device's FLOPs (DESIGN.md §8)")
 
 
 def _resolve_groups(spec: str, n_layers: int):
@@ -91,9 +97,15 @@ def _resolve_crossover(spec: str):
 
 
 def _run_tiled(args) -> int:
+    from repro.core.grouping import parse_cluster_spec
     from repro.models.yolo import make_yolo_tiled_arch, yolov2_16_layers
 
     n_layers = len(yolov2_16_layers()[: args.depth])
+    hw = (
+        parse_cluster_spec(args.cluster, args.grid, args.grid)
+        if args.cluster
+        else args.hw_profile
+    )
     arch = make_yolo_tiled_arch(
         input_hw=(args.input_hw, args.input_hw),
         depth=args.depth,
@@ -102,14 +114,20 @@ def _run_tiled(args) -> int:
         groups=_resolve_groups(args.groups, n_layers),
         backend=args.backend,
         schedule=args.schedule,
-        hw=args.hw_profile,
+        hw=hw,
         batch=args.batch,
         crossover=_resolve_crossover(args.crossover),
     )
+    part = arch.plan.partition
     print(
         f"plan: backend={arch.plan.backend} schedule={arch.plan.schedule} "
         f"grid={args.grid}x{args.grid} crossover={arch.plan.crossover} "
         f"groups={[(g.start, g.end, g.mode) for g in arch.plan.groups]}"
+    )
+    print(
+        f"partition: rows={part.row_bounds} cols={part.col_bounds} "
+        f"uniform={arch.plan.is_uniform}"
+        + (f" cluster={args.cluster}" if args.cluster else "")
     )
     pcfg = ParallelConfig(grad_accum=args.grad_accum)
     tcfg = TrainConfig(

@@ -61,6 +61,14 @@ class TiledCNNArch:
         """First data-mode layer of a hybrid plan (None = all spatial)."""
         return self.plan.crossover
 
+    @property
+    def partition(self):
+        """The plan's explicit ``TilePartition`` (DESIGN.md §8).  Non-
+        uniform partitions (heterogeneous clusters, ragged extents) run the
+        padded-tile executor transparently - batches still enter as global
+        arrays; the loss/step wrappers do the layout transforms."""
+        return self.plan.partition
+
     def target_shape(self, batch: int) -> tuple[int, ...]:
         return (batch, *self.plan.out_hw(), self.out_channels)
 

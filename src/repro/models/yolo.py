@@ -23,7 +23,6 @@ from repro.core.fusion import (
     make_tiled_forward,
     make_tiled_loss,
 )
-from repro.core.grouping import HardwareProfile
 from repro.core.spatial import LayerDef, init_stack_params
 from repro.core.tiling import Group, no_grouping
 from repro.models.tiled_cnn import TiledCNNArch
@@ -86,10 +85,11 @@ def make_yolo_tiled_arch(
     *,
     backend: str = "xla",
     schedule: str = "sync",
-    hw: HardwareProfile | str | None = None,
+    hw=None,
     batch: int = 1,
     crossover: int | str | None = None,
     mem_limit: float | None = None,
+    partition=None,
     batch_norm: bool = True,
     mesh=None,
     loss_local=l2_loss_local,
@@ -98,14 +98,17 @@ def make_yolo_tiled_arch(
     ``depth`` layers tiled n x m, with the conv backend, executor schedule
     ("sync" | "overlap"), grouping profile (including ``groups="auto"``
     cost-model selection) and spatial->data ``crossover`` (None | layer
-    index | "auto"; DESIGN.md §7) chosen at plan time."""
+    index | "auto"; DESIGN.md §7) chosen at plan time.  ``hw`` may be a
+    ``HardwareProfile``, a ``ClusterSpec`` (or cluster spec string like
+    ``"pi3x3+jetson"``) for heterogeneous grids, and ``partition`` an
+    explicit ``TilePartition`` (DESIGN.md §8)."""
     from repro.launch.mesh import make_tile_mesh
 
     layers = yolov2_16_layers(batch_norm=batch_norm)[:depth]
     plan = build_stack_plan(
         input_hw, layers, n, m, groups,
         backend=backend, schedule=schedule, hw=hw, batch=batch,
-        crossover=crossover, mem_limit=mem_limit,
+        crossover=crossover, mem_limit=mem_limit, partition=partition,
     )
     return TiledCNNArch(
         plan=plan,

@@ -108,10 +108,11 @@ def test_explicit_groups_crossover_range_validated():
     assert build_stack_plan(HW, LAYERS, 1, 1, crossover=len(LAYERS)).crossover is None
 
 
-def test_data_tail_exempt_from_grid_divisibility():
-    """Data-mode layers hold full maps, so only the spatial prefix (through
-    the crossover input) must divide by the tile grid - hybrid plans unlock
-    stacks whose late extents are grid-ragged (13x13 on a 2x2 grid here)."""
+def test_data_tail_full_maps_vs_ragged_spatial():
+    """Data-mode layers hold full maps; grid-ragged extents (13x13 on a 2x2
+    grid) no longer *require* a crossover - the spatial path plans them as
+    a ragged even split (DESIGN.md §8) - but a hybrid plan still exempts
+    its tail from spatial sharding entirely."""
     layers = [
         LayerDef(3, 1, 3, 8, act="leaky"),
         LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 52 -> 26
@@ -119,15 +120,16 @@ def test_data_tail_exempt_from_grid_divisibility():
         LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 26 -> 13: grid-ragged
         LayerDef(3, 1, 8, 8, act="relu"),
     ]
-    with pytest.raises(ValueError, match="not divisible by tile grid"):
-        build_stack_plan((52, 52), layers, 2, 2)
     plan = build_stack_plan((52, 52), layers, 2, 2, crossover=3)
     assert plan.crossover == 3
-    assert plan.shard_hw[0] == (26, 26)      # spatial input: sharded
+    assert plan.shard_hw[0] == (26, 26)      # spatial input: sharded, uniform
+    assert plan.is_uniform                   # spatial prefix divides evenly
     assert plan.shard_hw[4] == (13, 13)      # data-mode input: full (ragged) map
-    # the crossover input itself is spatially produced, so it must divide
-    with pytest.raises(ValueError, match="not divisible by tile grid"):
-        build_stack_plan((52, 52), layers, 2, 2, crossover=4)
+    # all-spatial and crossover-past-the-ragged-extent plans now go ragged
+    # instead of raising the old divisibility ValueError
+    assert build_stack_plan((52, 52), layers, 2, 2).shard_hw[4] == (7, 7)
+    plan4 = build_stack_plan((52, 52), layers, 2, 2, crossover=4)
+    assert not plan4.is_uniform and plan4.tile_rows[4] == (7, 6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,338 @@
+"""Non-uniform tile partitions (DESIGN.md §8): TilePartition boundary math,
+uniform-equivalence of plans across backend x schedule x crossover, ragged
+even splits for previously-raising extents, heterogeneous ClusterSpec
+parsing, the makespan balancer vs brute force, and the cluster cost model.
+
+Multi-tile ragged *execution* exactness needs fake multi-device topologies
+and runs in a subprocess (scripts/check_pipeline.py via test_spmd.py); here
+everything is pure geometry / 1x1-mesh."""
+import itertools
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    LayerDef,
+    TilePartition,
+    balance_bounds,
+    build_stack_plan,
+    cluster_partition,
+    even_bounds_1d,
+    no_grouping,
+    parse_cluster_spec,
+    peak_device_memory,
+    profile_cost,
+    pull_bounds_1d,
+    push_bounds_1d,
+)
+from repro.core.grouping import (
+    JETSON_PROFILE,
+    PI3_PROFILE,
+    HardwareProfile,
+    _bounds_makespan,
+    optimize_grouping,
+)
+from repro.core.tiling import ConvSpec, build_tiling_plan, propagate_bounds
+from repro.models.yolo import yolov2_16_layers
+
+YOLO4 = yolov2_16_layers()[:4]
+
+
+# ---------------------------------------------------------------------------
+# TilePartition schema + boundary math
+# ---------------------------------------------------------------------------
+
+
+def test_partition_validation():
+    with pytest.raises(ValueError, match="start at 0"):
+        TilePartition((1, 4), (0, 4))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        TilePartition((0, 4, 4), (0, 4))
+    p = TilePartition((0, 4, 7), (0, 3, 5, 7))
+    assert (p.n, p.m) == (2, 3)
+    assert p.extent == (7, 7)
+    assert p.row_sizes == (4, 3) and p.col_sizes == (3, 2, 2)
+    assert not p.is_uniform
+    assert p.tile_box(1, 2).shape == (3, 2)
+
+
+def test_even_partition_uniform_special_case():
+    assert TilePartition.even(32, 32, 2, 2).is_uniform
+    assert TilePartition.even(32, 32, 2, 2).row_sizes == (16, 16)
+    ragged = TilePartition.even(7, 7, 2, 2)
+    assert ragged.row_sizes == (4, 3) and not ragged.is_uniform
+    assert TilePartition.from_sizes((4, 3), (4, 3)) == ragged
+    assert even_bounds_1d(7, 2) == (0, 4, 7)
+
+
+def test_push_pull_bounds():
+    # stride-2 layer, input 16 -> output 8: boundaries halve
+    assert push_bounds_1d((0, 8, 16), 2, 8) == (0, 4, 8)
+    assert pull_bounds_1d((0, 4, 8), 2, 16) == (0, 8, 16)
+    with pytest.raises(ValueError, match="not aligned to stride"):
+        push_bounds_1d((0, 7, 16), 2, 8)
+    with pytest.raises(ValueError, match="empty tile"):
+        push_bounds_1d((0, 4, 8, 16), 4, 2)   # bounds 1,2 vs extent 2: last empty
+
+
+def test_propagate_bounds_through_stack():
+    # conv s1 (34), pool s2 (34 -> 17), conv s1 (17)
+    strides = [1, 2, 1]
+    extents = [34, 34, 17, 17]
+    out = propagate_bounds((0, 18, 34), strides, extents)
+    assert out == [(0, 18, 34), (0, 18, 34), (0, 9, 17), (0, 9, 17)]
+    with pytest.raises(ValueError, match="does not match map extent"):
+        propagate_bounds((0, 18, 32), strides, extents)
+
+
+# ---------------------------------------------------------------------------
+# Uniform equivalence: equal-boundary partitions == pre-refactor plans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "backend,schedule,crossover",
+    list(itertools.product(("xla", "pallas"), ("sync", "overlap"), (None, 2))),
+)
+def test_equal_boundary_partition_plans_identical(backend, schedule, crossover):
+    """Property sweep: an explicit equal-boundary TilePartition produces a
+    plan *equal* (dataclass identity: same shard extents, group halos, tile
+    tables) to the default plan, across backend x schedule x crossover -
+    so the legacy executor path, and therefore jaxprs and gradients, are
+    untouched (jaxpr identity on the 2x2 mesh: scripts/check_pipeline.py)."""
+    kw = dict(backend=backend, schedule=schedule, crossover=crossover)
+    p1 = build_stack_plan((32, 32), YOLO4, 2, 2, **kw)
+    p2 = build_stack_plan(
+        (32, 32), YOLO4, 2, 2, partition=TilePartition.even(32, 32, 2, 2), **kw
+    )
+    assert p1 == p2
+    assert p1.is_uniform
+    assert p1.shard_hw[0] == (16, 16)
+    assert p1.partition == TilePartition.even(32, 32, 2, 2)
+
+
+def test_uniform_tile_tables_match_legacy_shards():
+    plan = build_stack_plan((32, 32), YOLO4, 2, 2)
+    for l in range(len(YOLO4) + 1):
+        h, w = plan.map_hw[l]
+        assert plan.tile_rows[l] == (h // 2,) * 2
+        assert plan.tile_cols[l] == (w // 2,) * 2
+        assert plan.shard_hw[l] == (h // 2, w // 2)
+
+
+# ---------------------------------------------------------------------------
+# Ragged even splits: shapes that previously raised now plan
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_extent_plans_instead_of_raising():
+    """fusion.py used to raise 'map extent not divisible by tile grid'; a
+    7x7 map on a 2x2 mesh now plans as a 4+3 ragged even split (and trains:
+    scripts/check_pipeline.py)."""
+    plan = build_stack_plan((7, 7), [LayerDef(3, 1, 3, 8, act="leaky")], 2, 2)
+    assert not plan.is_uniform
+    assert plan.tile_rows[0] == (4, 3) and plan.tile_cols[0] == (4, 3)
+    assert plan.shard_hw[0] == (4, 4)           # padded-to-max shard
+    assert plan.partition == TilePartition.even(7, 7, 2, 2)
+
+
+def test_ragged_mid_stack_extent_plans():
+    """52x52 -> pools -> 13x13: the 13 extent is grid-ragged on 2x2 and used
+    to require a crossover; now the whole stack plans spatially."""
+    layers = [
+        LayerDef(3, 1, 3, 8, act="leaky"),
+        LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 52 -> 26
+        LayerDef(3, 1, 8, 8, act="relu"),
+        LayerDef(2, 2, 8, 8, pool=True, act="linear"),   # 26 -> 13
+        LayerDef(3, 1, 8, 8, act="relu"),
+    ]
+    plan = build_stack_plan((52, 52), layers, 2, 2)
+    assert not plan.is_uniform
+    assert plan.tile_rows[4] == (7, 6)          # ragged 13 split
+    assert plan.shard_hw[4] == (7, 7)
+    # boundaries stay stride-aligned: the input split is the x4 pull-back
+    assert plan.tile_rows[0] == (28, 24)
+    # an explicit crossover still exempts the data tail (full maps)
+    plan_c = build_stack_plan((52, 52), layers, 2, 2, crossover=3)
+    assert plan_c.shard_hw[4] == (13, 13)
+
+
+def test_misaligned_partition_rejected():
+    with pytest.raises(ValueError, match="aligned to stride"):
+        build_stack_plan((32, 32), YOLO4, 2, 2,
+                         partition=TilePartition((0, 15, 32), (0, 16, 32)))
+
+
+def test_halo_exceeding_smallest_tile_rejected():
+    """A partition skewed past the halo width cannot exchange one strip per
+    side; the planner rejects it with a named error."""
+    from repro.core.tiling import single_group
+
+    layers = [LayerDef(3, 1, 3, 8, act="leaky") for _ in range(4)]
+    with pytest.raises(ValueError, match="exceeds the smallest tile"):
+        build_stack_plan((32, 32), layers, 2, 2, single_group(4),
+                         partition=TilePartition((0, 2, 32), (0, 16, 32)))
+
+
+def test_partition_grid_mismatch_rejected():
+    with pytest.raises(ValueError, match="partition grid"):
+        build_stack_plan((32, 32), YOLO4, 2, 2,
+                         partition=TilePartition.even(32, 32, 4, 4))
+
+
+def test_build_tiling_plan_accepts_partition():
+    layers = [ConvSpec(3, 1, 8, 8), ConvSpec(2, 2, 8, 8, pool=True)]
+    plan = build_tiling_plan((16, 16), layers, 2, 2,
+                             partition=TilePartition((0, 12, 16), (0, 12, 16)))
+    rows, _ = plan.extent_spans(0)
+    assert [s.size for s in rows] == [12, 4]
+    # group outputs still tile the map exactly
+    for gi, g in enumerate(plan.groups):
+        oh, ow = plan.layer_hw[g.end + 1]
+        covered = sum(
+            max(0, min(plan.tiles[i][j].groups[gi].layers[-1].out_box.rows.hi, oh - 1)
+                - max(plan.tiles[i][j].groups[gi].layers[-1].out_box.rows.lo, 0) + 1)
+            * max(0, min(plan.tiles[i][j].groups[gi].layers[-1].out_box.cols.hi, ow - 1)
+                  - max(plan.tiles[i][j].groups[gi].layers[-1].out_box.cols.lo, 0) + 1)
+            for i in range(2) for j in range(2)
+        )
+        assert covered == oh * ow
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec: parsing + makespan balancer + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_parse_cluster_spec():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    assert [p.name for p in c.devices] == ["pi3-core"] * 3 + ["jetson-nano-gpu"]
+    assert (c.n, c.m) == (2, 2) and not c.is_uniform
+    assert parse_cluster_spec("pi3x4", 2, 2).is_uniform
+    with pytest.raises(ValueError, match="unknown device"):
+        parse_cluster_spec("gameboyx4", 2, 2)
+    with pytest.raises(ValueError, match="needs 4"):
+        parse_cluster_spec("pi3x3", 2, 2)
+
+
+def test_cluster_conservative_scalars():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    assert c.min_flops == PI3_PROFILE.flops
+    assert c.link_bw == min(PI3_PROFILE.link_bw, JETSON_PROFILE.link_bw)
+    assert c.sync_latency == max(PI3_PROFILE.sync_latency, JETSON_PROFILE.sync_latency)
+
+
+def _mixed_cluster(ratio: float) -> ClusterSpec:
+    slow = HardwareProfile("slow", 1e9, 1e9, 1e-3, 1e9)
+    fast = HardwareProfile("fast", ratio * 1e9, 1e9, 1e-3, 1e9)
+    return ClusterSpec("mixed", ((slow, slow), (slow, fast)))
+
+
+@pytest.mark.parametrize("ratio", [2, 4, 8, 64])
+def test_balancer_beats_uniform_whenever_flops_differ(ratio):
+    """Satellite acceptance: brute-force over every (row, col) boundary pair
+    of a 2x2 grid - the balancer matches the optimum and is *strictly*
+    below the uniform split whenever device FLOPs differ."""
+    c = _mixed_cluster(ratio)
+    flops = [[p.flops for p in row] for row in c.grid]
+    h = w = 24
+    rb, cb = balance_bounds((h, w), c)
+    got = _bounds_makespan(rb, cb, flops)
+    uniform = _bounds_makespan(even_bounds_1d(h, 2), even_bounds_1d(w, 2), flops)
+    brute = min(
+        _bounds_makespan((0, r, h), (0, q, w), flops)
+        for r in range(1, h) for q in range(1, w)
+    )
+    assert got == pytest.approx(brute, rel=1e-9)
+    assert got < uniform
+
+
+def test_balancer_uniform_cluster_keeps_even_split():
+    c = ClusterSpec("u", ((PI3_PROFILE, PI3_PROFILE), (PI3_PROFILE, PI3_PROFILE)))
+    assert balance_bounds((16, 16), c) == ((0, 8, 16), (0, 8, 16))
+
+
+def test_cluster_partition_is_stride_aligned_and_nonuniform():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    part = cluster_partition((32, 32), YOLO4, c)
+    assert not part.is_uniform
+    # boundaries pull back through the pool stride: even at the input
+    assert all(b % 2 == 0 for b in part.row_bounds[1:-1])
+    plan = build_stack_plan((32, 32), YOLO4, 2, 2, hw=c)
+    assert plan.partition == part and not plan.is_uniform
+
+
+def test_cluster_plan_via_spec_string():
+    plan = build_stack_plan((32, 32), YOLO4, 2, 2, hw="pi3x3+jetson")
+    assert not plan.is_uniform
+
+
+def test_cluster_spec_string_errors_surface():
+    """A near-miss cluster string raises parse_cluster_spec's own error
+    (wrong device count / unknown device), not an unknown-profile KeyError."""
+    with pytest.raises(ValueError, match="needs 4"):
+        build_stack_plan((32, 32), YOLO4, 2, 2, hw="pi3x2+jetson")
+    with pytest.raises(ValueError, match="unknown device"):
+        build_stack_plan((32, 32), YOLO4, 2, 2, hw="pi3x3+jetso")
+    with pytest.raises(KeyError, match="unknown hardware profile"):
+        build_stack_plan((32, 32), YOLO4, 2, 2, hw="gameboy")
+
+
+def test_cluster_mem_limit_models_padded_tiles():
+    """mem_limit under a ClusterSpec must charge the padded balanced
+    partition the ragged executor allocates - a limit between the uniform
+    estimate and the padded one must reject, not silently accept."""
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    part = cluster_partition((32, 32), YOLO4, c)
+    groups = no_grouping(len(YOLO4))
+    uni_mem = peak_device_memory((32, 32), YOLO4, groups, 2, 2, batch=2)["total"]
+    pad_mem = peak_device_memory((32, 32), YOLO4, groups, 2, 2, batch=2,
+                                 partition=part)["total"]
+    assert pad_mem > uni_mem
+    limit = (uni_mem + pad_mem) / 2
+    with pytest.raises(ValueError, match="mem_limit"):
+        optimize_grouping((32, 32), YOLO4, 2, 2, c, batch=2, mem_limit=limit)
+    optimize_grouping((32, 32), YOLO4, 2, 2, c, batch=2, mem_limit=2 * pad_mem)
+
+
+def test_cluster_makespan_strictly_below_uniform_tiling():
+    """Acceptance: on a mixed-FLOPs cluster the balanced partition's modeled
+    cycle total is strictly below uniform tiling's."""
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    groups = no_grouping(len(YOLO4))
+    bal = profile_cost((32, 32), YOLO4, groups, 2, 2, c)["total"]
+    uni = profile_cost((32, 32), YOLO4, groups, 2, 2, c,
+                       partition=TilePartition.even(32, 32, 2, 2))["total"]
+    assert bal < uni
+
+
+def test_cluster_grouping_dp_runs_and_validates():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    groups = optimize_grouping((32, 32), YOLO4, 2, 2, c, batch=2)
+    from repro.core import validate_profile
+
+    validate_profile(groups, len(YOLO4))
+    with pytest.raises(ValueError, match="cluster grid"):
+        optimize_grouping((32, 32), YOLO4, 4, 4, c)
+
+
+def test_peak_memory_charges_padded_tiles():
+    """The ragged executor pads every device to the largest tile, so the
+    memory estimate under a skewed partition exceeds the uniform one."""
+    groups = no_grouping(len(YOLO4))
+    uni = peak_device_memory((32, 32), YOLO4, groups, 2, 2, batch=2)["total"]
+    skew = peak_device_memory(
+        (32, 32), YOLO4, groups, 2, 2, batch=2,
+        partition=TilePartition((0, 8, 32), (0, 8, 32)),
+    )["total"]
+    assert skew > uni
+
+
+def test_homogeneous_cost_model_untouched_by_partition_kwarg():
+    """Regression: HardwareProfile scoring ignores partitions (the old
+    symmetric-tile formulas), so all pre-partition numbers are unchanged."""
+    groups = no_grouping(len(YOLO4))
+    a = profile_cost((32, 32), YOLO4, groups, 2, 2, PI3_PROFILE)
+    b = profile_cost((32, 32), YOLO4, groups, 2, 2, PI3_PROFILE,
+                     partition=TilePartition((0, 8, 32), (0, 8, 32)))
+    assert a == b
