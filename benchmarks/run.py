@@ -78,6 +78,34 @@ def write_trajectory(rows: list[dict], path: str) -> None:
     print(f"  [trajectory] {len(rows)} rows for {sha[:12]} -> {path}")
 
 
+def validate_trajectory(path: str) -> list[str]:
+    """Schema check over the persisted trajectory (enforced by --strict):
+    every entry's hetero-sweep rows must carry the first-class ``overhead``
+    column (measured step time / the uniform partition's) - the headline
+    number the shape-specialized ragged executor (DESIGN.md §9) is judged
+    by, so it can never silently drop out of the history."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"trajectory {path} unreadable: {e}"]
+    problems = []
+    for entry in data.get("trajectory", []):
+        missing = [
+            r.get("name", "?")
+            for r in entry.get("rows", [])
+            if "/hetero/" in r.get("name", "") and "overhead" not in r
+        ]
+        if missing:
+            problems.append(
+                f"entry {entry.get('sha', '?')[:12]} hetero rows lack "
+                f"'overhead': {', '.join(missing)}"
+            )
+    return problems
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="", help="comma list, e.g. fig5,fig7")
@@ -132,6 +160,9 @@ def main() -> int:
         except Exception:
             failures += 1
             print(f"  FAILED:\n{traceback.format_exc()}", flush=True)
+    if args.strict:
+        for p in validate_trajectory(args.json):
+            off_claims.append(f"trajectory: {p}")
     if args.strict and off_claims:
         print(f"\n--strict: {len(off_claims)} OFF claim(s):", flush=True)
         for c in off_claims:

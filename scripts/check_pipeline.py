@@ -324,25 +324,29 @@ for backend in ("xla", "pallas"):
     print(f"[partition/{backend}] equal-boundary plan + 2x2 deferred-step jaxpr identical")
 
 # (b) ragged even split: extents that used to raise the divisibility
-# ValueError now train exactly (7x7 on 2x2; ragged 17x17 mid-extent).
+# ValueError now train exactly (7x7 on 2x2; ragged 17x17 mid-extent) -
+# through both the shape-specialized executor (the default) and the
+# padded-to-max fallback.
 for label, rhw, rlayers in (
     ("7x7 conv", (7, 7), [LAYERS[0]]),
     ("34x34 yolo4", (34, 34), LAYERS),
 ):
-    rplan2 = build_stack_plan(rhw, rlayers, 2, 2)
-    assert not rplan2.is_uniform
-    rp = init_stack_params(key, rlayers)
-    rx2 = jax.random.normal(jax.random.PRNGKey(9), (4, *rhw, 3))
-    rt2 = 0.05 * jax.random.normal(
-        jax.random.PRNGKey(10), (4, *rplan2.out_hw(), rlayers[-1].out_channels))
-    rloss = jax.jit(_mtl(rplan2, mesh, l2_loss_local))
-    rref2 = float(reference_loss(rp, rx2, rt2, rplan2, l2_loss_local))
-    rerr2 = abs(float(rloss(rp, rx2, rt2)) - rref2)
-    rg2 = jax.jit(jax.grad(lambda p: rloss(p, rx2, rt2)))(rp)
-    rgr2 = jax.grad(lambda p: reference_loss(p, rx2, rt2, rplan2, l2_loss_local))(rp)
-    rgerr2 = max_leaf_err(rg2, rgr2)
-    print(f"[partition] ragged even {label}: loss err={rerr2:.3e} grad maxerr={rgerr2:.3e}")
-    assert rerr2 < 1e-5 * max(1.0, abs(rref2)) and rgerr2 < 1e-4
+    for rexec in ("spec", "padded"):
+        rplan2 = build_stack_plan(rhw, rlayers, 2, 2, ragged_exec=rexec)
+        assert not rplan2.is_uniform and rplan2.ragged_exec == rexec
+        rp = init_stack_params(key, rlayers)
+        rx2 = jax.random.normal(jax.random.PRNGKey(9), (4, *rhw, 3))
+        rt2 = 0.05 * jax.random.normal(
+            jax.random.PRNGKey(10), (4, *rplan2.out_hw(), rlayers[-1].out_channels))
+        rloss = jax.jit(_mtl(rplan2, mesh, l2_loss_local))
+        rref2 = float(reference_loss(rp, rx2, rt2, rplan2, l2_loss_local))
+        rerr2 = abs(float(rloss(rp, rx2, rt2)) - rref2)
+        rg2 = jax.jit(jax.grad(lambda p: rloss(p, rx2, rt2)))(rp)
+        rgr2 = jax.grad(lambda p: reference_loss(p, rx2, rt2, rplan2, l2_loss_local))(rp)
+        rgerr2 = max_leaf_err(rg2, rgr2)
+        print(f"[partition/{rexec}] ragged even {label}: "
+              f"loss err={rerr2:.3e} grad maxerr={rgerr2:.3e}")
+        assert rerr2 < 1e-5 * max(1.0, abs(rref2)) and rgerr2 < 1e-4
 
 # (c) heterogeneous cluster end-to-end: pi3x3+jetson on the 2x2 mesh -
 # FLOPs-balanced non-uniform partition, modeled makespan strictly below
@@ -373,6 +377,61 @@ cstate2, cmetrics = jax.jit(ctrain)(cstate, {"x": x, "t": t})
 cuerr = max_leaf_err(cstate2.params, ref_params1)
 print(f"[cluster] trainer update maxerr={cuerr:.3e}")
 assert cuerr < 1e-4
+
+# (d) shape-specialized ragged executor (DESIGN.md §9): the spec
+# train-step jaxpr contains NO dynamic slicing (static per-shape programs
+# switched on the axis index; the padded fallback's sizes-table machinery
+# does), convolves TRUE extents (a conv over the smaller tile's valid
+# window appears only in the spec jaxpr; the fallback convs only the
+# padded max extent), and compiles one conv program per distinct tile
+# shape (more conv eqns than the fallback).  A grouped non-uniform plan
+# (remaining halo > 0 mid-group -> the off-map rim masking path) trains
+# exactly.
+SPEC_LAYERS = [LAYERS[0]]
+sp = init_stack_params(key, SPEC_LAYERS)
+sx = jax.random.normal(jax.random.PRNGKey(11), (4, 7, 7, 3))
+jx_spec = {}
+for rexec in ("spec", "padded"):
+    splan = build_stack_plan((7, 7), SPEC_LAYERS, 2, 2, ragged_exec=rexec)
+    assert not splan.is_uniform and splan.crossover is None
+    st = 0.05 * jax.random.normal(
+        jax.random.PRNGKey(12), (4, *splan.out_hw(), SPEC_LAYERS[-1].out_channels))
+    sstep = make_deferred_grad_step(splan, mesh, l2_loss_local, microbatches=1)
+    jx_spec[rexec] = str(jax.make_jaxpr(sstep)(sp, sx[None], st[None]))
+assert "dynamic_slice" not in jx_spec["spec"], "spec executor must be static"
+assert "dynamic_update_slice" not in jx_spec["spec"], "spec executor must be static"
+assert "dynamic_slice" in jx_spec["padded"], "padded fallback lost its contrast"
+# 7x7 on 2x2 -> 4/3 tile rows, halo (1,1): valid extended inputs 6 and 5.
+# The 5-row conv (true extent of the small tile) exists only under spec.
+assert "f32[4,5,5,3]" in jx_spec["spec"], "spec must conv the true small-tile extent"
+assert "f32[4,5,5,3]" not in jx_spec["padded"], "padded must conv max extents only"
+n_spec = jx_spec["spec"].count("conv_general_dilated")
+n_pad = jx_spec["padded"].count("conv_general_dilated")
+assert n_spec > n_pad, "spec must compile per-shape conv programs"
+print(f"[spec] jaxpr: no dynamic slicing, true-extent convs, "
+      f"{n_spec} conv eqns vs {n_pad} padded")
+
+# grouped spec: two fused convs on 7x7 -> group halo (2,2), remaining halo
+# (1,1) after the first conv (off-map rim masking inside the group).
+from repro.core.tiling import Group  # noqa: E402
+
+GLAYERS = [
+    LAYERS[0],
+    LayerDef(3, 1, LAYERS[0].out_channels, 16, act="leaky", batch_norm=True),
+]
+gplan = build_stack_plan((7, 7), GLAYERS, 2, 2, groups=[Group(0, 1)])
+assert not gplan.is_uniform and gplan.rem_halos[0] == (1, 1, 1, 1)
+gp = init_stack_params(key, GLAYERS)
+gt = 0.05 * jax.random.normal(
+    jax.random.PRNGKey(13), (4, *gplan.out_hw(), GLAYERS[-1].out_channels))
+gloss = jax.jit(_mtl(gplan, mesh, l2_loss_local))
+gref = float(reference_loss(gp, sx, gt, gplan, l2_loss_local))
+gerr_l = abs(float(gloss(gp, sx, gt)) - gref)
+gg = jax.jit(jax.grad(lambda p: gloss(p, sx, gt)))(gp)
+ggr = jax.grad(lambda p: reference_loss(p, sx, gt, gplan, l2_loss_local))(gp)
+gerr_g = max_leaf_err(gg, ggr)
+print(f"[spec] grouped (rem-halo) plan: loss err={gerr_l:.3e} grad maxerr={gerr_g:.3e}")
+assert gerr_l < 1e-5 * max(1.0, abs(gref)) and gerr_g < 1e-4
 
 # BN batch_global regression: with a batch mesh axis, cross-tile BN must
 # normalise by the *global* batch, not the per-shard batch.

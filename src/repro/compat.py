@@ -1,4 +1,4 @@
-"""Small jax version-compat shims (the container pins an older jax).
+"""Small jax version/platform compat shims (the container pins an older jax).
 
 Centralised so every module spells compat the same way:
   - ``keystr_slash``: bare-name, slash-separated key paths
@@ -9,11 +9,56 @@ Centralised so every module spells compat the same way:
     the sharding-rule substring patterns (parallel/sharding.py, e.g.
     ``"moe/w_gate"``) both key on this exact spelling, so it must not vary
     with the installed jax.
+  - ``overlap_supported`` / ``enable_overlap_xla_flags``: whether the
+    active backend can actually hide collectives behind compute, and the
+    XLA flags that make it do so.  The overlap schedule only pays off with
+    async collectives + the latency-hiding scheduler (gpu/tpu); the host
+    CPU backend runs collectives inline, which is why overlap *measures*
+    slower than sync there (BENCH_tiled.json overhead 1.06-1.12) despite
+    modeling faster - ``schedule="auto"`` gates on this.
 (``core.halo.axis_size`` is the shard_map-side shim for ``lax.axis_size``.)
 """
 from __future__ import annotations
 
+import os
+
 from jax.tree_util import keystr
+
+#: XLA flags that let the GPU runtime run boundary collectives concurrently
+#: with interior compute (the latency-hiding levers the overlap schedule
+#: was designed for): async collectives, the latency-hiding scheduler, and
+#: a high-priority stream for the async ops.
+XLA_GPU_OVERLAP_FLAGS: tuple[str, ...] = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def overlap_supported(backend: str | None = None) -> bool:
+    """True when the active (or named) jax backend can hide collectives
+    behind compute - gpu/tpu, where async collectives and the latency-
+    hiding scheduler exist.  ``schedule="auto"`` resolves to "sync" when
+    this is False, so overlap is never the selected schedule on the host
+    CPU mesh where it measures >1.0 overhead."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return backend in ("gpu", "tpu")
+
+
+def enable_overlap_xla_flags(env=None) -> list[str]:
+    """Append ``XLA_GPU_OVERLAP_FLAGS`` to ``XLA_FLAGS`` (skipping flags
+    whose key is already set, so explicit user choices win).  Must run
+    before jax initialises its backend to take effect.  Returns the flags
+    newly added - empty when everything was already present."""
+    env = os.environ if env is None else env
+    cur = env.get("XLA_FLAGS", "")
+    added = [f for f in XLA_GPU_OVERLAP_FLAGS if f.split("=")[0] not in cur]
+    if added:
+        env["XLA_FLAGS"] = " ".join(([cur] if cur else []) + added)
+    return added
 
 
 def keystr_slash(path) -> str:

@@ -37,11 +37,18 @@ from repro.core.tiling import (
     apply_crossover,
     bounds_sizes,
     crossover_of,
+    dedup_axis_shapes,
     derive_axis_bounds,
     no_grouping,
     validate_profile,
 )
-from repro.core.halo import axis_size, halo_exchange_2d, halo_exchange_2d_ragged
+from repro.core.halo import (
+    axis_size,
+    halo_exchange_2d,
+    halo_exchange_2d_ragged,
+    halo_exchange_2d_spec,
+    static_table_lookup,
+)
 from repro.core.backend import get_conv_backend
 from repro.core.spatial import (
     LayerDef,
@@ -49,6 +56,7 @@ from repro.core.spatial import (
     apply_layer_data,
     apply_layer_local,
     apply_layer_local_ragged,
+    apply_layer_local_spec,
     reshard_spatial_to_data,
     reshard_spatial_to_data_ragged,
     stack_reference,
@@ -62,6 +70,7 @@ from repro.core.grouping import (
     cluster_partition,
     optimize_grouping,
     parse_cluster_spec,
+    profile_cost,
     score_profile,
 )
 
@@ -81,7 +90,9 @@ class StackPlan:
     each layer input (full-extent entries past the crossover), and
     ``shard_hw`` is the *padded* (max-tile) shard extent.  Uniform
     partitions (every tile equal) run the legacy executor byte-for-byte;
-    non-uniform ones run the padded-to-max ragged executor.
+    non-uniform ones run the shape-specialized executor (``ragged_exec=
+    "spec"``, DESIGN.md §9) or the padded-to-max fallback (``"padded"``,
+    DESIGN.md §8).
     """
 
     layers: tuple[LayerDef, ...]
@@ -101,6 +112,7 @@ class StackPlan:
     partition: TilePartition | None = None       # input-level tile boundaries
     tile_rows: tuple[tuple[int, ...], ...] = ()  # per layer input: per-tile-row extents
     tile_cols: tuple[tuple[int, ...], ...] = ()
+    ragged_exec: str = "spec"                    # non-uniform executor (DESIGN.md §9)
 
     @property
     def n_layers(self) -> int:
@@ -200,6 +212,34 @@ def _resolve_crossover(
     return best[1]
 
 
+def _resolve_auto_schedule(
+    input_hw, layers, groups, n, m, hw, batch, partition
+) -> str:
+    """Resolve ``schedule="auto"`` to a concrete schedule (DESIGN.md §5).
+
+    Overlap pays only when (a) the backend can actually run collectives
+    concurrently with compute (gpu/tpu async collectives + latency-hiding
+    scheduler; the host CPU backend runs them inline, which is why overlap
+    *measures* >1.0 overhead there despite modeling faster) and (b) the
+    cost model predicts a non-trivial hidden term.  Heterogeneous clusters
+    stay on sync: the overlap interior/boundary split applies only to
+    uniform groups, and ragged groups run the sync exchange anyway."""
+    from repro import compat
+
+    if isinstance(hw, ClusterSpec) or not compat.overlap_supported():
+        return "sync"
+    cand = (
+        tuple(groups)
+        if groups is not None and not isinstance(groups, str)
+        else tuple(no_grouping(len(layers)))
+    )
+    cost = profile_cost(
+        input_hw, tuple(layers), cand, n, m, resolve_hw_profile(hw),
+        batch, "overlap", partition=partition,
+    )
+    return "overlap" if cost["hidden"] > 0.01 * cost["total"] else "sync"
+
+
 def build_stack_plan(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
@@ -215,6 +255,7 @@ def build_stack_plan(
     crossover: int | str | None = None,
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
+    ragged_exec: str = "spec",
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
 
@@ -225,9 +266,12 @@ def build_stack_plan(
     instead of living in a side tool.  backend: registered conv compute path
     ("xla" | "pallas"); validated here so a typo fails at plan time, not
     inside shard_map tracing.  schedule: "sync" (eager halo exchange, the
-    exactness oracle) or "overlap" (packed collectives + interior/boundary
-    split execution, DESIGN.md §5); flows into the cost model when
-    ``groups="auto"`` so grouping selection reflects communication hiding.
+    exactness oracle), "overlap" (packed collectives + interior/boundary
+    split execution, DESIGN.md §5), or "auto" (overlap only when the
+    backend can hide collectives AND the modelled hidden term is
+    non-trivial - ``_resolve_auto_schedule``); flows into the cost model
+    when ``groups="auto"`` so grouping selection reflects communication
+    hiding.
     block_oh: the conv backend's output-row VMEM block (None = auto from the
     kernel's accumulator budget); planner-controlled so the executor's VMEM
     footprint is a plan-time choice, threaded to every backend call.
@@ -249,16 +293,30 @@ def build_stack_plan(
     existing plans are bit-identical, and which replaces the old
     divisibility ``ValueError`` for ragged extents (a 7x7 map on a 2x2 mesh
     now plans as 4+3 tile rows).  Non-uniform partitions run the
-    padded-to-max executor; the overlap schedule's interior/boundary split
-    applies only to uniform groups (ragged groups use the sync exchange).
+    shape-specialized executor (``ragged_exec="spec"``, DESIGN.md §9:
+    per-shape programs selected by ``lax.switch`` on the axis index - no
+    dynamic slicing, no wasted MACs on pad slots) or the padded-to-max
+    fallback (``ragged_exec="padded"``, DESIGN.md §8); the overlap
+    schedule's interior/boundary split applies only to uniform groups
+    (ragged groups use the sync exchange).
     """
     get_conv_backend(backend)   # fail fast on unknown backends
-    if schedule not in ("sync", "overlap"):
-        raise ValueError(f"schedule must be 'sync' or 'overlap'; got {schedule!r}")
+    if schedule not in ("sync", "overlap", "auto"):
+        raise ValueError(
+            f"schedule must be 'sync', 'overlap', or 'auto'; got {schedule!r}"
+        )
+    if ragged_exec not in ("spec", "padded"):
+        raise ValueError(
+            f"ragged_exec must be 'spec' or 'padded'; got {ragged_exec!r}"
+        )
     if block_oh is not None and block_oh < 1:
         raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
     layers = tuple(layers)
     hw = _resolve_hw(hw, n, m) if hw is not None else None
+    if schedule == "auto":
+        schedule = _resolve_auto_schedule(
+            input_hw, layers, groups, n, m, hw, batch, partition
+        )
     if isinstance(hw, ClusterSpec) and (hw.n, hw.m) != (n, m):
         raise ValueError(f"cluster grid {(hw.n, hw.m)} != tile grid {(n, m)}")
     if partition is not None and (partition.n, partition.m) != (n, m):
@@ -386,6 +444,7 @@ def build_stack_plan(
         partition=partition,
         tile_rows=tuple(tile_rows),
         tile_cols=tuple(tile_cols),
+        ragged_exec=ragged_exec,
     )
 
 
@@ -502,6 +561,95 @@ def _apply_group_ragged(
     return x
 
 
+def _apply_group_spec(
+    x: jax.Array,
+    params: Sequence[dict],
+    plan: StackPlan,
+    gi: int,
+    *,
+    row_axis: str,
+    col_axis: str,
+    batch_axis: str | None,
+    batch_global: int,
+) -> jax.Array:
+    """One spatial group on a shape-specialized ragged tile (DESIGN.md §9).
+
+    The per-axis tile shapes are deduplicated at the group input
+    (``dedup_axis_shapes``; stride alignment makes the group-start size the
+    complete per-axis shape key, so a 2/62-row split compiles 2 row
+    programs, not 4), and every layer runs an unrolled ``lax.switch`` over
+    the <= len(runiq)*len(cuniq) distinct (row, col) shapes: each branch
+    statically slices its valid extended window, convolves the TRUE extent,
+    and sums BN statistics over the real core - no ``dynamic_slice``, no
+    sizes tables, no wasted MACs on pad slots.  Collectives stay OUTSIDE
+    the switches: the halo exchange ships static-width strips through two
+    ``ppermute`` rounds (``halo_exchange_2d_spec``) and the BN psum runs on
+    uniform per-branch avals.  Pad slots are garbage past each branch's
+    valid window (no masking, except the off-map rim zeroing mid-group);
+    safe because every consumer reads valid windows only."""
+    g = plan.groups[gi]
+    geom = _ragged_group_geom(plan, gi)
+    i = lax.axis_index(row_axis)
+    j = lax.axis_index(col_axis)
+    x = halo_exchange_2d_spec(
+        x,
+        plan.group_halos[gi],
+        row_axis,
+        col_axis,
+        plan.tile_rows[g.start],
+        plan.tile_cols[g.start],
+        dims=(1, 2),
+        out_extents=geom["ein"][0],
+    )
+    rtab, runiq = dedup_axis_shapes(plan.tile_rows[g.start])
+    ctab, cuniq = dedup_axis_shapes(plan.tile_cols[g.start])
+    branch = static_table_lookup(rtab, i) * len(cuniq) + static_table_lookup(ctab, j)
+    # Cumulative stride products: group-start sizes divided by cum[k] give
+    # the layer-k input tile sizes (stride alignment guarantees exactness).
+    cum = [1]
+    for l in g.layers:
+        cum.append(cum[-1] * plan.layers[l].stride)
+    for k, l in enumerate(g.layers):
+        top, bottom, left, right = geom["halos"][k]
+        ntop, nbot, nleft, nright = geom["halos"][k + 1]
+        branch_io = tuple(
+            (
+                (top + r0 // cum[k] + bottom, left + c0 // cum[k] + right),
+                (ntop + r0 // cum[k + 1] + nbot, nleft + c0 // cum[k + 1] + nright),
+            )
+            for r0 in runiq
+            for c0 in cuniq
+        )
+        mask = (l != g.end) and any(geom["halos"][k + 1])
+        out_off = (
+            (
+                static_table_lookup(_offsets(plan.tile_rows[l + 1]), i),
+                static_table_lookup(_offsets(plan.tile_cols[l + 1]), j),
+            )
+            if mask
+            else None
+        )
+        x = apply_layer_local_spec(
+            x,
+            params[l],
+            plan.layers[l],
+            branch=branch,
+            branch_io=branch_io,
+            out_halo=geom["halos"][k + 1],
+            canon_out_hw=geom["eout"][k],
+            map_out_hw=plan.map_hw[l + 1],
+            out_off=out_off,
+            row_axis=row_axis,
+            col_axis=col_axis,
+            batch_global=batch_global,
+            batch_axis=batch_axis,
+            mask_offmap=mask,
+            backend=plan.backend,
+            block_oh=plan.block_oh,
+        )
+    return x
+
+
 def _global_batch(
     local_batch: int, batch_axis: str | None, batch_global: int | None
 ) -> int:
@@ -539,10 +687,12 @@ def apply_stack_local(
     The global batch for BN statistics is read off the *entry* shape, so
     it stays correct on both sides of the crossover.
 
-    Non-uniform partitions (DESIGN.md §8): spatial groups route through
-    the padded-to-max ragged executor (``_apply_group_ragged``; sync
-    exchange regardless of schedule) and the crossover through the ragged
-    reshard; uniform plans take exactly the pre-partition code path.
+    Non-uniform partitions: spatial groups route through the
+    shape-specialized executor (``_apply_group_spec``, DESIGN.md §9) or -
+    when ``plan.ragged_exec == "padded"`` - the padded-to-max fallback
+    (``_apply_group_ragged``, DESIGN.md §8); both run the sync exchange
+    regardless of schedule, and the crossover goes through the ragged
+    reshard.  Uniform plans take exactly the pre-partition code path.
     """
     bg = _global_batch(x.shape[0], batch_axis, batch_global)
     uniform = plan.is_uniform
@@ -571,7 +721,10 @@ def apply_stack_local(
                 )
             continue
         if not uniform:
-            x = _apply_group_ragged(
+            group_fn = (
+                _apply_group_spec if plan.ragged_exec == "spec" else _apply_group_ragged
+            )
+            x = group_fn(
                 x, params, plan, gi,
                 row_axis=row_axis, col_axis=col_axis,
                 batch_axis=batch_axis, batch_global=bg,
@@ -662,6 +815,67 @@ def _unpack_grid(a, rows, cols, dims=(1, 2)):
     return _unpack_axis(_unpack_axis(a, rows, dims[0]), cols, dims[1])
 
 
+def _shard_pack_axis(a: jax.Array, sizes: tuple[int, ...], axis_name: str, dim: int):
+    """Shard-side pack (DESIGN.md §9): each device slices ITS tile's span
+    out of the replicated global axis and zero-pads to the max tile size -
+    an unrolled ``lax.switch`` over static slices, fusing the padded-tile
+    layout transform into the shard_map boundary (no host-side padded
+    global array, no ``dynamic_slice``)."""
+    mx = max(sizes)
+
+    def mk(off, s):
+        def f(arr):
+            seg = lax.slice_in_dim(arr, off, off + s, axis=dim)
+            if s < mx:
+                pad = [(0, 0)] * arr.ndim
+                pad[dim] = (0, mx - s)
+                seg = jnp.pad(seg, pad)
+            return seg
+
+        return f
+
+    fns = [mk(off, s) for off, s in zip(_offsets(sizes), sizes)]
+    if len(fns) == 1:
+        return fns[0](a)
+    return lax.switch(lax.axis_index(axis_name), fns, a)
+
+
+def _shard_pack_grid(a, rows, cols, row_axis, col_axis, dims=(1, 2)):
+    a = _shard_pack_axis(a, rows, row_axis, dims[0])
+    return _shard_pack_axis(a, cols, col_axis, dims[1])
+
+
+def _spec_core_loss(y, t_full, plan: StackPlan, loss_local, row_axis: str, col_axis: str):
+    """Per-device core loss for spec plans (DESIGN.md §9): an unrolled
+    switch over the n*m tiles statically slices this tile's valid output
+    core and its span of the replicated global target, then runs
+    ``loss_local`` on the TRUE extents - exact sums AND exact counts, with
+    no validity masks and no count rescale (the padded executor's
+    ``_ragged_count_scale`` is not needed)."""
+    rows, cols = plan.tile_rows[-1], plan.tile_cols[-1]
+    roffs, coffs = _offsets(rows), _offsets(cols)
+
+    def mk(ri, cj):
+        def f(y_, t_):
+            yc = lax.slice_in_dim(
+                lax.slice_in_dim(y_, 0, rows[ri], axis=1), 0, cols[cj], axis=2
+            )
+            tc = lax.slice_in_dim(
+                lax.slice_in_dim(t_, roffs[ri], roffs[ri] + rows[ri], axis=1),
+                coffs[cj], coffs[cj] + cols[cj], axis=2,
+            )
+            s, c = loss_local(yc, tc)
+            return jnp.asarray(s, jnp.float32), jnp.asarray(c, jnp.float32)
+
+        return f
+
+    fns = [mk(ri, cj) for ri in range(len(rows)) for cj in range(len(cols))]
+    if len(fns) == 1:
+        return fns[0](y, t_full)
+    branch = lax.axis_index(row_axis) * len(cols) + lax.axis_index(col_axis)
+    return lax.switch(branch, fns, y, t_full)
+
+
 def _ragged_count_scale(plan: StackPlan, row_axis: str, col_axis: str):
     """Fraction of a padded output tile that is valid, per device - scales
     ``loss_local``'s element count (pad slots hold y = t = 0, so the *sum*
@@ -691,13 +905,20 @@ def make_tiled_forward(
     over (batch_axis?, row_axis, col_axis) - the assembly order of
     ``reshard_spatial_to_data``'s batch blocks.
 
-    Ragged plans wrap the shard_map'd executor in the padded-tile layout
-    transforms (``_pack_grid`` on the input, ``_unpack_grid`` on a
-    spatial output) so the caller-facing contract - global arrays in, global
-    arrays out - is partition-independent; uniform plans return the bare
-    shard_map'd function, jaxpr-identical to the pre-partition executor.
+    Ragged plans keep the caller-facing contract - global arrays in,
+    global arrays out - partition-independent.  Spec plans (DESIGN.md §9)
+    bind the input spatially-unsharded and pack INSIDE the shard boundary
+    (``_shard_pack_grid``); padded-fallback plans pack on the host
+    (``_pack_grid``).  Both unpack a spatial output on the host; uniform
+    plans return the bare shard_map'd function, jaxpr-identical to the
+    pre-partition executor.
     """
-    aspec = P(batch_axis, row_axis, col_axis, None)
+    spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
+    aspec = (
+        P(batch_axis, None, None, None)
+        if spec_exec
+        else P(batch_axis, row_axis, col_axis, None)
+    )
     out_spec = _out_spec(plan, row_axis, col_axis, batch_axis)
     local = functools.partial(
         apply_stack_local,
@@ -707,8 +928,16 @@ def make_tiled_forward(
         batch_axis=batch_axis,
         batch_global=batch_global,
     )
+
+    def fn(params, x):
+        if spec_exec:
+            x = _shard_pack_grid(
+                x, plan.tile_rows[0], plan.tile_cols[0], row_axis, col_axis
+            )
+        return local(params, x)
+
     mapped = shard_map(
-        lambda params, x: local(params, x),
+        fn,
         mesh=mesh,
         in_specs=(P(), aspec),
         out_specs=out_spec,
@@ -718,7 +947,8 @@ def make_tiled_forward(
         return mapped
 
     def fwd(params, x):
-        x = _pack_grid(x, plan.tile_rows[0], plan.tile_cols[0])
+        if not spec_exec:
+            x = _pack_grid(x, plan.tile_rows[0], plan.tile_cols[0])
         y = mapped(params, x)
         if plan.crossover is None:
             y = _unpack_grid(y, plan.tile_rows[-1], plan.tile_cols[-1])
@@ -782,22 +1012,39 @@ def make_tiled_loss(
     divisibility, and so must be its target).  Each (sample, position) is
     still owned by exactly one device, so the psum'd mean is unchanged.
     """
-    aspec = P(batch_axis, row_axis, col_axis, None)
-    tspec = _out_spec(plan, row_axis, col_axis, batch_axis)
+    spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
+    aspec = (
+        P(batch_axis, None, None, None)
+        if spec_exec
+        else P(batch_axis, row_axis, col_axis, None)
+    )
+    if spec_exec and plan.crossover is None:
+        # Spec plans bind the target replicated-spatial too; the core-loss
+        # switch slices each tile's span statically (DESIGN.md §9).
+        tspec = P(batch_axis, None, None, None)
+    else:
+        tspec = _out_spec(plan, row_axis, col_axis, batch_axis)
     axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
-    ragged_out = not plan.is_uniform and plan.crossover is None
+    ragged_out = not plan.is_uniform and plan.crossover is None and not spec_exec
 
     def fn(params, x, target):
+        if spec_exec:
+            x = _shard_pack_grid(
+                x, plan.tile_rows[0], plan.tile_cols[0], row_axis, col_axis
+            )
         y = apply_stack_local(
             params, x, plan,
             row_axis=row_axis, col_axis=col_axis,
             batch_axis=batch_axis, batch_global=batch_global,
         )
-        s, c = loss_local(y, target)
-        if ragged_out:
-            # pad slots hold y = t = 0 (executor mask / packed target), so
-            # the sum is exact; rescale the count to valid elements only.
-            c = c * _ragged_count_scale(plan, row_axis, col_axis)
+        if spec_exec and plan.crossover is None:
+            s, c = _spec_core_loss(y, target, plan, loss_local, row_axis, col_axis)
+        else:
+            s, c = loss_local(y, target)
+            if ragged_out:
+                # pad slots hold y = t = 0 (executor mask / packed target), so
+                # the sum is exact; rescale the count to valid elements only.
+                c = c * _ragged_count_scale(plan, row_axis, col_axis)
         s = lax.psum(s, axes)
         c = lax.psum(c, axes)
         return s / c
@@ -812,7 +1059,7 @@ def make_tiled_loss(
 
     def loss(params, x, target):
         _check_data_batch(plan, mesh, x.shape[0], batch_axis)
-        if not plan.is_uniform:
+        if not plan.is_uniform and not spec_exec:
             x = _pack_grid(x, plan.tile_rows[0], plan.tile_cols[0])
             if plan.crossover is None:
                 target = _pack_grid(target, plan.tile_rows[-1], plan.tile_cols[-1])
@@ -847,21 +1094,36 @@ def make_deferred_grad_step(
     with the data-side layout (batch sharded over the tile axes, full maps)
     like ``make_tiled_loss``.
     """
-    aspec = P(None, batch_axis, row_axis, col_axis, None)
+    spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
+    aspec = (
+        P(None, batch_axis, None, None, None)
+        if spec_exec
+        else P(None, batch_axis, row_axis, col_axis, None)
+    )
     ospec = _out_spec(plan, row_axis, col_axis, batch_axis)
-    tspec = P(None, *ospec)
+    if spec_exec and plan.crossover is None:
+        tspec = P(None, batch_axis, None, None, None)
+    else:
+        tspec = P(None, *ospec)
     tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
-    ragged_out = not plan.is_uniform and plan.crossover is None
+    ragged_out = not plan.is_uniform and plan.crossover is None and not spec_exec
 
     def local_loss(params, x, t):
+        if spec_exec:
+            x = _shard_pack_grid(
+                x, plan.tile_rows[0], plan.tile_cols[0], row_axis, col_axis
+            )
         y = apply_stack_local(
             params, x, plan,
             row_axis=row_axis, col_axis=col_axis,
             batch_axis=batch_axis, batch_global=batch_global,
         )
-        s, c = loss_local(y, t)
-        if ragged_out:
-            c = c * _ragged_count_scale(plan, row_axis, col_axis)
+        if spec_exec and plan.crossover is None:
+            s, c = _spec_core_loss(y, t, plan, loss_local, row_axis, col_axis)
+        else:
+            s, c = loss_local(y, t)
+            if ragged_out:
+                c = c * _ragged_count_scale(plan, row_axis, col_axis)
         # Divide by the *global* count; the cross-tile sum is deferred to the
         # gradient aggregation (linearity), matching the paper's schedule.
         return s, c
@@ -896,7 +1158,7 @@ def make_deferred_grad_step(
 
     def step(params, xs, ts):
         _check_data_batch(plan, mesh, xs.shape[1], batch_axis)
-        if not plan.is_uniform:
+        if not plan.is_uniform and not spec_exec:
             xs = _pack_grid(xs, plan.tile_rows[0], plan.tile_cols[0], dims=(2, 3))
             if plan.crossover is None:
                 ts = _pack_grid(ts, plan.tile_rows[-1], plan.tile_cols[-1], dims=(2, 3))

@@ -51,6 +51,16 @@ from repro.core.tiling import (
 
 SCHEDULES = ("sync", "overlap")
 
+#: MAC-equivalents charged per pad-slot element the shape-specialized
+#: executor repads each layer output with (one read + one write, forward and
+#: backward roughly cancelling against the copy's streaming nature).  The
+#: specialization overhead term in ``_group_cost_cluster`` (DESIGN.md §9):
+#: skewed partitions make every device rewrite its output into the canonical
+#: (max-tile) extent, so the modeled makespan no longer pretends extreme
+#: skews are free - the balancer's objective is unchanged, but grouping/
+#: crossover scoring sees the executor's real padding bill.
+SPEC_PAD_MACS = 2.0
+
 
 def _check_schedule(schedule: str) -> None:
     if schedule not in SCHEDULES:
@@ -253,15 +263,15 @@ def _bounds_of(sizes: Sequence[int]) -> list[int]:
     return out
 
 
-def _waterfill(weights: Sequence[float], total: int) -> list[int]:
-    """Integer sizes >= 1 summing to ``total``, ~proportional to 1/weight
-    (minimising max_k weight_k * size_k), fixed up greedily."""
+def _waterfill(weights: Sequence[float], total: int, floor: int = 1) -> list[int]:
+    """Integer sizes >= ``floor`` summing to ``total``, ~proportional to
+    1/weight (minimising max_k weight_k * size_k), fixed up greedily."""
     inv = [1.0 / w for w in weights]
     s = sum(inv)
-    sizes = [max(1, round(total * v / s)) for v in inv]
+    sizes = [max(floor, round(total * v / s)) for v in inv]
     while sum(sizes) > total:
         k = min(
-            (k for k in range(len(sizes)) if sizes[k] > 1),
+            (k for k in range(len(sizes)) if sizes[k] > floor),
             key=lambda k: weights[k] * (sizes[k] - 1),
         )
         sizes[k] -= 1
@@ -272,7 +282,7 @@ def _waterfill(weights: Sequence[float], total: int) -> list[int]:
 
 
 def balance_bounds(
-    extent_hw: tuple[int, int], cluster: ClusterSpec
+    extent_hw: tuple[int, int], cluster: ClusterSpec, *, min_size: int = 1
 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """FLOPs-proportional boundary arrays at one map extent, minimising
     ``max_ij area_ij / flops_ij`` (every layer's tile area scales with the
@@ -285,9 +295,16 @@ def balance_bounds(
     (even + FLOPs-marginal), polishes with greedy ±1 moves, and keeps the
     best.  The even split is always a candidate, so the result is never
     worse than uniform tiling; tests brute-force small grids to confirm it
-    beats uniform whenever device FLOPs differ."""
+    beats uniform whenever device FLOPs differ.
+
+    ``min_size``: per-tile extent floor (clamped to the even share per
+    axis).  ``cluster_partition`` passes the per-layer halo floor
+    (``_min_extent_floor``) so the balancer never proposes a sliver the
+    halo exchange cannot feed or the shape-specialized executor cannot
+    win on (ISSUE 6 / DESIGN.md §9)."""
     h, w = extent_hw
     n, m = cluster.n, cluster.m
+    floors = (max(1, min(min_size, h // n)), max(1, min(min_size, w // m)))
     flops = [[p.flops for p in row] for row in cluster.grid]
     even = (list(even_bounds_1d(h, n)), list(even_bounds_1d(w, m)))
     if cluster.is_uniform:
@@ -301,8 +318,8 @@ def balance_bounds(
 
     def alternate(rs, cs):
         for _ in range(32):
-            cs2 = _waterfill(col_weights(rs), w)
-            rs2 = _waterfill(row_weights(cs2), h)
+            cs2 = _waterfill(col_weights(rs), w, floors[1])
+            rs2 = _waterfill(row_weights(cs2), h, floors[0])
             if rs2 == rs and cs2 == cs:
                 break
             rs, cs = rs2, cs2
@@ -313,8 +330,8 @@ def balance_bounds(
     col_marg = [sum(flops[i][j] for i in range(n)) for j in range(m)]
     starts.append(
         (
-            _waterfill([1.0 / f for f in row_marg], h),
-            _waterfill([1.0 / f for f in col_marg], w),
+            _waterfill([1.0 / f for f in row_marg], h, floors[0]),
+            _waterfill([1.0 / f for f in col_marg], w, floors[1]),
         )
     )
     cands = [even]
@@ -342,7 +359,8 @@ def balance_bounds(
             for mv in moves:
                 while True:
                     ok = all(
-                        bounds[br][k - 1] < bounds[br][k] + d < bounds[br][k + 1]
+                        bounds[br][k] + d - bounds[br][k - 1] >= floors[br]
+                        and bounds[br][k + 1] - (bounds[br][k] + d) >= floors[br]
                         for br, k, d in mv
                     )
                     if not ok:
@@ -367,6 +385,23 @@ def balance_bounds(
     return tuple(rb), tuple(cb)
 
 
+def _min_extent_floor(layers: Sequence[LayerDef], last: int) -> int:
+    """Smallest per-tile extent at the balanced (deepest spatially-sharded)
+    layer that keeps every earlier layer's tile at least as wide as its own
+    per-layer halo.  A tile owning z rows at the balance extent owns
+    ``z * prod(strides[l:last])`` rows at layer l's input, which must cover
+    ``max(halo_lo, halo_hi)`` of that layer - otherwise the exchange cannot
+    feed the tile (the plan-time "halo exceeds the smallest tile" error)
+    and the shape-specialized executor cannot win on it (ISSUE 6)."""
+    floor = 1
+    sprod = 1
+    for l in range(last - 1, -1, -1):
+        sprod *= layers[l].stride
+        lo, hi = layers[l].halo
+        floor = max(floor, -(-max(lo, hi) // sprod))
+    return floor
+
+
 def cluster_partition(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
@@ -375,11 +410,14 @@ def cluster_partition(
 ) -> TilePartition:
     """Makespan-balanced input-level partition for a heterogeneous cluster:
     balance the boundaries at the last spatially-sharded extent (the
-    crossover input, or the stack output), then pull them back through the
-    strides so every layer's boundaries stay stride-aligned."""
+    crossover input, or the stack output) - under the per-layer halo floor
+    (``_min_extent_floor``) - then pull them back through the strides so
+    every layer's boundaries stay stride-aligned."""
     ext = _map_extents(input_hw, layers)
     last = len(layers) if cross is None else cross
-    rb, cb = balance_bounds(ext[last], cluster)
+    rb, cb = balance_bounds(
+        ext[last], cluster, min_size=_min_extent_floor(layers, last)
+    )
     for l in range(last - 1, -1, -1):
         rb = pull_bounds_1d(rb, layers[l].stride, ext[l][0])
         cb = pull_bounds_1d(cb, layers[l].stride, ext[l][1])
@@ -590,6 +628,14 @@ def _group_cost_cluster(
                         3.0 * ext_oh * ext_ow * l.kernel ** 2
                         * l.in_channels * l.out_channels
                     )
+                # Shape-specialization repad charge (DESIGN.md §9): every
+                # layer output is rewritten into the canonical (max-tile)
+                # extent, so each device pays for its pad slots.  Zero for
+                # uniform partitions.
+                canon_oh = max(rows[idx + 1]) + halo_lo[k + 1] + halo_hi[k + 1]
+                canon_ow = max(cols[idx + 1]) + halo_lo[k + 1] + halo_hi[k + 1]
+                cch = max(l.in_channels if l.pool else l.out_channels, 1)
+                macs += SPEC_PAD_MACS * (canon_oh * canon_ow - ext_oh * ext_ow) * cch
             compute_ij = batch * macs / p.flops
             ch, cw = rows[s][i], cols[s][j]
             halo_elems = (

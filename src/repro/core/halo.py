@@ -275,6 +275,134 @@ def halo_exchange_2d_ragged(
     return y
 
 
+def static_table_lookup(table, idx) -> jax.Array:
+    """Look up a small static int table at a traced index WITHOUT dynamic
+    addressing: a one-hot reduction instead of ``jnp.asarray(table)[idx]``
+    (which lowers to ``dynamic_slice``/gather).  The shape-specialized
+    executor uses this for branch selectors and tile-origin tables so its
+    jaxpr stays free of ``dynamic_slice`` (guarded by check_pipeline)."""
+    t = jnp.asarray(table, jnp.int32)
+    onehot = (lax.iota(jnp.int32, len(table)) == jnp.asarray(idx, jnp.int32)).astype(
+        jnp.int32
+    )
+    return jnp.sum(t * onehot)
+
+
+def _switch_by_size(branch, fns, *operands):
+    """lax.switch over the per-shape programs, degenerating to a direct call
+    when only one distinct shape exists (so single-shape axes add no cond to
+    the jaxpr)."""
+    if len(fns) == 1:
+        return fns[0](*operands)
+    return lax.switch(branch, fns, *operands)
+
+
+def halo_exchange_1d_spec(
+    x: jax.Array,
+    halo_lo: int,
+    halo_hi: int,
+    axis_name: str,
+    sizes: tuple[int, ...],
+    *,
+    dim: int = 0,
+    out_extent: int | None = None,
+) -> jax.Array:
+    """Shape-specialized halo exchange over ragged shards (DESIGN.md §9).
+
+    Same contract as ``halo_exchange_1d_ragged`` - shard i holds
+    ``max(sizes)`` slots along ``dim`` with valid data in [0, sizes[i]) and
+    zeros beyond, and the result is ``[recv_lo | valid | recv_hi | zeros]``
+    at static extent ``out_extent`` - but every slice is STATIC: the send-up
+    strip and the reassembly are unrolled over the distinct tile extents via
+    ``lax.switch`` on a branch table indexed by ``axis_index``, so the jaxpr
+    contains no ``dynamic_slice``/``dynamic_update_slice`` and no traced
+    offsets.  The two ``ppermute`` collectives stay OUTSIDE the switch
+    (collectives inside cond branches are not legal SPMD); branches only
+    pick which statically-sliced strip to send and how to concatenate.
+    Edge shards receive ppermute zeros = global SAME zero padding.
+    """
+    from repro.core.tiling import dedup_axis_shapes
+
+    n = axis_size(axis_name)
+    smax = max(sizes)
+    if x.shape[dim] != smax:
+        raise ValueError(
+            f"spec exchange expects padded extent {smax} on dim {dim}; "
+            f"got shape {x.shape}"
+        )
+    ext = out_extent if out_extent is not None else smax + halo_lo + halo_hi
+    if ext < halo_lo + smax + halo_hi:
+        raise ValueError(f"out_extent {ext} < {halo_lo}+{smax}+{halo_hi}")
+    if halo_lo == 0 and halo_hi == 0 and ext == smax:
+        return x
+    table, uniq = dedup_axis_shapes(sizes)
+    branch = static_table_lookup(table, lax.axis_index(axis_name))
+
+    recv_lo = recv_hi = None
+    if halo_lo > 0:
+        # Strip the next shard needs from us: our last halo_lo VALID rows,
+        # a static slice per distinct extent (uniform strip aval across
+        # branches, as lax.switch requires).
+        def mk_send(s):
+            return lambda a: lax.slice_in_dim(a, s - halo_lo, s, axis=dim)
+
+        send_up = _switch_by_size(branch, [mk_send(s) for s in uniq], x)
+        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+    if halo_hi > 0:
+        # Valid data starts at slot 0 on every shard: the send-down strip is
+        # the same static slice for all shapes - no switch needed.
+        send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
+        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+
+    def mk_assemble(s):
+        def f(a):
+            parts = []
+            if recv_lo is not None:
+                parts.append(recv_lo)
+            parts.append(lax.slice_in_dim(a, 0, s, axis=dim))
+            if recv_hi is not None:
+                parts.append(recv_hi)
+            y = parts[0] if len(parts) == 1 else lax.concatenate(parts, dimension=dim)
+            tail = ext - (halo_lo + s + halo_hi)
+            if tail > 0:
+                pad = [(0, 0)] * a.ndim
+                pad[dim] = (0, tail)
+                y = jnp.pad(y, pad)
+            return y
+
+        return f
+
+    return _switch_by_size(branch, [mk_assemble(s) for s in uniq], x)
+
+
+def halo_exchange_2d_spec(
+    x: jax.Array,
+    halo: tuple[int, int, int, int],
+    row_axis: str,
+    col_axis: str,
+    row_sizes: tuple[int, ...],
+    col_sizes: tuple[int, ...],
+    *,
+    dims: tuple[int, int] = (0, 1),
+    out_extents: tuple[int, int] | None = None,
+) -> jax.Array:
+    """2-D shape-specialized halo exchange: rows first, then columns over
+    the row-extended array (corners ride the second round, same ordering as
+    every other exchange here).  Column neighbours share the tile-row index
+    and hence the exact row layout, so the column strips align statically."""
+    top, bottom, left, right = halo
+    oe = out_extents or (None, None)
+    y = halo_exchange_1d_spec(
+        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0]
+    )
+    # After the row round every shard in a tile-row holds the same static
+    # row extent, so the column exchange rags only over col_sizes.
+    y = halo_exchange_1d_spec(
+        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1]
+    )
+    return y
+
+
 def send_boundary_sum_1d(
     x: jax.Array,
     overlap_lo: int,

@@ -185,6 +185,50 @@ def _valid_pool(x, kernel, stride):
     )
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _pool_nonoverlap(x: jax.Array, k: int) -> jax.Array:
+    """VALID max-pool for the non-overlapping case (kernel == stride) with a
+    vectorized reshape/argmax VJP.
+
+    The ``reduce_window`` backward is a ``select_and_scatter``, which XLA
+    CPU lowers to a fast vectorized form at top level but to a per-element
+    scalar while loop inside ``lax.switch``/``cond`` branches - the spec
+    executor's big-tile branch then spends more time scattering pool
+    cotangents than convolving (same conditional blindness as the conv
+    canonicalization pass, see ``_conv_valid_s1``).  Ties scatter to the
+    first window element in row-major scan order, exactly matching
+    ``select_and_scatter``'s first-match semantics (``argmax`` also returns
+    the first maximum).
+    """
+    n, h, w, c = x.shape
+    ho, wo = h // k, w // k
+    xw = x[:, : ho * k, : wo * k, :].reshape(n, ho, k, wo, k, c)
+    return xw.max(axis=(2, 4))
+
+
+def _pool_nonoverlap_fwd(x, k):
+    return _pool_nonoverlap(x, k), x
+
+
+def _pool_nonoverlap_bwd(k, x, dy):
+    n, h, w, c = x.shape
+    ho, wo = h // k, w // k
+    xw = x[:, : ho * k, : wo * k, :].reshape(n, ho, k, wo, k, c)
+    elems = jnp.transpose(xw, (0, 1, 3, 5, 2, 4)).reshape(n, ho, wo, c, k * k)
+    am = jnp.argmax(elems, axis=-1)
+    onehot = (am[..., None] == jnp.arange(k * k)).astype(dy.dtype)
+    dxe = onehot * dy[..., None]
+    dx = jnp.transpose(
+        dxe.reshape(n, ho, wo, c, k, k), (0, 1, 4, 2, 5, 3)
+    ).reshape(n, ho * k, wo * k, c)
+    if ho * k != h or wo * k != w:
+        dx = jnp.pad(dx, ((0, 0), (0, h - ho * k), (0, w - wo * k), (0, 0)))
+    return (dx,)
+
+
+_pool_nonoverlap.defvjp(_pool_nonoverlap_fwd, _pool_nonoverlap_bwd)
+
+
 def _offmap_mask(
     ext_h: int,
     ext_w: int,
@@ -280,6 +324,63 @@ def apply_layer_local(
     )
 
 
+@jax.custom_vjp
+def _conv_valid_s1(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Stride-1 VALID NHWC conv whose VJP emits dgrad/wgrad in canonical
+    NHWC form (explicit operand transposes at the JAX level).
+
+    The standard transpose-rule forms (batch as the contracting dimension
+    for wgrad, transposed kernel for dgrad) rely on XLA's conv
+    canonicalization pass to reach the fast Eigen path - but that pass does
+    not rewrite convolutions inside ``lax.switch``/``cond`` branch
+    computations, where the shape-specialized ragged executor (DESIGN.md
+    §9) places every per-tile conv.  Left raw, each branch wgrad runs on
+    the slow generic path (~7x measured on CPU) and every shard then waits
+    for the slowest at the gradient psum.  Hand-emitting the canonical
+    forms keeps the backward on the fast path regardless of nesting.
+    """
+    dt = jnp.result_type(x.dtype, w.dtype)
+    return lax.conv_general_dilated(
+        x.astype(dt),
+        w.astype(dt),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _conv_valid_s1_fwd(x, w):
+    return _conv_valid_s1(x, w), (x, w)
+
+
+def _conv_valid_s1_bwd(res, dy):
+    x, w = res
+    dt = jnp.result_type(x.dtype, w.dtype)
+    xp, wp, dyp = x.astype(dt), w.astype(dt), dy.astype(dt)
+    kh, kw = w.shape[0], w.shape[1]
+    # dgrad: full-padded conv of dy with the spatially-flipped, IO-swapped
+    # kernel - a plain forward-form conv, fast even inside a branch
+    wt = jnp.transpose(jnp.flip(wp, (0, 1)), (0, 1, 3, 2))
+    dx = lax.conv_general_dilated(
+        dyp, wt, (1, 1), ((kh - 1, kh - 1), (kw - 1, kw - 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # wgrad: channels-as-batch / batch-as-feature conv, again forward-form
+    xt = jnp.transpose(xp, (3, 1, 2, 0))       # (Ci, H, W, N)
+    dyt = jnp.transpose(dyp, (1, 2, 0, 3))     # (Oh, Ow, N, Co) as kernel
+    dw = jnp.transpose(
+        lax.conv_general_dilated(
+            xt, dyt, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ),
+        (1, 2, 0, 3),                          # (Ci, Kh, Kw, Co) -> HWIO
+    )
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv_valid_s1.defvjp(_conv_valid_s1_fwd, _conv_valid_s1_bwd)
+
+
 def _conv_or_pool(
     x: jax.Array,
     params: dict,
@@ -300,6 +401,36 @@ def _conv_or_pool(
     b = params["b"] if layer.use_bias else None
     y = be(x, params["w"], b, stride=layer.stride,
            act=layer.act if fused else "linear", block_oh=block_oh)
+    return y, fused
+
+
+def _conv_or_pool_spec(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    backend: str,
+    block_oh: int | None = None,
+) -> tuple[jax.Array, bool]:
+    """Branch-safe ``_conv_or_pool`` for the spec executor's switch branches.
+
+    Stride-1 xla convs route through ``_conv_valid_s1`` so their backward
+    convs stay in canonical (fast-path) form inside ``lax.switch`` branches;
+    everything else (pools, strided convs, non-xla backends) defers to the
+    regular path, whose backward either has no conv or is a backend custom
+    kernel already.
+    """
+    if layer.pool:
+        if layer.kernel == layer.stride:
+            return _pool_nonoverlap(x, layer.kernel), False
+        return _conv_or_pool(x, params, layer, backend, block_oh)
+    if backend != "xla" or layer.stride != 1:
+        return _conv_or_pool(x, params, layer, backend, block_oh)
+    fused = (not layer.batch_norm) and layer.act in get_conv_backend(backend).fused_acts
+    y = _conv_valid_s1(x, params["w"])
+    if layer.use_bias:
+        y = y + params["b"]
+    if fused:
+        y = _ACTIVATIONS[layer.act](y)
     return y, fused
 
 
@@ -449,6 +580,132 @@ def apply_layer_local_ragged(
         y = _ACTIVATIONS[layer.act](y)
     m = _ragged_mask(y.shape[1], y.shape[2], out_halo, out_size, out_off, map_out_hw)
     return y * m[None, :, :, None].astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shape-specialized (non-uniform partition) execution: per-shape static
+# programs selected by lax.switch on the tile index (DESIGN.md §9).
+# Everything below runs INSIDE shard_map.
+# ---------------------------------------------------------------------------
+
+
+def _offmap_mask_spec(
+    ext_h: int,
+    ext_w: int,
+    halo: tuple[int, int, int, int],
+    out_off: tuple[jax.Array, jax.Array],
+    map_hw: tuple[int, int],
+) -> jax.Array:
+    """Off-map rim mask for a specialized ragged tile: `_ragged_mask` minus
+    the validity clause.  The specialized executor never *reads* pad slots
+    (every consumer slices its branch's valid window statically), so only
+    the oracle's SAME-padding semantics remain to enforce: intermediate-
+    layer halo positions hanging off the true map must be zero before the
+    next conv consumes them.  The tile origin comes from the boundary
+    table (traced per device); positions beyond the valid window get
+    whatever the row/col test says - they are never read."""
+    top, _, left, _ = halo
+    r0, c0 = out_off
+    gr = r0 - top + lax.iota(jnp.int32, ext_h)
+    gc = c0 - left + lax.iota(jnp.int32, ext_w)
+    rmask = (gr >= 0) & (gr < map_hw[0])
+    cmask = (gc >= 0) & (gc < map_hw[1])
+    return (rmask[:, None] & cmask[None, :]).astype(jnp.float32)
+
+
+def apply_layer_local_spec(
+    x: jax.Array,
+    params: dict,
+    layer: LayerDef,
+    *,
+    branch: jax.Array,
+    branch_io: tuple[tuple[tuple[int, int], tuple[int, int]], ...],
+    out_halo: tuple[int, int, int, int],
+    canon_out_hw: tuple[int, int],
+    map_out_hw: tuple[int, int],
+    out_off: tuple[jax.Array, jax.Array] | None,
+    row_axis: str,
+    col_axis: str,
+    batch_global: int,
+    batch_axis: str | None = None,
+    mask_offmap: bool = False,
+    backend: str = "xla",
+    block_oh: int | None = None,
+) -> jax.Array:
+    """One layer of a shape-specialized ragged tile (DESIGN.md §9).
+
+    ``branch`` is the traced per-device shape index;
+    ``branch_io[b] = ((vin_r, vin_c), (vout_r, vout_c))`` gives branch b's
+    static valid extended input/output extents.  Each branch statically
+    slices its valid window out of the canonical padded input, runs the
+    VALID conv over the TRUE extent (no wasted MACs on pad slots), sums BN
+    core statistics over the real core rows, and repads to the canonical
+    output extent so all branches share one output aval.  Collectives (BN
+    psum) and the unfused activation run OUTSIDE the switch - branches are
+    pure local compute, as SPMD requires.  Pad slots beyond a branch's
+    valid window are garbage after BN/activation; that is safe because
+    every downstream consumer (the next layer's branch slice, the spec
+    exchange, the core loss switch, the unpack) reads valid windows only,
+    and AD gives the garbage slots zero cotangent for the same reason."""
+    bn = layer.batch_norm and not layer.pool
+    from repro.core.halo import _switch_by_size
+
+    def mk(io):
+        (vin_r, vin_c), (vout_r, vout_c) = io
+
+        def f(a):
+            xv = a[:, :vin_r, :vin_c, :]
+            y, _ = _conv_or_pool_spec(xv, params, layer, backend, block_oh)
+            if y.shape[1:3] != (vout_r, vout_c):
+                raise AssertionError(
+                    f"spec branch geometry drift: conv of {(vin_r, vin_c)} "
+                    f"gave {y.shape[1:3]}, planner said {(vout_r, vout_c)}"
+                )
+            outs = []
+            if bn:
+                top, bottom, left, right = out_halo
+                core = y[:, top:vout_r - bottom, left:vout_c - right, :]
+                outs = [
+                    jnp.sum(core, axis=(0, 1, 2)),
+                    jnp.sum(jnp.square(core), axis=(0, 1, 2)),
+                ]
+            pad = [
+                (0, 0),
+                (0, canon_out_hw[0] - vout_r),
+                (0, canon_out_hw[1] - vout_c),
+                (0, 0),
+            ]
+            y = jnp.pad(y, pad)
+            return (y, *outs) if outs else y
+
+        return f
+
+    res = _switch_by_size(branch, [mk(io) for io in branch_io], x)
+    # `fused` depends only on (layer, backend): identical across branches.
+    if layer.pool:
+        fused = False
+    else:
+        fused = (not layer.batch_norm) and layer.act in get_conv_backend(backend).fused_acts
+    if bn:
+        y, s, ss = res
+        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+        bn_axes = (row_axis, col_axis)
+        if batch_axis is not None:
+            bn_axes = (batch_axis,) + bn_axes
+        s = lax.psum(s, bn_axes)
+        ss = lax.psum(ss, bn_axes)
+        mean = s / n_global
+        var = ss / n_global - jnp.square(mean)
+        y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+    else:
+        y = res
+    if not fused:
+        y = _ACTIVATIONS[layer.act](y)
+    if mask_offmap and any(h > 0 for h in out_halo):
+        assert out_off is not None
+        m = _offmap_mask_spec(y.shape[1], y.shape[2], out_halo, out_off, map_out_hw)
+        y = y * m[None, :, :, None].astype(y.dtype)
+    return y
 
 
 # ---------------------------------------------------------------------------

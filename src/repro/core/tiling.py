@@ -174,6 +174,27 @@ def bounds_sizes(bounds: Sequence[int]) -> tuple[int, ...]:
     return tuple(hi - lo for lo, hi in zip(bounds, bounds[1:]))
 
 
+def dedup_axis_shapes(sizes: Sequence[int]) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """(branch_table, unique_sizes) for one axis of a ragged partition.
+
+    ``branch_table[i]`` maps tile index i to the index of its extent among
+    the *distinct* extents, in first-appearance order.  The shape-specialized
+    executor (DESIGN.md §9) compiles ONE program per distinct tile shape and
+    switches on this table, so a 2/62-style split compiles 2 row programs,
+    not one per device.  Because boundaries divide by the cumulative stride
+    at every layer (DESIGN.md §8), a tile's extent at every layer of a group
+    is a pure function of its extent at the group start - the group-start
+    size alone is a sufficient dedup key.
+    """
+    uniq: list[int] = []
+    table: list[int] = []
+    for s in sizes:
+        if s not in uniq:
+            uniq.append(s)
+        table.append(uniq.index(s))
+    return tuple(table), tuple(uniq)
+
+
 @dataclasses.dataclass(frozen=True)
 class TilePartition:
     """Explicit n x m grid partition of an H x W map: per-axis boundary

@@ -59,9 +59,11 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--depth", type=int, default=8, help="tiled: YOLO prefix depth")
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
                     help="tiled: conv compute backend")
-    ap.add_argument("--schedule", default="sync", choices=["sync", "overlap"],
+    ap.add_argument("--schedule", default="sync", choices=["sync", "overlap", "auto"],
                     help="tiled: executor schedule (overlap = packed halo "
-                         "collectives + interior/boundary split)")
+                         "collectives + interior/boundary split; auto = overlap "
+                         "only when the backend can hide collectives and the "
+                         "modelled hidden term is non-trivial)")
     ap.add_argument("--groups", default="none",
                     help="tiled: grouping profile - 'none', 'auto', or group size int")
     ap.add_argument("--crossover", default="none",

@@ -63,10 +63,12 @@ class TiledCNNArch:
 
     @property
     def partition(self):
-        """The plan's explicit ``TilePartition`` (DESIGN.md §8).  Non-
-        uniform partitions (heterogeneous clusters, ragged extents) run the
-        padded-tile executor transparently - batches still enter as global
-        arrays; the loss/step wrappers do the layout transforms."""
+        """The plan's explicit ``TilePartition``.  Non-uniform partitions
+        (heterogeneous clusters, ragged extents) run the shape-specialized
+        executor transparently (DESIGN.md §9; or the padded-to-max fallback
+        of §8 with ``ragged_exec="padded"``) - batches still enter as
+        global arrays; the loss/step wrappers and shard-boundary pack do
+        the layout transforms."""
         return self.plan.partition
 
     def target_shape(self, batch: int) -> tuple[int, ...]:
