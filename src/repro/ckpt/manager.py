@@ -1,25 +1,48 @@
-"""Checkpointing: sharded save/restore with async write, atomic commit,
-retention, and elastic re-mesh on restore.
+"""Checkpointing: partition-independent save/restore with async write,
+atomic commit, retention, integrity checking, and elastic re-mesh/re-plan on
+restore (DESIGN.md §10).
 
 Format: one .npy per pytree leaf (path-encoded filenames) + a JSON manifest
-(step, tree structure, shapes/dtypes).  Arrays are gathered to host before
-write (restore re-shards via device_put against the *current* mesh, so a
-checkpoint taken on 256 chips restores onto 512 or 8 - elastic scaling).
-Production multi-host deployments would swap the file backend for
-tensorstore/OCDBT behind the same manager interface; the manager logic
-(atomicity, retention, async, preemption flush) is the deliverable here.
+recording, per leaf, its tree path, file name, shape, dtype, and a CRC-32 of
+the file bytes - plus the checkpoint ``step`` and an optional *plan
+manifest* (``core.fusion.plan_manifest``: cluster spec, partition
+boundaries, grouping profile, crossover) describing the StackPlan the state
+was trained under.  Arrays are gathered to host before write, and the plan
+manifest is metadata only: params and optimizer state are stored in their
+global (untiled) form, so a checkpoint taken under any
+ClusterSpec/TilePartition/crossover restores under any other - the restore
+re-shards via device_put (or simply by re-entering the new plan's jit)
+against the *current* mesh.  Production multi-host deployments would swap
+the file backend for tensorstore/OCDBT behind the same manager interface;
+the manager logic (atomicity, validation, retention, async, fallback) is
+the deliverable here.
 
 Atomicity: writes land in ``step_XXXX.tmp`` and are renamed only after the
 manifest fsync - a killed save never corrupts the latest checkpoint.
+
+Failure handling:
+  - transient IO errors during a save are retried with exponential backoff
+    (``io_retries`` / ``io_backoff``); the tmp dir is rebuilt per attempt;
+  - an exception in the async writer thread is captured and re-raised from
+    ``wait()`` or the next ``save()`` - never swallowed;
+  - ``restore()`` validates the manifest against the requested structure
+    (missing leaf, shape/dtype mismatch -> ``CheckpointError`` naming the
+    leaf path) and verifies every leaf's checksum; a corrupted or
+    unreadable checkpoint is skipped with a log line and restore falls back
+    to the previous retained step (``CheckpointCorruptError`` only when no
+    retained step is loadable).
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+import time
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -27,47 +50,162 @@ from jax.tree_util import tree_map_with_path
 
 from repro.compat import keystr_slash as _keystr
 
+log = logging.getLogger("repro.ckpt")
+
+MANIFEST_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """Structural checkpoint problem: the stored state does not match the
+    requested structure (missing leaf, shape/dtype mismatch).  Not retried
+    and not subject to previous-step fallback - restoring a different model
+    into this state is an operator error, not data corruption."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """No retained checkpoint step could be loaded intact."""
+
 
 def _sanitize(path: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.-]", "_", path)
 
 
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+def retry_io(
+    fn: Callable[[], Any],
+    *,
+    retries: int = 3,
+    backoff: float = 0.05,
+    sleep: Callable[[float], None] = time.sleep,
+    what: str = "checkpoint IO",
+) -> Any:
+    """Run ``fn`` with bounded retry + exponential backoff (delay doubles
+    per attempt).  ``retries`` counts *re*-tries: fn runs at most
+    ``retries + 1`` times.  The fault-injection harness exercises this path
+    with one-shot write crashes (runtime.faults); ``sleep`` is injectable
+    so tests can assert the backoff sequence without waiting it out."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except CheckpointError:
+            raise  # structural - retrying cannot fix it
+        except Exception as e:  # noqa: BLE001 - any IO failure is retryable
+            attempt += 1
+            if attempt > retries:
+                raise
+            delay = backoff * (2 ** (attempt - 1))
+            log.warning(
+                "%s failed (%s: %s); retry %d/%d in %.3fs",
+                what, type(e).__name__, e, attempt, retries, delay,
+            )
+            sleep(delay)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        *,
+        io_retries: int = 3,
+        io_backoff: float = 0.05,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
         self.dir = directory
         self.keep = keep
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
+        self._sleep = sleep
         os.makedirs(directory, exist_ok=True)
         self._async_thread: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
+        # test/fault-injection hook: called as write_fault(leaf_index) inside
+        # the leaf-write loop of every save attempt; may raise to simulate a
+        # mid-write crash (runtime.faults arms this)
+        self.write_fault: Optional[Callable[[int], None]] = None
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, state: Any, *, blocking: bool = True) -> None:
+    def save(
+        self, step: int, state: Any, *, blocking: bool = True, plan: Any = None
+    ) -> None:
+        """Write checkpoint ``step``.  ``plan`` is an optional JSON-
+        serializable plan manifest (``core.fusion.plan_manifest``) stored
+        alongside the leaves - metadata describing the partition the state
+        was trained under, never needed to restore it.
+
+        ``blocking=False`` hands the write to a background thread; a failure
+        there is captured and re-raised from ``wait()`` or the next
+        ``save()`` (after retries), so async saves cannot fail silently."""
+        self.wait()  # re-raises a prior async failure before starting anew
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
         if blocking:
-            self._write(step, host_state)
+            self._write_with_retry(step, host_state, plan)
         else:
-            self.wait()
-            self._async_thread = threading.Thread(
-                target=self._write, args=(step, host_state), daemon=True
-            )
+            def run():
+                try:
+                    self._write_with_retry(step, host_state, plan)
+                except BaseException as e:  # noqa: BLE001 - surfaced in wait()
+                    self._async_exc = e
+
+            self._async_thread = threading.Thread(target=run, daemon=True)
             self._async_thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight async save; re-raise its failure if it had
+        one.  The pre-failure latest checkpoint is untouched (atomic
+        rename happens only after a fully successful write)."""
         if self._async_thread is not None:
             self._async_thread.join()
             self._async_thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
-    def _write(self, step: int, host_state: Any) -> None:
+    def _write_with_retry(self, step: int, host_state: Any, plan: Any) -> None:
+        retry_io(
+            lambda: self._write(step, host_state, plan),
+            retries=self.io_retries,
+            backoff=self.io_backoff,
+            sleep=self._sleep,
+            what=f"checkpoint save step {step}",
+        )
+
+    def _write(self, step: int, host_state: Any, plan: Any = None) -> None:
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
         final = os.path.join(self.dir, f"step_{step:08d}")
-        os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "leaves": []}
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)  # stale attempt (crash or retry); rebuild
+        os.makedirs(tmp)
+        manifest = {"version": MANIFEST_VERSION, "step": step, "leaves": []}
+        if plan is not None:
+            manifest["plan"] = plan
+        counter = [0]
 
         def leaf(path, x):
+            if self.write_fault is not None:
+                self.write_fault(counter[0])
+            counter[0] += 1
             name = _sanitize(_keystr(path)) or "root"
-            np.save(os.path.join(tmp, name + ".npy"), x)
+            fpath = os.path.join(tmp, name + ".npy")
+            arr = np.asarray(x)
+            np.save(fpath, arr)
             manifest["leaves"].append(
-                {"path": _keystr(path), "file": name + ".npy"}
+                {
+                    "path": _keystr(path),
+                    "file": name + ".npy",
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "crc32": _crc32_file(fpath),
+                }
             )
             return x
 
@@ -100,17 +238,80 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None, shardings: Any = None) -> Any:
-        """Restore into the structure of ``like``; re-shards onto the current
-        mesh (elastic: the stored full arrays place onto any device count)."""
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def read_manifest(self, step: int) -> dict:
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
+
+    def plan_of(self, step: Optional[int] = None) -> Optional[dict]:
+        """The plan manifest stored with checkpoint ``step`` (default:
+        latest), or None when the checkpoint predates plan recording."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:08d}")
+        return self.read_manifest(step).get("plan")
+
+    @staticmethod
+    def _validate_manifest(manifest: dict, like: Any, step: int) -> dict:
+        """Manifest-vs-structure validation: every leaf of ``like`` must be
+        recorded with matching shape and dtype.  Returns {path: entry}.
+        Raises ``CheckpointError`` naming the offending leaf path - the
+        error an operator can act on, instead of a raw ``np.load``
+        FileNotFoundError three frames deep."""
+        entries = {e["path"]: e for e in manifest.get("leaves", [])}
+
+        def check(path, x):
+            p = _keystr(path)
+            e = entries.get(p)
+            if e is None:
+                raise CheckpointError(
+                    f"checkpoint step {step} has no leaf {p!r}; stored leaves: "
+                    f"{sorted(entries)}"
+                )
+            want_shape = tuple(np.shape(x))
+            want_dtype = np.dtype(getattr(x, "dtype", np.asarray(x).dtype))
+            if "shape" in e and tuple(e["shape"]) != want_shape:
+                raise CheckpointError(
+                    f"leaf {p!r} of checkpoint step {step} has shape "
+                    f"{tuple(e['shape'])}, expected {want_shape} - the stored "
+                    "state was trained on a different model geometry"
+                )
+            if "dtype" in e and np.dtype(e["dtype"]) != want_dtype:
+                raise CheckpointError(
+                    f"leaf {p!r} of checkpoint step {step} has dtype "
+                    f"{e['dtype']}, expected {want_dtype}"
+                )
+            return x
+
+        tree_map_with_path(check, like)
+        return entries
+
+    def _load_step(self, step: int, like: Any, shardings: Any) -> Any:
+        """Load one checkpoint step with full validation: manifest present
+        and matching ``like`` (CheckpointError on mismatch - not subject to
+        fallback), every leaf file present with an intact checksum (any
+        other failure marks the step corrupt and propagates for fallback)."""
+        d = self._step_dir(step)
+        try:
+            manifest = self.read_manifest(step)
+        except (OSError, json.JSONDecodeError) as e:
+            raise IOError(f"unreadable manifest for step {step}: {e}") from e
+        entries = self._validate_manifest(manifest, like, step)
 
         def leaf(path, x, s=None):
-            name = _sanitize(_keystr(path)) or "root"
-            arr = np.load(os.path.join(d, name + ".npy"))
+            p = _keystr(path)
+            e = entries[p]
+            fpath = os.path.join(d, e["file"])
+            if not os.path.exists(fpath):
+                raise IOError(f"leaf file {e['file']} missing from step {step}")
+            if "crc32" in e and _crc32_file(fpath) != e["crc32"]:
+                raise IOError(
+                    f"checksum mismatch on leaf {p!r} ({e['file']}) of step "
+                    f"{step} - file corrupted on disk"
+                )
+            arr = np.load(fpath)
             if s is not None:
                 return jax.device_put(arr, s)
             return jax.numpy.asarray(arr)
@@ -118,3 +319,48 @@ class CheckpointManager:
         if shardings is not None:
             return tree_map_with_path(leaf, like, shardings)
         return tree_map_with_path(lambda p, x: leaf(p, x), like)
+
+    def restore(
+        self, like: Any, step: Optional[int] = None, shardings: Any = None
+    ) -> Any:
+        """Restore into the structure of ``like``; re-shards onto the
+        current mesh (elastic: the stored global arrays place onto any
+        device count, partition, or crossover - the plan manifest is
+        metadata, not a constraint).
+
+        An explicit ``step`` is loaded exactly (corruption raises).  With
+        ``step=None`` a corrupted/unreadable latest step is logged and
+        skipped, falling back to the previous retained step - training
+        resumes a little earlier instead of loading garbage."""
+        if step is not None:
+            return retry_io(
+                lambda: self._load_step(step, like, shardings),
+                retries=self.io_retries, backoff=self.io_backoff,
+                sleep=self._sleep, what=f"checkpoint restore step {step}",
+            )
+        return self.restored_step(like, shardings)[0]
+
+    def restored_step(self, like: Any, shardings: Any = None) -> tuple[Any, int]:
+        """Like ``restore()`` (latest-first with corruption fallback) but
+        also returns the step actually loaded, so callers replaying a data
+        stream know where to resume - the loaded step may be earlier than
+        ``latest_step()`` after a fallback."""
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._load_step(s, like, shardings), s
+            except CheckpointError:
+                raise
+            except Exception as e:  # noqa: BLE001
+                last_err = e
+                log.warning(
+                    "checkpoint step %d unusable (%s: %s); falling back to "
+                    "previous retained step", s, type(e).__name__, e,
+                )
+        raise CheckpointCorruptError(
+            f"no retained checkpoint in {self.dir} is loadable "
+            f"(tried steps {steps}; last error: {last_err})"
+        )

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import re
 from typing import Sequence
 
@@ -446,6 +447,151 @@ def build_stack_plan(
         tile_cols=tuple(tile_cols),
         ragged_exec=ragged_exec,
     )
+
+
+# ---------------------------------------------------------------------------
+# Elastic plans: manifest serialization + replanning onto a changed cluster
+# (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+_log = logging.getLogger("repro.core")
+
+PLAN_MANIFEST_VERSION = 1
+
+
+def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
+    """JSON-serializable description of a StackPlan for the checkpoint
+    manifest: layer stack, tile grid, partition boundaries, grouping
+    profile (with per-group modes/crossover), backend/schedule knobs, and
+    optionally the ClusterSpec the plan was balanced for.
+
+    This is *metadata*: checkpoints store global (untiled) params and
+    optimizer state, so restore never needs the manifest to reconstruct
+    arrays - it exists so an operator (or ``--resume``) can see what
+    partition a run was using, and so ``plan_from_manifest`` can rebuild
+    the exact plan when the same cluster is still present."""
+    from repro.core.grouping import cluster_manifest
+
+    return {
+        "version": PLAN_MANIFEST_VERSION,
+        "input_hw": list(plan.input_hw),
+        "n": plan.n,
+        "m": plan.m,
+        "layers": [dataclasses.asdict(l) for l in plan.layers],
+        "groups": [[g.start, g.end, g.mode] for g in plan.groups],
+        "crossover": plan.crossover,
+        "partition": None
+        if plan.partition is None
+        else {
+            "row_bounds": list(plan.partition.row_bounds),
+            "col_bounds": list(plan.partition.col_bounds),
+        },
+        "backend": plan.backend,
+        "schedule": plan.schedule,
+        "block_oh": plan.block_oh,
+        "ragged_exec": plan.ragged_exec,
+        "cluster": None if cluster is None else cluster_manifest(cluster),
+    }
+
+
+def plan_from_manifest(man: dict) -> StackPlan:
+    """Rebuild the StackPlan a manifest describes - explicit groups and
+    partition, so the planner re-derives all geometry deterministically and
+    the result is dataclass-equal to the plan that was saved."""
+    layers = tuple(LayerDef(**ld) for ld in man["layers"])
+    groups = tuple(Group(s, e, mode) for s, e, mode in man["groups"])
+    part = man.get("partition")
+    partition = (
+        None
+        if part is None
+        else TilePartition(tuple(part["row_bounds"]), tuple(part["col_bounds"]))
+    )
+    return build_stack_plan(
+        tuple(man["input_hw"]),
+        layers,
+        man["n"],
+        man["m"],
+        groups,
+        backend=man.get("backend", "xla"),
+        schedule=man.get("schedule", "sync"),
+        block_oh=man.get("block_oh"),
+        partition=partition,
+        ragged_exec=man.get("ragged_exec", "spec"),
+    )
+
+
+def replan_stack(
+    plan: StackPlan,
+    hw: HardwareProfile | ClusterSpec | str | None,
+    n: int | None = None,
+    m: int | None = None,
+    *,
+    batch: int = 1,
+    groups: Sequence[Group] | str | None = "auto",
+    crossover: int | str | None = "auto",
+    mem_limit: float | None = None,
+    partition: TilePartition | None = None,
+) -> StackPlan:
+    """Rebuild ``plan`` against a changed cluster (elastic replan,
+    DESIGN.md §10): same layer stack, same backend/schedule/executor knobs,
+    new device set.  Re-runs the full planning pipeline - makespan
+    balancing (``balance_bounds`` via ``cluster_partition``), the grouping
+    DP (``groups="auto"``) and the crossover scan (``crossover="auto"``) -
+    so the surviving devices get a partition balanced for *them*, not the
+    one the lost device was part of.
+
+    ``n``/``m`` default to the ClusterSpec's grid (required for other hw
+    forms when the grid changes).  Params are partition-independent (every
+    device holds full filters), so a TrainState trains on the new plan
+    as-is once re-placed - see ``train.trainer.globalize_state``.
+
+    Graceful degradation: if the cost-optimal grouping/crossover is
+    infeasible under the rebalanced partition (a skewed survivor mesh can
+    shrink the smallest tile below a fused group's halo), fall back to
+    ungrouped layers, then to ungrouped all-spatial - a valid plan always
+    comes back for any cluster the partitioner can balance."""
+    if isinstance(hw, ClusterSpec):
+        n = hw.n if n is None else n
+        m = hw.m if m is None else m
+    if n is None or m is None:
+        raise ValueError("replan_stack needs n, m when hw is not a ClusterSpec")
+
+    def attempt(g, x):
+        return build_stack_plan(
+            plan.input_hw,
+            plan.layers,
+            n,
+            m,
+            g,
+            backend=plan.backend,
+            schedule=plan.schedule,
+            block_oh=plan.block_oh,
+            hw=hw,
+            batch=batch,
+            crossover=x,
+            mem_limit=mem_limit,
+            partition=partition,
+            ragged_exec=plan.ragged_exec,
+        )
+
+    ladder = [(groups, crossover)]
+    if groups is not None:
+        ladder.append((None, crossover))
+    if crossover is not None:
+        ladder.append((None, None))
+    last_err: Exception | None = None
+    for i, (g, x) in enumerate(ladder):
+        try:
+            return attempt(g, x)
+        except ValueError as e:
+            last_err = e
+            if i + 1 < len(ladder):
+                _log.warning(
+                    "replan with groups=%r crossover=%r infeasible (%s); "
+                    "degrading to groups=%r crossover=%r",
+                    g, x, e, *ladder[i + 1],
+                )
+    raise last_err
 
 
 # ---------------------------------------------------------------------------

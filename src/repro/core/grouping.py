@@ -243,6 +243,108 @@ def parse_cluster_spec(spec: str, n: int, m: int) -> ClusterSpec:
     return ClusterSpec(name=spec, grid=grid)
 
 
+def _best_grid(k: int) -> tuple[int, int]:
+    """Most-square (n, m) factorisation of k with n <= m - the grid shape
+    survivors are re-packed into after an elastic membership change.  Square
+    grids minimise the halo perimeter per tile; prime counts degrade to a
+    1 x k strip (still a valid tile grid)."""
+    best = (1, k)
+    for n in range(2, int(k ** 0.5) + 1):
+        if k % n == 0:
+            best = (n, k // n)
+    return best
+
+
+def pack_devices(name: str, devices: Sequence[HardwareProfile]) -> ClusterSpec:
+    """Re-pack a flat device list row-major into the most-square grid that
+    holds it (elastic replan: the surviving devices of a cluster whose grid
+    shape no longer exists)."""
+    if not devices:
+        raise ValueError("cannot build a cluster from zero devices")
+    n, m = _best_grid(len(devices))
+    grid = tuple(tuple(devices[i * m : (i + 1) * m]) for i in range(n))
+    return ClusterSpec(name=name, grid=grid)
+
+
+def _device_index(cluster: ClusterSpec, device: str | int) -> int:
+    """Flat row-major index of ``device`` in the cluster grid: an int is
+    taken verbatim; a string matches a profile name or cluster alias
+    (first match row-major)."""
+    devs = cluster.devices
+    if isinstance(device, int):
+        if not 0 <= device < len(devs):
+            raise ValueError(
+                f"device index {device} out of range for {len(devs)}-device "
+                f"cluster {cluster.name!r}"
+            )
+        return device
+    target = CLUSTER_ALIASES.get(device)
+    for i, p in enumerate(devs):
+        if p.name == device or (target is not None and p == target):
+            return i
+    raise ValueError(
+        f"no device {device!r} in cluster {cluster.name!r}; devices: "
+        f"{[p.name for p in devs]}"
+    )
+
+
+def drop_device(cluster: ClusterSpec, device: str | int) -> ClusterSpec:
+    """Surviving cluster after ``device`` disappears (battery death,
+    network drop): remove it and re-pack the rest into the most-square
+    grid.  The elastic replan path feeds this straight into
+    ``fusion.replan_stack`` - losing the Jetson of ``pi3x3+jetson`` leaves
+    a 1x3 all-Pi cluster whose partition re-balances to (near-)even."""
+    idx = _device_index(cluster, device)
+    devs = list(cluster.devices)
+    if len(devs) == 1:
+        raise ValueError(
+            f"cannot drop the last device of cluster {cluster.name!r}"
+        )
+    name = devs[idx].name
+    del devs[idx]
+    return pack_devices(f"{cluster.name}-{name}", devs)
+
+
+def add_device(cluster: ClusterSpec, device: str | HardwareProfile) -> ClusterSpec:
+    """Cluster after a device joins (elastic scale-up): append and re-pack
+    into the most-square grid."""
+    if isinstance(device, str):
+        if device not in CLUSTER_ALIASES:
+            raise ValueError(
+                f"unknown device {device!r}; known: {sorted(set(CLUSTER_ALIASES))}"
+            )
+        device = CLUSTER_ALIASES[device]
+    devs = list(cluster.devices) + [device]
+    return pack_devices(f"{cluster.name}+{device.name}", devs)
+
+
+def profile_manifest(p: HardwareProfile) -> dict:
+    return dataclasses.asdict(p)
+
+
+def profile_from_manifest(d: dict) -> HardwareProfile:
+    return HardwareProfile(**d)
+
+
+def cluster_manifest(cluster: ClusterSpec) -> dict:
+    """JSON form of a ClusterSpec for the checkpoint plan manifest.  Full
+    profile fields per grid cell (not just names) so ad-hoc profiles
+    round-trip without a registry lookup."""
+    return {
+        "name": cluster.name,
+        "grid": [[profile_manifest(p) for p in row] for row in cluster.grid],
+    }
+
+
+def cluster_from_manifest(d: dict) -> ClusterSpec:
+    return ClusterSpec(
+        name=d["name"],
+        grid=tuple(
+            tuple(profile_from_manifest(p) for p in row) for row in d["grid"]
+        ),
+    )
+
+
 def _bounds_makespan(
     row_bounds: Sequence[int], col_bounds: Sequence[int], flops
 ) -> float:
@@ -650,6 +752,19 @@ def _group_cost_cluster(
     return comp_max, bound_max, sync_s, comp_max + bound_max - tot_max
 
 
+def _group_halo_lohi(layers: Sequence[LayerDef], s: int, e: int) -> tuple[int, int]:
+    """(lo, hi) input halo of spatial group [s, e] (build_stack_plan's eq. 1
+    recursion) - for feasibility pruning against a tile partition."""
+    hl = hh = 0
+    sprod = 1
+    for l in range(s, e + 1):
+        p = layers[l].padding
+        hl += p * sprod
+        hh += (layers[l].kernel - layers[l].stride - p) * sprod
+        sprod *= layers[l].stride
+    return hl, hh
+
+
 def _any_group_cost(
     layers, ext, tiles, s, e, n, m, hw, batch, schedule, mode="spatial"
 ) -> tuple[float, float, float, float]:
@@ -992,6 +1107,17 @@ def optimize_grouping(
     choice = [0] * (L + 1)
     for e in range(1, L + 1):
         for s in range(max(1, e - max_group + 1), e + 1):
+            if tiles_rc is not None:
+                # a group's halo must fit inside the smallest neighbouring
+                # tile (build_stack_plan enforces this); under a skewed
+                # non-uniform partition a fused group can be infeasible, so
+                # the DP must never pick it
+                hlo, hhi = _group_halo_lohi(layers, s - 1, e - 1)
+                hmax = max(hlo, hhi)
+                if hmax and (
+                    min(tiles_rc[0][s - 1]) < hmax or min(tiles_rc[1][s - 1]) < hmax
+                ):
+                    continue
             c, b, y, h = _any_group_cost(
                 layers, ext, tiles_rc, s - 1, e - 1, n, m, hw, batch, schedule
             )
@@ -1018,8 +1144,9 @@ def optimize_grouping(
     if crossover is None:
         if dp[L] == INF:
             raise ValueError(
-                f"no spatial grouping fits mem_limit={mem_limit}; raise the "
-                "limit or enable a crossover"
+                f"no feasible spatial grouping (mem_limit={mem_limit}, "
+                "partition halo constraints); raise the limit, use a less "
+                "skewed partition, or enable a crossover"
             )
         groups = backtrack(L)
         if (

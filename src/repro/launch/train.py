@@ -51,6 +51,15 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--resume", default="auto", choices=["auto", "always", "never"],
+                    help="checkpoint resume policy: 'auto' restores the "
+                         "newest loadable checkpoint in --ckpt-dir if one "
+                         "exists, 'always' requires one, 'never' starts fresh")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="fault-injection schedule (runtime.faults), e.g. "
+                         "'drop:jetson@5,slow:0.2@8,ckpt-crash@10,corrupt@12'; "
+                         "device drops trigger an elastic replan onto the "
+                         "surviving devices (tiled arch only)")
     ap.add_argument("--mesh", choices=["local", "single", "multi"], default="local")
     ap.add_argument("--seed", type=int, default=0)
     # tiled-CNN (planner) options
@@ -103,11 +112,12 @@ def _run_tiled(args) -> int:
     from repro.models.yolo import make_yolo_tiled_arch, yolov2_16_layers
 
     n_layers = len(yolov2_16_layers()[: args.depth])
-    hw = (
+    cluster = (
         parse_cluster_spec(args.cluster, args.grid, args.grid)
         if args.cluster
-        else args.hw_profile
+        else None
     )
+    hw = cluster if cluster is not None else args.hw_profile
     arch = make_yolo_tiled_arch(
         input_hw=(args.input_hw, args.input_hw),
         depth=args.depth,
@@ -147,8 +157,45 @@ def _run_tiled(args) -> int:
         t = 0.05 * rng.standard_normal(tgt, np.float32)
         return {"x": jnp.asarray(x), "t": jnp.asarray(t)}
 
+    # Elastic replan: a ClusterChange (fault schedule or a real device
+    # monitor) rebuilds the plan for the surviving device set and hands the
+    # driver a train step jit'd for the new mesh.  The live TrainState
+    # carries over (global params; optimizer statistics untouched).
+    from repro.core import (
+        add_device, drop_device, plan_manifest, replan_stack,
+    )
+    from repro.models.tiled_cnn import TiledCNNArch
+    from repro.models.yolo import l2_loss_local
+    from repro.runtime.faults import FaultInjector
+
+    live = {"cluster": cluster, "plan": arch.plan}
+
+    def replan(ev):
+        cl = live["cluster"]
+        if cl is None:  # homogeneous grid: materialize a ClusterSpec to edit
+            cl = parse_cluster_spec(
+                f"{args.hw_profile}x{args.grid * args.grid}", args.grid, args.grid
+            )
+        cl = drop_device(cl, ev.device) if ev.kind == "drop" else add_device(cl, ev.device)
+        new_plan = replan_stack(live["plan"], cl, batch=args.batch)
+        new_arch = TiledCNNArch(
+            plan=new_plan,
+            mesh=make_tile_mesh(new_plan.n, new_plan.m),
+            loss_local=l2_loss_local,
+        )
+        _, new_step = make_train_step(new_arch, pcfg, tcfg)
+        live.update(cluster=cl, plan=new_plan)
+        print(
+            f"replan ({ev.kind}:{ev.device}): grid={new_plan.n}x{new_plan.m} "
+            f"rows={new_plan.partition.row_bounds} "
+            f"cols={new_plan.partition.col_bounds} "
+            f"crossover={new_plan.crossover}"
+        )
+        return jax.jit(new_step, donate_argnums=(0,)), plan_manifest(new_plan, cl)
+
     dcfg = DriverConfig(
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=args.log_every
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        log_every=args.log_every, resume=args.resume,
     )
     report = run_training(
         init_state=init_state,
@@ -157,11 +204,14 @@ def _run_tiled(args) -> int:
         steps=args.steps,
         cfg=dcfg,
         seed=args.seed,
+        faults=FaultInjector(args.fault_schedule) if args.fault_schedule else None,
+        replan=replan,
+        plan=plan_manifest(arch.plan, cluster),
     )
     m = report.last_metrics or {}
     print(
         f"done: steps={report.steps_done} restarts={report.restarts} "
-        f"stragglers={report.straggler_steps} "
+        f"replans={report.replans} stragglers={report.straggler_steps} "
         f"loss={m.get('loss', float('nan')):.4f} gnorm={m.get('grad_norm', 0):.3f}"
     )
     return 0
@@ -197,8 +247,11 @@ def main() -> int:
         def make_batch(step: int) -> dict:
             return place(synth_batch(specs, arch.cfg, args.seed, step))
 
+        from repro.runtime.faults import FaultInjector
+
         dcfg = DriverConfig(
-            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=args.log_every
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            log_every=args.log_every, resume=args.resume,
         )
         report = run_training(
             init_state=init_state,
@@ -207,6 +260,9 @@ def main() -> int:
             steps=args.steps,
             cfg=dcfg,
             seed=args.seed,
+            faults=(
+                FaultInjector(args.fault_schedule) if args.fault_schedule else None
+            ),
         )
     m = report.last_metrics or {}
     print(

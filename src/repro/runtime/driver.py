@@ -16,7 +16,17 @@ needs:
   - watchdog: a heartbeat thread flags hangs (no step completion within
     ``hang_timeout``) so an external supervisor can kill/restart the job;
   - elastic restart: restores onto whatever mesh is active (checkpoints
-    store full arrays; see ckpt.manager).
+    store full arrays; see ckpt.manager);
+  - elastic replan (DESIGN.md §10): a ``ClusterChange`` raised out of the
+    step loop (by ``runtime.faults.FaultInjector`` or a real device-health
+    monitor) routes to the ``replan`` callback, which rebuilds the plan and
+    train step for the surviving devices; the live TrainState is pulled to
+    its global host form (optimizer statistics untouched) and training
+    continues at the same step on the new mesh - no restart, no lost
+    progress;
+  - fault injection: ``faults`` replays a ``runtime.faults`` schedule
+    (device dropout, slowdown, step failure, mid-save writer crash,
+    on-disk leaf corruption) through the exact recovery paths above.
 """
 from __future__ import annotations
 
@@ -28,8 +38,10 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
+import numpy as np
 
 from repro.ckpt.manager import CheckpointManager
+from repro.runtime.faults import ClusterChange, FaultInjector
 
 log = logging.getLogger("repro.runtime")
 
@@ -43,13 +55,18 @@ class DriverConfig:
     hang_timeout: float = 300.0
     async_ckpt: bool = True
     log_every: int = 0               # 0 = no periodic metric logging
+    resume: str = "auto"             # auto | always | never
+    io_retries: int = 3              # checkpoint IO retry budget
+    io_backoff: float = 0.05         # base backoff (doubles per retry)
 
 
 @dataclasses.dataclass
 class DriverReport:
     steps_done: int = 0
     restarts: int = 0
+    replans: int = 0
     straggler_steps: int = 0
+    resumed_step: Optional[int] = None   # checkpoint step resumed from
     step_times: list = dataclasses.field(default_factory=list)
     last_metrics: Optional[dict] = None
 
@@ -90,26 +107,58 @@ def run_training(
     seed: int = 0,
     fault_hook: Optional[Callable[[int], None]] = None,
     state_shardings: Any = None,
+    faults: Optional[FaultInjector] = None,
+    replan: Optional[Callable[[ClusterChange], tuple[Callable, Any]]] = None,
+    plan: Any = None,
 ) -> DriverReport:
     """Run ``steps`` steps with checkpoint/restart fault tolerance.
 
     make_batch(step) must be deterministic so restarts replay the stream.
-    fault_hook(step) may raise to inject failures (tests).
+    fault_hook(step) may raise to inject failures (tests); ``faults`` is
+    the structured form (a ``runtime.faults.FaultInjector`` replaying a
+    parsed schedule - device drops arrive as ``ClusterChange``).
+
+    ``plan`` is an optional JSON-serializable plan manifest
+    (``core.fusion.plan_manifest``) stored with every checkpoint.  When a
+    ``ClusterChange`` escapes the step loop it is handed to
+    ``replan(event)``, which must return ``(new_train_step,
+    new_plan_manifest)`` built for the changed cluster; the driver pulls
+    the live TrainState to its partition-independent host form (global
+    numpy leaves - optimizer statistics pass through untouched) and
+    continues at the *same* step on the new mesh.  Without a ``replan``
+    callback a ClusterChange is fatal (re-raised after draining saves).
+
+    ``cfg.resume``: "auto" restores the newest loadable checkpoint when
+    one exists, "always" requires one (FileNotFoundError otherwise),
+    "never" ignores existing checkpoints and starts fresh.  Restores are
+    fallback-aware: a corrupted newest step is skipped (ckpt.manager) and
+    the replayed stream resumes from the step actually loaded.
     """
-    mgr = CheckpointManager(cfg.ckpt_dir)
+    mgr = CheckpointManager(
+        cfg.ckpt_dir, io_retries=cfg.io_retries, io_backoff=cfg.io_backoff
+    )
+    if faults is not None:
+        faults.bind(mgr)
     report = DriverReport()
     watchdog = Watchdog(cfg.hang_timeout)
 
     def fresh():
         return init_state(jax.random.PRNGKey(seed))
 
+    if cfg.resume not in ("auto", "always", "never"):
+        raise ValueError(f"resume must be auto|always|never; got {cfg.resume!r}")
     state = None
     start_step = 0
-    if mgr.latest_step() is not None:
+    if cfg.resume == "always" and mgr.latest_step() is None:
+        raise FileNotFoundError(
+            f"resume='always' but no checkpoint in {cfg.ckpt_dir}"
+        )
+    if cfg.resume != "never" and mgr.latest_step() is not None:
         abstract = jax.eval_shape(fresh)
-        state = mgr.restore(abstract, shardings=state_shardings)
-        start_step = mgr.latest_step() + 1
-        log.info("restored checkpoint at step %d", start_step - 1)
+        state, loaded = mgr.restored_step(abstract, shardings=state_shardings)
+        start_step = loaded + 1
+        report.resumed_step = loaded
+        log.info("restored checkpoint at step %d", loaded)
     if state is None:
         state = fresh()
 
@@ -119,6 +168,8 @@ def run_training(
         while step < steps:
             try:
                 t0 = time.monotonic()
+                if faults is not None:
+                    faults.on_step(step)
                 if fault_hook is not None:
                     fault_hook(step)
                 batch = make_batch(step)
@@ -146,8 +197,23 @@ def run_training(
                         )
                 report.steps_done += 1
                 if (step + 1) % cfg.ckpt_every == 0 or step + 1 == steps:
-                    mgr.save(step, state, blocking=not cfg.async_ckpt)
+                    mgr.save(step, state, blocking=not cfg.async_ckpt, plan=plan)
                 step += 1
+            except ClusterChange as ev:
+                # elastic path: the device set changed - rebuild the plan
+                # for the survivors and keep the live state (its leaves are
+                # global arrays; the new jit re-places them).  Optimizer
+                # statistics ride along untouched.
+                if replan is None:
+                    log.error("cluster change (%s) with no replan callback", ev)
+                    mgr.wait()
+                    raise
+                log.warning("cluster change: %s; replanning", ev)
+                mgr.wait()            # drain in-flight save before remap
+                train_step, plan = replan(ev)
+                state = jax.tree.map(np.asarray, state)
+                report.replans += 1
+                # continue at the same step: no progress lost on a replan
             except Exception as e:  # noqa: BLE001 - any step failure is retryable
                 restarts += 1
                 report.restarts = restarts
@@ -155,12 +221,17 @@ def run_training(
                 if restarts > cfg.max_restarts:
                     mgr.wait()
                     raise
-                latest = mgr.latest_step()
-                if latest is not None:
-                    abstract = jax.eval_shape(fresh)
+                try:
                     mgr.wait()
-                    state = mgr.restore(abstract, shardings=state_shardings)
-                    step = latest + 1
+                except Exception:  # noqa: BLE001 - async save failure; disk
+                    log.exception("async save failed during restart; "
+                                  "restoring from last committed step")
+                if mgr.latest_step() is not None:
+                    abstract = jax.eval_shape(fresh)
+                    state, loaded = mgr.restored_step(
+                        abstract, shardings=state_shardings
+                    )
+                    step = loaded + 1
                 else:
                     state = fresh()
                     step = 0

@@ -172,3 +172,45 @@ def abstract_state(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
     """TrainState ShapeDtypeStructs (dry-run: no allocation)."""
     init_state, _ = make_train_step(arch, pcfg, tcfg)
     return jax.eval_shape(init_state, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Elastic replan support (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def globalize_state(state: TrainState) -> TrainState:
+    """Pull a live TrainState to host as plain numpy - the
+    partition-independent form.  Params (and hence every optimizer
+    statistic, which mirrors param structure) are replicated across the
+    tile mesh, so each leaf is already a full global array; this just
+    detaches it from the old mesh's device placement.  The result feeds a
+    train step jit'd for a *different* ClusterSpec/TilePartition without
+    resharding and without touching optimizer statistics."""
+    import numpy as np
+
+    return jax.tree.map(np.asarray, state)
+
+
+def check_state_matches(state: TrainState, like: TrainState) -> None:
+    """Validate that ``state`` is structurally interchangeable with
+    ``like`` (same pytree structure, leaf shapes and dtypes) - the guard a
+    replan runs before handing restored/globalized state to a newly
+    compiled train step.  Raises ValueError naming the first offending
+    leaf path."""
+    paths_a = {jax.tree_util.keystr(p): l for p, l in jax.tree_util.tree_leaves_with_path(state)}
+    paths_b = {jax.tree_util.keystr(p): l for p, l in jax.tree_util.tree_leaves_with_path(like)}
+    for path in sorted(set(paths_a) | set(paths_b)):
+        if path not in paths_a:
+            raise ValueError(f"state missing leaf {path!r} expected by plan")
+        if path not in paths_b:
+            raise ValueError(f"state has extra leaf {path!r} not in plan")
+        a, b = paths_a[path], paths_b[path]
+        if tuple(a.shape) != tuple(b.shape):
+            raise ValueError(
+                f"state leaf {path!r} shape {tuple(a.shape)} != plan {tuple(b.shape)}"
+            )
+        if jnp.dtype(a.dtype) != jnp.dtype(b.dtype):
+            raise ValueError(
+                f"state leaf {path!r} dtype {a.dtype} != plan {b.dtype}"
+            )

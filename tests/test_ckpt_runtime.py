@@ -1,5 +1,6 @@
 """Checkpoint manager + fault-tolerant driver: restart, atomicity,
-retention, straggler tracking, elastic restore."""
+retention, straggler tracking, elastic restore, async-failure surfacing,
+manifest validation, checksum fallback."""
 import json
 import os
 import shutil
@@ -9,8 +10,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.manager import (
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointManager,
+    retry_io,
+)
 from repro.runtime.driver import DriverConfig, run_training
+from repro.runtime.faults import corrupt_leaf, make_write_crash
 
 
 def _state(v=0.0):
@@ -160,3 +167,217 @@ def test_elastic_restore_from_flat_arrays(tmp_path):
     s = jax.sharding.SingleDeviceSharding(jax.devices()[0])
     out = mgr.restore(jax.eval_shape(lambda: state), shardings={"w": s})
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(state["w"]))
+
+
+# ---------------------------------------------------------------------------
+# async-save failure surfacing (silent-swallow fix)
+# ---------------------------------------------------------------------------
+
+
+def test_async_save_failure_reraised_from_wait(tmp_path):
+    """A write killed mid-flight in the async thread surfaces from wait()
+    (after retries) and the prior committed checkpoint is untouched."""
+    mgr = CheckpointManager(str(tmp_path), io_retries=1, io_backoff=0.0)
+    mgr.save(0, _state(1.0))
+    d0 = tmp_path / "step_00000000"
+    before = {f: (d0 / f).read_bytes() for f in os.listdir(d0)}
+
+    mgr.write_fault = make_write_crash(times=10)      # outlives the retries
+    mgr.save(1, _state(2.0), blocking=False)
+    with pytest.raises(IOError, match="injected writer crash"):
+        mgr.wait()
+    assert mgr.latest_step() == 0
+    after = {f: (d0 / f).read_bytes() for f in os.listdir(d0)}
+    assert after == before, "prior step dir modified by failed save"
+    out = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert float(out["w"][0, 0]) == 1.0
+
+
+def test_async_save_failure_reraised_from_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), io_retries=0, io_backoff=0.0)
+    mgr.write_fault = make_write_crash(times=10)
+    mgr.save(0, _state(), blocking=False)
+    with pytest.raises(IOError, match="injected writer crash"):
+        mgr.save(1, _state())  # wait() at entry re-raises the async failure
+
+
+def test_one_shot_write_crash_absorbed_by_retry(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), io_retries=2, io_backoff=0.0)
+    mgr.write_fault = make_write_crash(times=1)
+    mgr.save(0, _state(3.0))
+    assert mgr.latest_step() == 0
+    out = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert float(out["w"][0, 0]) == 3.0
+
+
+def test_retry_io_backoff_sequence():
+    """Exponential backoff: delay doubles per retry; gives up after the
+    budget; CheckpointError passes through un-retried."""
+    delays = []
+    calls = [0]
+
+    def fn():
+        calls[0] += 1
+        raise OSError("disk flake")
+
+    with pytest.raises(OSError):
+        retry_io(fn, retries=3, backoff=0.1, sleep=delays.append)
+    assert calls[0] == 4                      # 1 try + 3 retries
+    assert delays == pytest.approx([0.1, 0.2, 0.4])
+
+    structural = [0]
+
+    def fn2():
+        structural[0] += 1
+        raise CheckpointError("wrong model")
+
+    with pytest.raises(CheckpointError):
+        retry_io(fn2, retries=3, backoff=0.1, sleep=delays.append)
+    assert structural[0] == 1                 # never retried
+
+
+# ---------------------------------------------------------------------------
+# manifest shapes/dtypes + validation errors naming the leaf
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_records_shapes_dtypes_checksums(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"w": jnp.zeros((4, 4)), "n": {"b": jnp.int32(3)}})
+    man = mgr.read_manifest(0)
+    entries = {e["path"]: e for e in man["leaves"]}
+    assert entries["w"]["shape"] == [4, 4]
+    assert entries["w"]["dtype"] == "float32"
+    assert entries["n/b"]["shape"] == []
+    assert entries["n/b"]["dtype"] == "int32"
+    assert all(isinstance(e["crc32"], int) for e in entries.values())
+
+
+def test_restore_missing_leaf_names_path(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"w": jnp.zeros((2,))})
+    like = jax.eval_shape(lambda: {"w": jnp.zeros((2,)), "extra": jnp.zeros((3,))})
+    with pytest.raises(CheckpointError, match="no leaf 'extra'"):
+        mgr.restore(like, step=0)
+
+
+def test_restore_shape_mismatch_names_path(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"a": {"w": jnp.zeros((2, 3))}})
+    like = jax.eval_shape(lambda: {"a": {"w": jnp.zeros((4, 4))}})
+    with pytest.raises(CheckpointError, match=r"'a/w'.*\(2, 3\).*\(4, 4\)"):
+        mgr.restore(like, step=0)
+
+
+def test_restore_dtype_mismatch_names_path(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"w": jnp.zeros((2,), jnp.float32)})
+    like = jax.eval_shape(lambda: {"w": jnp.zeros((2,), jnp.int32)})
+    with pytest.raises(CheckpointError, match="'w'.*float32.*int32"):
+        mgr.restore(like, step=0)
+
+
+def test_structural_mismatch_not_subject_to_fallback(tmp_path):
+    """A shape mismatch is an operator error: even with an older intact
+    step on disk, restore must raise rather than silently load old data."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"w": jnp.zeros((2, 3))})
+    mgr.save(1, {"w": jnp.zeros((2, 3))})
+    like = jax.eval_shape(lambda: {"w": jnp.zeros((9, 9))})
+    with pytest.raises(CheckpointError):
+        mgr.restore(like)
+
+
+# ---------------------------------------------------------------------------
+# checksum fallback
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_leaf_falls_back_to_previous_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, _state(1.0))
+    mgr.save(1, _state(2.0))
+    corrupt_leaf(str(tmp_path), 1)
+    like = jax.eval_shape(lambda: _state())
+    out, step = mgr.restored_step(like)
+    assert step == 0
+    assert float(out["w"][0, 0]) == 1.0
+    # restore() (step=None) rides the same fallback path
+    out2 = mgr.restore(like)
+    assert float(out2["w"][0, 0]) == 1.0
+    # explicit step pins the corrupted checkpoint: must raise, not fall back
+    with pytest.raises(IOError, match="checksum mismatch"):
+        mgr.restore(like, step=1)
+
+
+def test_all_steps_corrupt_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, _state(1.0))
+    mgr.save(1, _state(2.0))
+    corrupt_leaf(str(tmp_path), 0)
+    corrupt_leaf(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(jax.eval_shape(lambda: _state()))
+
+
+def test_missing_leaf_file_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, _state(1.0))
+    mgr.save(1, _state(2.0))
+    d1 = tmp_path / "step_00000001"
+    os.remove(d1 / "w.npy")
+    out, step = mgr.restored_step(jax.eval_shape(lambda: _state()))
+    assert step == 0 and float(out["w"][0, 0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# plan manifest storage + driver resume semantics
+# ---------------------------------------------------------------------------
+
+
+def test_plan_manifest_stored_and_read_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    plan = {"version": 1, "n": 2, "m": 2, "note": "stub"}
+    mgr.save(3, _state(), plan=plan)
+    assert mgr.plan_of() == plan
+    assert mgr.plan_of(3) == plan
+    mgr.save(4, _state())            # plan omitted -> None recorded
+    assert mgr.plan_of(4) is None
+
+
+def _toy_driver(tmp_path, steps, resume="auto", **kw):
+    def train_step(state, batch):
+        w = state["w"] + batch["x"].mean()
+        return {"w": w, "step": state["step"] + 1}, {"loss": jnp.sum(w)}
+
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=2, async_ckpt=False,
+                       resume=resume)
+    return run_training(
+        init_state=lambda k: _state(0.0), train_step=train_step,
+        make_batch=lambda s: {"x": jnp.full((2,), float(s))},
+        steps=steps, cfg=cfg, **kw,
+    )
+
+
+def test_driver_resume_never_starts_fresh(tmp_path):
+    _toy_driver(tmp_path, 4)
+    rep = _toy_driver(tmp_path, 4, resume="never")
+    assert rep.resumed_step is None
+    assert rep.steps_done == 4                       # re-ran all steps
+
+
+def test_driver_resume_always_requires_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        _toy_driver(tmp_path, 4, resume="always")
+
+
+def test_driver_resume_falls_back_past_corrupt_latest(tmp_path):
+    """Corrupted newest checkpoint: resume skips it, restores the previous
+    retained step, and replays the stream from there - total math exact."""
+    _toy_driver(tmp_path, 6)                         # ckpts at steps 1,3,5
+    corrupt_leaf(str(tmp_path), 5)
+    rep = _toy_driver(tmp_path, 8, resume="auto")
+    assert rep.resumed_step == 3                     # fell back past step 5
+    mgr = CheckpointManager(str(tmp_path))
+    out = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert float(out["w"][0, 0]) == pytest.approx(sum(range(8)))

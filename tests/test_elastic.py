@@ -1,0 +1,351 @@
+"""Elastic training: fault-schedule parsing, cluster surgery (drop/add +
+grid re-pack), plan/cluster manifests, replan_stack degradation, the
+fault injector, and the driver's ClusterChange->replan path (single
+device; multi-device exactness lives in scripts/check_elastic.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    add_device,
+    build_stack_plan,
+    cluster_from_manifest,
+    cluster_manifest,
+    drop_device,
+    pack_devices,
+    parse_cluster_spec,
+    plan_from_manifest,
+    plan_manifest,
+    replan_stack,
+    PI3_PROFILE,
+    JETSON_PROFILE,
+)
+from repro.core.spatial import LayerDef
+from repro.runtime.driver import DriverConfig, run_training
+from repro.runtime.faults import (
+    ClusterChange,
+    Fault,
+    FaultError,
+    FaultInjector,
+    parse_fault_schedule,
+)
+
+LAYERS = (
+    LayerDef(kernel=3, stride=1, in_channels=3, out_channels=8),
+    LayerDef(kernel=3, stride=1, in_channels=8, out_channels=8, pool=2),
+)
+
+
+# ---------------------------------------------------------------------------
+# fault schedule parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_schedule_full_grammar():
+    faults = parse_fault_schedule(
+        "drop:jetson@5, slow:0.2@8, ckpt-crash@10, corrupt@12, fail@3, "
+        "ckpt-crash:9@14, add:pi3@20"
+    )
+    assert [f.kind for f in faults] == [
+        "fail", "drop", "slow", "ckpt-crash", "corrupt", "ckpt-crash", "add"
+    ]  # sorted by step
+    by_kind = {(f.kind, f.step): f for f in faults}
+    assert by_kind[("drop", 5)].arg == "jetson"
+    assert by_kind[("slow", 8)].arg == 0.2
+    assert by_kind[("ckpt-crash", 10)].arg == 1     # default: one crash
+    assert by_kind[("ckpt-crash", 14)].arg == 9
+    assert by_kind[("add", 20)].arg == "pi3"
+
+
+@pytest.mark.parametrize("bad", [
+    "drop:jetson",            # no @step
+    "drop@5",                 # no device
+    "warp:x@5",               # unknown kind
+    "slow:-1@5",              # negative seconds
+    "drop:jetson@x",          # non-int step
+])
+def test_parse_fault_schedule_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault_schedule(bad)
+
+
+def test_fault_injector_fires_each_fault_once():
+    inj = FaultInjector("slow:0.5@2,drop:jetson@4", sleep=lambda s: None)
+    inj.on_step(0)
+    inj.on_step(1)
+    assert len(inj.fired) == 0
+    inj.on_step(2)
+    assert [f.kind for f in inj.fired] == ["slow"]
+    inj.on_step(3)
+    with pytest.raises(ClusterChange) as ei:
+        inj.on_step(4)
+    assert ei.value.kind == "drop" and ei.value.device == "jetson"
+    inj.on_step(4)          # re-run of the same step: fault already fired
+    assert len(inj.pending) == 0
+
+
+def test_fault_injector_fires_skipped_steps():
+    """A fault scheduled inside a replayed/skipped range still fires at the
+    first step at or after its trigger."""
+    inj = FaultInjector([Fault("fail", 3)])
+    with pytest.raises(FaultError):
+        inj.on_step(7)      # steps 3..6 never ran exactly
+
+
+# ---------------------------------------------------------------------------
+# cluster surgery: drop / add / re-pack
+# ---------------------------------------------------------------------------
+
+
+def test_drop_jetson_repacks_to_1x3():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    surv = drop_device(c, "jetson")
+    assert (surv.n, surv.m) == (1, 3)
+    assert all(p == PI3_PROFILE for p in surv.devices)
+
+
+def test_drop_by_flat_index():
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    surv = drop_device(c, 3)          # row-major last cell = the jetson
+    assert all(p == PI3_PROFILE for p in surv.devices)
+    with pytest.raises(ValueError, match="out of range"):
+        drop_device(c, 4)
+
+
+def test_drop_unknown_device_raises():
+    c = parse_cluster_spec("pi3x4", 2, 2)
+    with pytest.raises(ValueError, match="no device 'jetson'"):
+        drop_device(c, "jetson")
+
+
+def test_drop_last_device_raises():
+    c = parse_cluster_spec("pi3", 1, 1)
+    with pytest.raises(ValueError, match="last device"):
+        drop_device(c, "pi3")
+
+
+def test_add_device_repacks_square():
+    c = parse_cluster_spec("pi3x3", 1, 3)
+    grown = add_device(c, "jetson")
+    assert (grown.n, grown.m) == (2, 2)
+    assert sum(p == JETSON_PROFILE for p in grown.devices) == 1
+    with pytest.raises(ValueError, match="unknown device"):
+        add_device(c, "warp-core")
+
+
+def test_pack_devices_grids():
+    assert (pack_devices("c", [PI3_PROFILE] * 6).n,
+            pack_devices("c", [PI3_PROFILE] * 6).m) == (2, 3)
+    assert (pack_devices("c", [PI3_PROFILE] * 7).n,
+            pack_devices("c", [PI3_PROFILE] * 7).m) == (1, 7)  # prime -> strip
+    with pytest.raises(ValueError):
+        pack_devices("c", [])
+
+
+# ---------------------------------------------------------------------------
+# manifests
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_manifest_roundtrip():
+    import json
+
+    c = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    man = json.loads(json.dumps(cluster_manifest(c)))
+    c2 = cluster_from_manifest(man)
+    assert c2.name == c.name and c2.grid == c.grid
+
+
+def test_plan_manifest_roundtrip_uniform_hetero_hybrid():
+    import json
+
+    cluster = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    for plan, cl in [
+        (build_stack_plan((64, 64), LAYERS, 2, 2), None),
+        (build_stack_plan((64, 64), LAYERS, 2, 2, hw=cluster), cluster),
+        (build_stack_plan((64, 64), LAYERS, 2, 2, crossover=1), None),
+    ]:
+        man = json.loads(json.dumps(plan_manifest(plan, cl)))
+        assert plan_from_manifest(man) == plan
+        if cl is not None:
+            assert cluster_from_manifest(man["cluster"]).grid == cl.grid
+        else:
+            assert man["cluster"] is None
+
+
+# ---------------------------------------------------------------------------
+# replan_stack
+# ---------------------------------------------------------------------------
+
+
+def test_replan_stack_rebalances_for_survivors():
+    cluster = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    plan = build_stack_plan((64, 64), LAYERS, 2, 2, hw=cluster)
+    assert not plan.is_uniform
+    surv = drop_device(cluster, "jetson")
+    new = replan_stack(plan, surv)
+    assert (new.n, new.m) == (1, 3)
+    assert new.layers == plan.layers and new.input_hw == plan.input_hw
+    # all-Pi survivors balance to (near-)even tile columns
+    sizes = np.diff(new.partition.col_bounds)
+    assert max(sizes) - min(sizes) <= 2
+
+
+def test_replan_stack_needs_grid_for_profile_hw():
+    plan = build_stack_plan((64, 64), LAYERS, 2, 2)
+    with pytest.raises(ValueError, match="needs n, m"):
+        replan_stack(plan, "pi3-core")
+    new = replan_stack(plan, "pi3-core", 1, 2)
+    assert (new.n, new.m) == (1, 2)
+
+
+def test_replan_stack_degrades_infeasible_grouping():
+    """Auto grouping under a heavily skewed partition: the DP (or the
+    fallback ladder) must yield a feasible plan instead of raising."""
+    cluster = parse_cluster_spec("pi3x3+jetson", 2, 2)
+    plan = build_stack_plan((96, 96), LAYERS, 2, 2, hw=cluster)
+    new = replan_stack(plan, cluster, groups="auto", crossover="auto")
+    # the fused 2-layer group (halo 3) cannot fit the 2-px Pi tiles; the
+    # feasible outcome keeps per-layer groups
+    assert all(g.end == g.start for g in new.groups if g.mode == "spatial")
+
+
+# ---------------------------------------------------------------------------
+# driver replan path (toy train steps, single device)
+# ---------------------------------------------------------------------------
+
+
+def _toy_state():
+    return {"w": jnp.zeros((2, 2)), "step": jnp.int32(0)}
+
+
+def test_driver_replans_on_cluster_change(tmp_path):
+    """ClusterChange from the injector routes to replan(); the live state
+    carries over (same step, no restore) and the swapped step function
+    takes over - the stream replays nothing."""
+    log = []
+
+    def make_step(tag):
+        def step(state, batch):
+            log.append((tag, int(state["step"])))
+            return (
+                {"w": state["w"] + batch["x"].mean(), "step": state["step"] + 1},
+                {"loss": jnp.sum(state["w"])},
+            )
+        return step
+
+    def replan(ev):
+        assert ev.kind == "drop" and ev.device == "jetson"
+        return make_step("after"), {"replanned": True}
+
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=2, async_ckpt=False)
+    rep = run_training(
+        init_state=lambda k: _toy_state(),
+        train_step=make_step("before"),
+        make_batch=lambda s: {"x": jnp.full((2,), 1.0)},
+        steps=6, cfg=cfg,
+        faults=FaultInjector("drop:jetson@3"),
+        replan=replan,
+    )
+    assert rep.replans == 1 and rep.restarts == 0 and rep.steps_done == 6
+    assert log == [("before", 0), ("before", 1), ("before", 2),
+                   ("after", 3), ("after", 4), ("after", 5)]
+    # checkpoints after the replan carry the new plan manifest
+    from repro.ckpt.manager import CheckpointManager
+
+    assert CheckpointManager(str(tmp_path)).plan_of() == {"replanned": True}
+
+
+def test_driver_cluster_change_without_replan_is_fatal(tmp_path):
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), async_ckpt=False)
+    with pytest.raises(ClusterChange):
+        run_training(
+            init_state=lambda k: _toy_state(),
+            train_step=lambda s, b: (s, {"loss": jnp.float32(0)}),
+            make_batch=lambda s: {},
+            steps=4, cfg=cfg,
+            faults=FaultInjector("drop:jetson@1"),
+        )
+
+
+def test_driver_ckpt_crash_fault_absorbed(tmp_path):
+    """'ckpt-crash@k' arms a one-shot writer crash on the bound manager;
+    the save retries and the run completes with the checkpoint committed."""
+    def step(state, batch):
+        return (
+            {"w": state["w"], "step": state["step"] + 1},
+            {"loss": jnp.float32(0)},
+        )
+
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=2, async_ckpt=False,
+                       io_backoff=0.0)
+    rep = run_training(
+        init_state=lambda k: _toy_state(), train_step=step,
+        make_batch=lambda s: {}, steps=4, cfg=cfg,
+        faults=FaultInjector("ckpt-crash@1"),
+    )
+    assert rep.steps_done == 4 and rep.restarts == 0
+    from repro.ckpt.manager import CheckpointManager
+
+    assert CheckpointManager(str(tmp_path)).latest_step() == 3
+
+
+def test_driver_slow_fault_counts_straggler(tmp_path):
+    slept = []
+    inj = FaultInjector("slow:9@8", sleep=slept.append)
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=100, async_ckpt=False)
+    rep = run_training(
+        init_state=lambda k: _toy_state(),
+        train_step=lambda s, b: (
+            {"w": s["w"], "step": s["step"] + 1}, {"loss": jnp.float32(0)}),
+        make_batch=lambda s: {}, steps=10, cfg=cfg, faults=inj,
+    )
+    assert slept == [9.0]
+    assert rep.steps_done == 10
+
+
+def test_driver_fail_fault_restarts(tmp_path):
+    def step(state, batch):
+        return (
+            {"w": state["w"] + batch["x"].mean(), "step": state["step"] + 1},
+            {"loss": jnp.sum(state["w"])},
+        )
+
+    cfg = DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=2, async_ckpt=False)
+    rep = run_training(
+        init_state=lambda k: _toy_state(), train_step=step,
+        make_batch=lambda s: {"x": jnp.full((2,), float(s))},
+        steps=6, cfg=cfg, faults=FaultInjector("fail@4"),
+    )
+    assert rep.restarts == 1 and rep.steps_done >= 6
+    from repro.ckpt.manager import CheckpointManager
+
+    out = CheckpointManager(str(tmp_path)).restore(
+        jax.eval_shape(lambda: _toy_state()))
+    assert float(out["w"][0, 0]) == pytest.approx(sum(range(6)))
+
+
+# ---------------------------------------------------------------------------
+# trainer globalize/validate helpers
+# ---------------------------------------------------------------------------
+
+
+def test_globalize_state_and_check_match():
+    from repro.train.trainer import TrainState, check_state_matches, globalize_state
+
+    st = TrainState({"w": jnp.ones((2, 2))}, {"m": jnp.zeros((2, 2))},
+                    jnp.int32(5), None)
+    host = globalize_state(st)
+    assert isinstance(host.params["w"], np.ndarray)
+    assert int(host.step) == 5
+    check_state_matches(host, st)            # identical structure passes
+
+    bad_shape = TrainState({"w": jnp.ones((3, 3))}, {"m": jnp.zeros((2, 2))},
+                           jnp.int32(5), None)
+    with pytest.raises(ValueError, match="shape"):
+        check_state_matches(host, bad_shape)
+    bad_tree = TrainState({"v": jnp.ones((2, 2))}, {"m": jnp.zeros((2, 2))},
+                          jnp.int32(5), None)
+    with pytest.raises(ValueError):
+        check_state_matches(host, bad_tree)

@@ -15,6 +15,11 @@ non-zero on failure:
                       split executor == untiled reference (xla + pallas),
                       ppermute count 4 -> 2 per group input, no-interior
                       fallback
+  check_elastic.py  - elastic fault tolerance: hetero train -> drop device
+                      -> replan -> checkpoint -> resume on a different
+                      partition == untiled reference; crash-during-save
+                      atomicity; corrupted-leaf fallback; cross-plan
+                      restore sweep
 """
 import os
 import subprocess
@@ -64,3 +69,8 @@ def test_unified_pipeline_exact():
 def test_overlap_schedule_exact():
     out = _run("check_overlap.py")
     assert "OVERLAP CHECK OK" in out
+
+
+def test_elastic_fault_tolerance_exact():
+    out = _run("check_elastic.py")
+    assert "ELASTIC CHECK OK" in out
