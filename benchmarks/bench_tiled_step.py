@@ -26,6 +26,14 @@ alongside - so the trajectory tracks both the hybrid executor's measured
 overhead and the planner's regime choice per commit.  The bench-smoke CI
 job asserts the hybrid rows are present in BENCH_tiled.json.
 
+Pipeline-sweep rows (PR 8): the same filter-dominated stack trained by an
+all-spatial plan and by a 2-stage pipeline plan (DESIGN.md §11) on a real
+1x4 mesh, exactness-checked against the untiled reference, with a
+first-class ``bubble`` column (modeled (S-1)/(S-1+M), cross-checked
+against the executor's realised tick-schedule census) and the per-device
+peak bytes showing the stage-local-filter memory win - both enforced by
+``benchmarks/run.py --strict`` and the CI bench-smoke job.
+
 ``run(quick=True)`` (CI smoke) keeps the exactness checks but trims the
 timing loop.  Rows feed the persisted BENCH_tiled.json trajectory written
 by benchmarks/run.py.
@@ -116,6 +124,7 @@ def run(quick: bool = False) -> list[dict]:
             )
     rows.extend(_mode_sweep_rows(iters, params, x, t, lr, gr, t_ref))
     rows.extend(_hetero_sweep_rows(iters))
+    rows.extend(_pipeline_sweep_rows(iters))
     rows.extend(_bwd_kernel_rows(iters))
     return rows
 
@@ -243,6 +252,86 @@ def _mode_sweep_rows(iters, params, x, t, lr, gr, t_ref) -> list[dict]:
     return rows
 
 
+def _pipeline_sweep_rows(iters: int) -> list[dict]:
+    """Pipeline-vs-spatial sweep (DESIGN.md §11) on a real 1x4 mesh: the
+    same filter-dominated stack trained by an all-spatial plan and by a
+    2-stage pipeline plan (deferred-grad step, M=2 microbatches), both
+    exactness-checked against the untiled reference.  Every row carries a
+    first-class ``bubble`` column - 0.0 for the spatial row, the modeled
+    fill/drain fraction (S-1)/(S-1+M) for the pipeline row, which the
+    executor's realised tick-schedule census must match identically
+    (``census_bubble``) - asserted present by ``benchmarks/run.py
+    --strict`` and the CI bench-smoke job, alongside the per-device peak
+    bytes showing the stage-local-filter memory win.  Skipped (empty)
+    when fewer than 4 devices are visible."""
+    import jax as _jax
+
+    if len(_jax.devices()) < 4:
+        return []
+    from repro.core.fusion import (
+        make_deferred_grad_step,
+        pipeline_schedule_census,
+        reference_loss as _ref_loss,
+    )
+    from repro.core.grouping import bubble_fraction, peak_device_memory
+
+    layers = [
+        LayerDef(3, 1, 3, 64, act="leaky"),
+        *[LayerDef(1, 1, 64, 64, act="leaky") for _ in range(5)],
+    ]
+    hw_in = (8, 8)
+    mesh = make_tile_mesh(1, 4)
+    microbatches, b_mu = 2, 4
+    params = init_stack_params(jax.random.PRNGKey(0), layers)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (microbatches, b_mu, *hw_in, 3))
+    plan0 = build_stack_plan(hw_in, layers, 1, 1)
+    ho, wo = plan0.out_hw()
+    ts = jax.random.normal(
+        jax.random.PRNGKey(2),
+        (microbatches, b_mu, ho, wo, layers[-1].out_channels),
+    )
+    ref = jax.jit(jax.value_and_grad(lambda p: _ref_loss(
+        p, xs.reshape((-1,) + xs.shape[2:]), ts.reshape((-1,) + ts.shape[2:]),
+        plan0, l2_loss_local)))
+    lr, gr = ref(params)
+    lr = float(lr)
+
+    rows = []
+    for kind, pipe in (("spatial", None), ("pipeline", 2)):
+        plan = build_stack_plan(hw_in, layers, 1, 4, "auto", pipeline=pipe,
+                                batch=microbatches * b_mu)
+        step = jax.jit(make_deferred_grad_step(plan, mesh, l2_loss_local,
+                                               microbatches=microbatches))
+        loss, grads = step(params, xs, ts)
+        lerr = abs(float(loss) - lr)
+        gerr = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(gr))
+        )
+        t_step = _time(lambda: step(params, xs, ts), n=iters)
+        mem = peak_device_memory(hw_in, layers, plan.groups, 1, 4,
+                                 batch=microbatches * b_mu)
+        s_count = len(plan.stages)
+        row = dict(
+            name=f"tiled_step/pipeline/{kind}/fwd_loss_err",
+            value=lerr,
+            backend="xla",
+            schedule="sync",
+            mode=kind,
+            microbatches=microbatches,
+            stages=[list(s) for s in plan.stages],
+            tiled_us=round(t_step * 1e6, 1),
+            grad_maxerr=gerr,
+            peak_bytes_1x4=int(mem["total"]),
+            bubble=bubble_fraction(s_count, microbatches) if s_count else 0.0,
+        )
+        if s_count:
+            row["census_bubble"] = pipeline_schedule_census(
+                s_count, microbatches)["bubble"]
+        rows.append(row)
+    return rows
+
+
 def _bwd_kernel_rows(iters: int) -> list[dict]:
     """Pallas backward kernels on a representative stack conv (64x64 tile,
     16->32 channels, K=3): dgrad/wgrad wall-clock (interpret mode off TPU -
@@ -320,8 +409,37 @@ def check(rows) -> list[str]:
                 )
     else:
         out.append("hetero sweep skipped (<4 devices)")
+    pipe = {r["mode"]: r for r in rows if "/pipeline/" in r["name"]}
+    if pipe:
+        out.append(
+            "pipeline sweep rows (spatial + pipeline plan) present: "
+            f"{'OK' if {'spatial', 'pipeline'} <= set(pipe) else 'OFF'}"
+        )
+        out.append(
+            "pipeline rows carry first-class bubble column: "
+            f"{'OK' if all('bubble' in r for r in pipe.values()) else 'OFF'}"
+        )
+        if {"spatial", "pipeline"} <= set(pipe):
+            s, p = pipe["spatial"], pipe["pipeline"]
+            out.append(
+                "[pipeline] modeled bubble == realised schedule census: "
+                f"{'OK' if p['bubble'] == p.get('census_bubble') else 'OFF'} "
+                f"({p['bubble']:.4f}, S={len(p['stages'])} M={p['microbatches']})"
+            )
+            out.append(
+                "[pipeline] stage-local filters cut per-device peak bytes: "
+                f"{'OK' if p['peak_bytes_1x4'] < s['peak_bytes_1x4'] else 'OFF'} "
+                f"({p['peak_bytes_1x4']} vs {s['peak_bytes_1x4']})"
+            )
+            for kind, r in pipe.items():
+                out.append(
+                    f"[pipeline/{kind}] 1x4 loss+grads == reference: "
+                    f"{'OK' if r['value'] < 1e-4 and r['grad_maxerr'] < 1e-4 else 'OFF'}"
+                )
+    else:
+        out.append("pipeline sweep skipped (<4 devices)")
     for r in rows:
-        if "/hetero/" in r["name"]:
+        if "/hetero/" in r["name"] or "/pipeline/" in r["name"]:
             continue
         if "/mode/" in r["name"]:
             tag = f"mode/{r['mode']}"

@@ -83,7 +83,9 @@ def validate_trajectory(path: str) -> list[str]:
     every entry's hetero-sweep rows must carry the first-class ``overhead``
     column (measured step time / the uniform partition's) - the headline
     number the shape-specialized ragged executor (DESIGN.md §9) is judged
-    by, so it can never silently drop out of the history."""
+    by - and every pipeline-sweep row the first-class ``bubble`` column
+    (the fill/drain idle fraction the §11 stage-assignment cost term is
+    judged by), so neither can silently drop out of the history."""
     if not os.path.exists(path):
         return []
     try:
@@ -102,6 +104,16 @@ def validate_trajectory(path: str) -> list[str]:
             problems.append(
                 f"entry {entry.get('sha', '?')[:12]} hetero rows lack "
                 f"'overhead': {', '.join(missing)}"
+            )
+        no_bubble = [
+            r.get("name", "?")
+            for r in entry.get("rows", [])
+            if "/pipeline/" in r.get("name", "") and "bubble" not in r
+        ]
+        if no_bubble:
+            problems.append(
+                f"entry {entry.get('sha', '?')[:12]} pipeline rows lack "
+                f"'bubble': {', '.join(no_bubble)}"
             )
     return problems
 

@@ -1,0 +1,214 @@
+"""Pipeline-parallelism acceptance on 4 fake devices (subprocess target;
+see tests/test_spmd.py / DESIGN.md §11).
+
+(a) HEADLINE - the memory lever, end to end: a filter-dominated stack
+    whose replicated-filter floor (charged by EVERY all-spatial/hybrid
+    candidate, any grouping, any crossover) exceeds the mem_limit, so the
+    planner raises for ``pipeline=None`` - while ``pipeline="auto"``
+    returns a staged plan under the limit that the 1x4 mesh then TRAINS:
+    the deferred-grad step's loss and every weight gradient match the
+    untiled reference to <= 1e-5, for the xla AND pallas conv backends.
+(b) hybrid composition - a spatial prefix (halo-exchange executor) feeding
+    a pipeline tail through the crossover-style entry reshard on a 2x2
+    mesh (row-aligned stages, P % m == 0): same <= 1e-5 exactness.
+(c) bubble - the executor's realised fill/drain schedule (occupancy census
+    over the tick scan's (stage, tick) arithmetic) matches the cost
+    model's (S-1)/(S-1+M) identically, for every (S, M) exercised here.
+(d) execution-time validation - batch_axis on a pipeline plan, a
+    microbatch not divisible by the stage's device count, and a wrong
+    leading microbatch dim all raise actionable errors before tracing.
+(e) trainer integration - the full trainer tail (clip/schedule/optimizer)
+    over a pipeline plan drives the loss down.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.core.backend import conv_backend_names
+from repro.core.fusion import (
+    build_stack_plan,
+    make_deferred_grad_step,
+    make_tiled_loss,
+    pipeline_schedule_census,
+    reference_loss,
+)
+from repro.core.grouping import bubble_fraction, peak_device_memory
+from repro.core.spatial import LayerDef, init_stack_params
+from repro.launch.mesh import make_tile_mesh
+from repro.models.yolo import l2_loss_local, make_yolo_tiled_arch
+from repro.train.trainer import make_train_step
+
+TOL = 1e-5
+
+# filter-dominated deep stack: 1x1 convs at 128 channels on a 4x4 map make
+# the 2x full-stack filter copy the binding memory term (see
+# tests/test_pipeline_mode.py for the planner-level assertions)
+WIDE = [
+    LayerDef(3, 1, 3, 128, act="leaky"),
+    *[LayerDef(1, 1, 128, 128, act="leaky") for _ in range(7)],
+]
+WIDE_HW = (4, 4)
+FILTER_FLOOR = 2.0 * sum(
+    l.kernel * l.kernel * l.in_channels * l.out_channels * 4 for l in WIDE
+)
+MEM_LIMIT = 0.75 * FILTER_FLOOR
+
+
+def check_step_exact(plan, mesh, microbatches, batch_mu, seed=0):
+    """Deferred-grad pipeline step vs untiled reference on the flat batch."""
+    params = init_stack_params(jax.random.PRNGKey(seed), plan.layers)
+    kx, kt = jax.random.split(jax.random.PRNGKey(seed + 1))
+    h, w = plan.input_hw
+    xs = jax.random.normal(kx, (microbatches, batch_mu, h, w, plan.layers[0].in_channels))
+    ho, wo = plan.map_hw[-1]
+    ts = jax.random.normal(
+        kt, (microbatches, batch_mu, ho, wo, plan.layers[-1].out_channels)
+    )
+    step = jax.jit(make_deferred_grad_step(plan, mesh, l2_loss_local,
+                                           microbatches=microbatches))
+    loss, grads = step(params, xs, ts)
+
+    def ref(p):
+        return reference_loss(
+            p,
+            xs.reshape((-1,) + xs.shape[2:]),
+            ts.reshape((-1,) + ts.shape[2:]),
+            plan,
+            l2_loss_local,
+        )
+
+    rl, rg = jax.value_and_grad(ref)(params)
+    lerr = abs(float(loss) - float(rl))
+    gerr = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(rg))
+    )
+    assert lerr < TOL, f"loss err {lerr} (tiled {float(loss)} vs ref {float(rl)})"
+    assert gerr < TOL, f"grad err {gerr}"
+    return lerr, gerr
+
+
+def check_bubble(plan, microbatches):
+    s_count = len(plan.stages)
+    cen = pipeline_schedule_census(s_count, microbatches)
+    model = bubble_fraction(s_count, microbatches)
+    assert cen["bubble"] == model, (cen, model)
+    assert cen["busy_slots"] == s_count * microbatches
+    assert cen["idle_slots"] == s_count * (s_count - 1)
+    print(f"  bubble S={s_count} M={microbatches}: census {cen['bubble']:.4f}"
+          f" == model {model:.4f}")
+
+
+def main():
+    assert len(jax.devices()) >= 4, "need 4 fake devices"
+
+    # ---- (a) headline: the memory lever, both backends -------------------
+    try:
+        build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", crossover="auto",
+                         batch=4, mem_limit=MEM_LIMIT)
+        raise AssertionError("all-spatial/hybrid plan should not fit mem_limit")
+    except ValueError as e:
+        assert "no grouping/crossover/pipeline" in str(e), e
+        print(f"[a] every non-pipeline candidate infeasible under "
+              f"{MEM_LIMIT / 1e3:.0f}kB: OK ({e})")
+
+    mesh14 = make_tile_mesh(1, 4)
+    for backend in conv_backend_names():
+        plan = build_stack_plan(
+            WIDE_HW, WIDE, 1, 4, "auto", crossover="auto", pipeline="auto",
+            batch=4, mem_limit=MEM_LIMIT, backend=backend,
+        )
+        assert plan.stages, plan.groups
+        mem = peak_device_memory(WIDE_HW, WIDE, plan.groups, 1, 4, batch=4)
+        assert mem["total"] <= MEM_LIMIT
+        assert mem["filters"] < FILTER_FLOOR
+        M = 4
+        per = (plan.n * plan.m) // len(plan.stages)
+        lerr, gerr = check_step_exact(plan, mesh14, M, batch_mu=2 * per)
+        check_bubble(plan, M)
+        print(f"[a] {backend}: stages={plan.stages} "
+              f"peak {mem['total'] / 1e3:.0f}kB <= {MEM_LIMIT / 1e3:.0f}kB, "
+              f"loss err {lerr:.2e} grad err {gerr:.2e}: OK")
+
+    # ---- (b) hybrid spatial prefix -> pipeline tail, 2x2 mesh ------------
+    layers6 = [
+        LayerDef(3, 1, 3, 8, act="leaky"),
+        LayerDef(3, 2, 8, 8, act="leaky"),
+        LayerDef(3, 1, 8, 16, act="leaky"),
+        LayerDef(3, 1, 16, 16, act="leaky"),
+        LayerDef(3, 1, 16, 16, act="leaky"),
+        LayerDef(1, 1, 16, 8, act="leaky"),
+    ]
+    mesh22 = make_tile_mesh(2, 2)
+    plan = build_stack_plan((16, 16), layers6, 2, 2, "auto", crossover=2,
+                            pipeline=2, batch=8)
+    assert plan.pipeline_first == 2 and plan.crossover is None
+    assert [g.mode for g in plan.groups[:1]] == ["spatial"]
+    lerr, gerr = check_step_exact(plan, mesh22, 2, batch_mu=4, seed=7)
+    check_bubble(plan, 2)
+    print(f"[b] hybrid 2x2 spatial[0:2)->pipeline{plan.stages}: "
+          f"loss err {lerr:.2e} grad err {gerr:.2e}: OK")
+
+    # ---- (c) bubble census across the (S, M) grid ------------------------
+    for s_count in (2, 3, 4):
+        for m_count in (1, 2, 8):
+            assert pipeline_schedule_census(s_count, m_count)["bubble"] == \
+                bubble_fraction(s_count, m_count)
+    print("[c] census == (S-1)/(S-1+M) over the (S, M) grid: OK")
+
+    # ---- (d) execution-time validation -----------------------------------
+    plan = build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", pipeline=2, batch=4)
+    try:
+        make_tiled_loss(plan, mesh14, l2_loss_local, batch_axis="b")
+        raise AssertionError("batch_axis on a pipeline plan must raise")
+    except ValueError as e:
+        assert "batch_axis" in str(e), e
+        print(f"[d] batch_axis rejected: OK ({e})")
+    step = make_deferred_grad_step(plan, mesh14, l2_loss_local, microbatches=2)
+    x_bad = jnp.zeros((2, 3, *WIDE_HW, 3))
+    t_bad = jnp.zeros((2, 3, *plan.map_hw[-1], WIDE[-1].out_channels))
+    try:
+        step(init_stack_params(jax.random.PRNGKey(0), WIDE), x_bad, t_bad)
+        raise AssertionError("non-divisible microbatch must raise")
+    except ValueError as e:
+        assert "divisible" in str(e), e
+        print(f"[d] non-divisible microbatch rejected: OK ({e})")
+    x_wrong = jnp.zeros((3, 4, *WIDE_HW, 3))
+    t_wrong = jnp.zeros((3, 4, *plan.map_hw[-1], WIDE[-1].out_channels))
+    try:
+        step(init_stack_params(jax.random.PRNGKey(0), WIDE), x_wrong, t_wrong)
+        raise AssertionError("wrong microbatch count must raise")
+    except ValueError as e:
+        print(f"[d] wrong leading microbatch dim rejected: OK ({e})")
+
+    # ---- (e) trainer integration -----------------------------------------
+    arch = make_yolo_tiled_arch(
+        (32, 32), depth=6, n=1, m=4, groups="auto", pipeline=2, batch=8,
+        batch_norm=False, microbatches=2,
+    )
+    assert arch.plan.stages
+    tcfg = TrainConfig(lr=1e-2, optimizer="sgd", warmup=2, steps=20)
+    pcfg = ParallelConfig(grad_accum=2)
+    init_state, train_step = make_train_step(arch, pcfg, tcfg)
+    state = init_state(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3))
+    t = 0.05 * jax.random.normal(jax.random.PRNGKey(2), arch.target_shape(8))
+    jstep = jax.jit(train_step)
+    losses = []
+    for _ in range(4):
+        state, metrics = jstep(state, {"x": x, "t": t})
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    print(f"[e] trainer tail over pipeline plan: loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}: OK")
+
+    print("PIPELINE-PARALLEL CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,7 @@ from repro.core.tiling import (
     dedup_axis_shapes,
     derive_axis_bounds,
     no_grouping,
+    pipeline_first_of,
     validate_profile,
 )
 from repro.core.halo import (
@@ -66,9 +67,12 @@ from repro.core.grouping import (
     ClusterSpec,
     HardwareProfile,
     PI3_PROFILE,
+    PIPELINE_MICROBATCHES,
     PROFILES,
     check_crossover_arg,
+    check_pipeline_arg,
     cluster_partition,
+    feasible_stage_counts,
     optimize_grouping,
     parse_cluster_spec,
     profile_cost,
@@ -80,11 +84,19 @@ from repro.core.grouping import (
 class StackPlan:
     """Static geometry for an (n x m)-tiled, grouped conv stack.
 
-    Each group carries a partition ``mode`` ("spatial" | "data"); when a
-    data suffix exists, ``crossover`` records its first layer - the point
-    where the executor reshards the tile grid into batch shards
-    (DESIGN.md §7).  ``shard_hw`` entries at data-mode layer inputs are the
-    *full* map extents (nothing is spatially sharded there).
+    Each group carries a partition ``mode`` ("spatial" | "data" |
+    "pipeline"); when a data suffix exists, ``crossover`` records its first
+    layer - the point where the executor reshards the tile grid into batch
+    shards (DESIGN.md §7).  ``shard_hw`` entries at data-mode layer inputs
+    are the *full* map extents (nothing is spatially sharded there).
+
+    A pipeline tail (DESIGN.md §11) assigns each pipeline-mode group - a
+    *stage* - to its own contiguous flat-device subset: ``stages[s] =
+    (lo, hi)`` is the half-open flat-index range (``r = i*m + j``) stage
+    ``s`` owns.  Stage subsets are equal-sized and row-aligned so the
+    inter-stage activation hand-off is ONE axis-aligned ``ppermute``;
+    microbatches stream through the stages on a fill/drain tick schedule
+    and, like data layers, pipeline layers hold full map extents.
 
     The tile grid is an explicit ``TilePartition`` (DESIGN.md §8):
     ``tile_rows[l]`` / ``tile_cols[l]`` are the per-tile owned extents at
@@ -114,6 +126,7 @@ class StackPlan:
     tile_rows: tuple[tuple[int, ...], ...] = ()  # per layer input: per-tile-row extents
     tile_cols: tuple[tuple[int, ...], ...] = ()
     ragged_exec: str = "spec"                    # non-uniform executor (DESIGN.md §9)
+    stages: tuple[tuple[int, int], ...] = ()     # per pipeline stage: flat device range
 
     @property
     def n_layers(self) -> int:
@@ -123,10 +136,22 @@ class StackPlan:
         return self.map_hw[-1]
 
     @property
+    def pipeline_first(self) -> int | None:
+        """First pipeline-mode layer index (None = no pipeline tail)."""
+        return pipeline_first_of(self.groups)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
     def spatial_last(self) -> int:
-        """Deepest spatially-sharded layer-input index (crossover input, or
-        the stack output for all-spatial plans)."""
-        return self.n_layers if self.crossover is None else self.crossover
+        """Deepest spatially-sharded layer-input index (first non-spatial
+        layer, or the stack output for all-spatial plans)."""
+        if self.crossover is not None:
+            return self.crossover
+        pf = self.pipeline_first
+        return self.n_layers if pf is None else pf
 
     @property
     def is_uniform(self) -> bool:
@@ -257,6 +282,8 @@ def build_stack_plan(
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
     ragged_exec: str = "spec",
+    pipeline: int | str | None = None,
+    microbatches: int = PIPELINE_MICROBATCHES,
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
 
@@ -300,6 +327,16 @@ def build_stack_plan(
     fallback (``ragged_exec="padded"``, DESIGN.md §8); the overlap
     schedule's interior/boundary split applies only to uniform groups
     (ragged groups use the sync exchange).
+
+    pipeline (DESIGN.md §11): ``None`` keeps pipeline tails out of the
+    search; ``"auto"`` lets the grouping DP add pipeline-tail candidates
+    (entry layer x stage count, bubble + transfer cost terms) to the same
+    comparison; an int forces that many stages.  Planner-assigned only -
+    requires ``groups="auto"`` (explicit profiles may carry pipeline-mode
+    groups directly, e.g. from a plan manifest).  ``microbatches`` is the
+    per-batch microbatch count the bubble fraction (S-1)/(S-1+M) is
+    modelled against; the executor's actual M is set at
+    ``make_deferred_grad_step(microbatches=...)`` time.
     """
     get_conv_backend(backend)   # fail fast on unknown backends
     if schedule not in ("sync", "overlap", "auto"):
@@ -313,6 +350,24 @@ def build_stack_plan(
     if block_oh is not None and block_oh < 1:
         raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
     layers = tuple(layers)
+    check_pipeline_arg(pipeline, n, m, len(layers))
+    if pipeline is not None:
+        if schedule == "overlap":
+            raise ValueError(
+                "schedule='overlap' cannot combine with a pipeline tail: the "
+                "interior/boundary split assumes every device runs the same "
+                "halo exchange, but pipeline stages run disjoint layer "
+                "programs; use schedule='sync' (or 'auto', which resolves "
+                "to sync for pipeline plans)"
+            )
+        if groups is None or not isinstance(groups, str):
+            raise ValueError(
+                "pipeline tails are planner-assigned: use groups='auto' "
+                "with pipeline=..., or pass an explicit profile that "
+                "already carries pipeline-mode groups (e.g. from a plan "
+                "manifest) without the pipeline kwarg"
+            )
+        schedule = "sync" if schedule == "auto" else schedule
     hw = _resolve_hw(hw, n, m) if hw is not None else None
     if schedule == "auto":
         schedule = _resolve_auto_schedule(
@@ -333,6 +388,7 @@ def build_stack_plan(
                 hw if isinstance(hw, ClusterSpec) else resolve_hw_profile(hw),
                 batch=batch, schedule=schedule, crossover=crossover,
                 mem_limit=mem_limit, partition=partition,
+                pipeline=pipeline, microbatches=microbatches,
             )
         )
     else:
@@ -347,6 +403,42 @@ def build_stack_plan(
         )
     validate_profile(groups, len(layers))
     cross = crossover_of(groups)
+    pfirst = pipeline_first_of(groups)
+
+    # Pipeline tails: derive the per-stage device subsets (equal contiguous
+    # flat ranges) and check the executor's structural requirements early,
+    # with actionable errors instead of deep shard_map failures.
+    stages: tuple[tuple[int, int], ...] = ()
+    if pfirst is not None:
+        pipe_groups = [g for g in groups if g.mode == "pipeline"]
+        s_count = len(pipe_groups)
+        tail_layers = len(layers) - pfirst
+        if s_count not in feasible_stage_counts(n, m, tail_layers):
+            raise ValueError(
+                f"{s_count} pipeline stages are infeasible on the {n}x{m} "
+                f"grid with a {tail_layers}-layer tail: stage subsets must "
+                "be equal-sized and row-aligned (n==1, m==1, or "
+                "devices-per-stage divisible by m) so the inter-stage "
+                "hand-off is one axis-aligned ppermute; feasible counts: "
+                f"{feasible_stage_counts(n, m, tail_layers) or 'none'}"
+            )
+        for g in pipe_groups:
+            for l in g.layers:
+                if layers[l].batch_norm:
+                    raise ValueError(
+                        f"layer {l} has batch_norm=True inside a pipeline "
+                        "stage: BN needs cross-device psums, which cannot "
+                        "live inside the per-stage lax.switch branches; "
+                        "keep BN layers in the spatial prefix or build the "
+                        "stack with batch_norm=False"
+                    )
+        if schedule == "overlap":
+            raise ValueError(
+                "schedule='overlap' cannot combine with a pipeline tail; "
+                "use schedule='sync'"
+            )
+        per_stage = (n * m) // s_count
+        stages = tuple((s * per_stage, (s + 1) * per_stage) for s in range(s_count))
 
     # Map extents per layer input ([-1] = output).
     map_hw = [tuple(input_hw)]
@@ -355,13 +447,15 @@ def build_stack_plan(
         map_hw.append((l.out_extent(h), l.out_extent(w)))
 
     # Resolve the tile partition over the spatial prefix (through the
-    # crossover input; data-mode layers hold full maps and are exempt).
-    last = len(layers) if cross is None else cross
+    # first non-spatial layer's input; data- and pipeline-mode layers hold
+    # full maps and are exempt).
+    tail_first = cross if cross is not None else pfirst
+    last = len(layers) if tail_first is None else tail_first
     strides = [l.stride for l in layers[:last]]
     hs = [map_hw[l][0] for l in range(last + 1)]
     ws = [map_hw[l][1] for l in range(last + 1)]
     if partition is None and isinstance(hw, ClusterSpec):
-        partition = cluster_partition(input_hw, layers, hw, cross)
+        partition = cluster_partition(input_hw, layers, hw, tail_first)
     try:
         row_bounds = derive_axis_bounds(
             partition.row_bounds if partition else None, strides, hs, n
@@ -386,13 +480,24 @@ def build_stack_plan(
         tile_cols.append((w,) * m)
         shard_hw.append((h, w))
 
-    # Group halos + per-layer remaining halos (zero for data-mode groups:
-    # full maps have no neighbours).
+    if pfirst is not None and any(
+        len(set(tile_rows[l])) > 1 or len(set(tile_cols[l])) > 1
+        for l in range(last + 1)
+    ):
+        raise ValueError(
+            "pipeline plans require a uniform tile partition over the "
+            "spatial prefix (the stage-entry gather slices equal "
+            "microbatch blocks); rebalance the partition or drop the "
+            "pipeline tail"
+        )
+
+    # Group halos + per-layer remaining halos (zero for data- and
+    # pipeline-mode groups: full maps have no neighbours).
     group_halos: list[tuple[int, int, int, int]] = []
     rem_halos: list[tuple[int, int, int, int]] = [None] * len(layers)  # type: ignore
     group_of_layer: list[int] = [0] * len(layers)
     for gi, g in enumerate(groups):
-        if g.mode == "data":
+        if g.mode != "spatial":
             group_halos.append((0, 0, 0, 0))
             for l in g.layers:
                 group_of_layer[l] = gi
@@ -446,6 +551,7 @@ def build_stack_plan(
         tile_rows=tuple(tile_rows),
         tile_cols=tuple(tile_cols),
         ragged_exec=ragged_exec,
+        stages=stages,
     )
 
 
@@ -480,6 +586,9 @@ def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
         "layers": [dataclasses.asdict(l) for l in plan.layers],
         "groups": [[g.start, g.end, g.mode] for g in plan.groups],
         "crossover": plan.crossover,
+        # informational: stage device ranges are re-derived from the groups
+        # by build_stack_plan, so plan_from_manifest never reads this key
+        "stages": [list(s) for s in plan.stages],
         "partition": None
         if plan.partition is None
         else {
@@ -531,6 +640,7 @@ def replan_stack(
     crossover: int | str | None = "auto",
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
+    pipeline: int | str | None = None,
 ) -> StackPlan:
     """Rebuild ``plan`` against a changed cluster (elastic replan,
     DESIGN.md §10): same layer stack, same backend/schedule/executor knobs,
@@ -549,14 +659,24 @@ def replan_stack(
     infeasible under the rebalanced partition (a skewed survivor mesh can
     shrink the smallest tile below a fused group's halo), fall back to
     ungrouped layers, then to ungrouped all-spatial - a valid plan always
-    comes back for any cluster the partitioner can balance."""
+    comes back for any cluster the partitioner can balance.
+
+    Pipeline plans degrade the same way: when the old plan carried a
+    pipeline tail (or ``pipeline`` is passed explicitly), the first rung
+    replans with ``pipeline="auto"`` so surviving devices get stages
+    re-packed for *them* (the stage-count feasibility set shrinks with the
+    grid); if no stage count fits, the same optimizer call already
+    competes spatial/data candidates, and the later rungs drop the
+    pipeline search entirely."""
     if isinstance(hw, ClusterSpec):
         n = hw.n if n is None else n
         m = hw.m if m is None else m
     if n is None or m is None:
         raise ValueError("replan_stack needs n, m when hw is not a ClusterSpec")
+    if pipeline is None and plan.stages:
+        pipeline = "auto"
 
-    def attempt(g, x):
+    def attempt(g, x, p):
         return build_stack_plan(
             plan.input_hw,
             plan.layers,
@@ -572,24 +692,28 @@ def replan_stack(
             mem_limit=mem_limit,
             partition=partition,
             ragged_exec=plan.ragged_exec,
+            pipeline=p if g == "auto" else None,
         )
 
-    ladder = [(groups, crossover)]
+    ladder = [(groups, crossover, pipeline)]
+    if pipeline is not None:
+        ladder.append((groups, crossover, None))
     if groups is not None:
-        ladder.append((None, crossover))
+        ladder.append((None, crossover, None))
     if crossover is not None:
-        ladder.append((None, None))
+        ladder.append((None, None, None))
     last_err: Exception | None = None
-    for i, (g, x) in enumerate(ladder):
+    for i, (g, x, p) in enumerate(ladder):
         try:
-            return attempt(g, x)
+            return attempt(g, x, p)
         except ValueError as e:
             last_err = e
             if i + 1 < len(ladder):
                 _log.warning(
-                    "replan with groups=%r crossover=%r infeasible (%s); "
-                    "degrading to groups=%r crossover=%r",
-                    g, x, e, *ladder[i + 1],
+                    "replan with groups=%r crossover=%r pipeline=%r "
+                    "infeasible (%s); degrading to groups=%r crossover=%r "
+                    "pipeline=%r",
+                    g, x, p, e, *ladder[i + 1],
                 )
     raise last_err
 
@@ -1034,6 +1158,228 @@ def _ragged_count_scale(plan: StackPlan, row_axis: str, col_axis: str):
     return (oh * ow) / float(max(rows) * max(cols))
 
 
+# ---------------------------------------------------------------------------
+# Pipeline-tail executor (DESIGN.md §11): microbatch streaming over stage
+# device subsets.  Everything here runs INSIDE shard_map.
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_geometry(plan: StackPlan) -> dict:
+    """Static geometry of a pipeline tail: the stage groups, devices per
+    stage, the entry layer, and the padded *container* extents - one
+    uniform (H, W, C) that covers every stage-boundary activation, so the
+    inter-stage buffer and the per-stage ``lax.switch`` branches all share
+    a single aval (each branch slices its TRUE extents statically)."""
+    pg = [g for g in plan.groups if g.mode == "pipeline"]
+    dims = []
+    for g in pg:
+        dims.append((*plan.map_hw[g.start], plan.layers[g.start].in_channels))
+        dims.append((*plan.map_hw[g.end + 1], plan.layers[g.end].out_channels))
+    return {
+        "groups": pg,
+        "n_stages": len(pg),
+        "per_stage": (plan.n * plan.m) // len(pg),
+        "pfirst": pg[0].start,
+        "container": tuple(max(d[k] for d in dims) for k in range(3)),
+    }
+
+
+def _stage_shift(plan: StackPlan) -> tuple[str, int, int]:
+    """How "flat index + devices-per-stage" decomposes into ONE axis-aligned
+    shift on the (n x m) mesh: ("row"|"col", shift, axis_len).  Exists by
+    the row-alignment feasibility rule (``feasible_stage_counts``): stage
+    subsets are whole mesh rows (or the mesh is a single row/column)."""
+    per = (plan.n * plan.m) // len(plan.stages)
+    if plan.n == 1:
+        return "col", per, plan.m
+    if plan.m == 1:
+        return "row", per, plan.n
+    return "row", per // plan.m, plan.n
+
+
+def pipeline_schedule_census(n_stages: int, microbatches: int) -> dict:
+    """Occupancy census of the fill/drain schedule, from the same
+    ``k = t - s`` arithmetic the executor's loss mask implements: stage
+    ``s`` holds real (unmasked) work at tick ``t`` iff ``0 <= t - s < M``.
+    ``bubble`` = idle slot fraction - the *measured* counterpart of the
+    cost model's ``bubble_fraction(S, M) = (S-1)/(S-1+M)`` (they agree
+    identically: idle = S*(S-1) slots out of S*(M+S-1))."""
+    s_n, mb = n_stages, microbatches
+    if s_n < 1 or mb < 1:
+        raise ValueError(f"need n_stages >= 1 and microbatches >= 1; got {n_stages}, {microbatches}")
+    ticks = mb + s_n - 1
+    busy = sum(1 for t in range(ticks) for s in range(s_n) if 0 <= t - s < mb)
+    idle = ticks * s_n - busy
+    return {
+        "stages": s_n,
+        "microbatches": mb,
+        "ticks": ticks,
+        "busy_slots": busy,
+        "idle_slots": idle,
+        "bubble": idle / (ticks * s_n),
+    }
+
+
+def _apply_spatial_prefix(params, x, plan: StackPlan, *, row_axis, col_axis, bg):
+    """The (possibly empty) spatial prefix of a pipeline plan - uniform
+    sync executor only (pipeline plans forbid overlap and require uniform
+    partitions, checked at build time)."""
+    for gi, g in enumerate(plan.groups):
+        if g.mode != "spatial":
+            break
+        x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
+        for l in g.layers:
+            x = apply_layer_local(
+                x,
+                params[l],
+                plan.layers[l],
+                out_halo=plan.rem_halos[l],
+                shard_out_hw=plan.shard_hw[l + 1],
+                map_out_hw=plan.map_hw[l + 1],
+                row_axis=row_axis,
+                col_axis=col_axis,
+                batch_global=bg,
+                mask_offmap=(l != g.end),
+                backend=plan.backend,
+                batch_axis=None,
+                block_oh=plan.block_oh,
+            )
+    return x
+
+
+def _check_pipeline_batch(plan: StackPlan, b_mu: int):
+    per = (plan.n * plan.m) // len(plan.stages)
+    if b_mu % per:
+        raise ValueError(
+            f"pipeline stage entry needs the per-microbatch batch ({b_mu}) "
+            f"divisible by the devices per stage ({per}); pick "
+            "batch/grad_accum so each microbatch spreads over one stage's "
+            "device subset"
+        )
+
+
+def _make_pipeline_local(
+    plan: StackPlan,
+    loss_local,
+    *,
+    row_axis: str,
+    col_axis: str,
+    batch_global: int | None,
+    microbatches: int,
+):
+    """Shard-local pipeline executor: (params, xs, ts) -> (loss_sum, count).
+
+    ``xs``: (M, b_mu, h/n, w/m, C) spatially-sharded microbatches; ``ts``:
+    (M, b_mu, H', W', C') replicated targets.  Runs ``T = M + S - 1``
+    fill/drain ticks under ONE ``lax.scan`` (DESIGN.md §11).  Per tick:
+
+    1. the whole mesh runs the spatial prefix on microbatch ``min(t, M-1)``
+       (clamped replay past the fill: results are masked downstream);
+    2. the entry gather all-gathers the tile grid into full maps and each
+       device slices its *stage-rank* microbatch block (the pipeline
+       analogue of ``reshard_spatial_to_data``; same AD-derived adjoint);
+    3. stage-0 devices consume the entry, others their shifted buffer, and
+       ONE ``lax.switch`` on the device's stage index runs its stage's
+       layers (collective-free dense programs - BN is forbidden in stages);
+    4. last-stage devices score microbatch ``t - (S-1)`` against its
+       target block, masked to the valid window ``t >= S-1`` (fill/drain
+       garbage and clamped replays get structurally zero loss, hence zero
+       cotangents);
+    5. the stage buffer ppermutes one stage forward (edge devices receive
+       zeros - the no-wraparound shift convention).
+
+    Differentiating this whole function per device and psumming the
+    partials is exact: stage s's device processes microbatch ``t - s`` at
+    tick ``t``, so every (sample, position) reaches a valid last-stage
+    loss slot exactly once, and cross-stage/cross-tile dependencies flow
+    through the transposed ppermutes and gathers."""
+    geom = _pipeline_geometry(plan)
+    pg = geom["groups"]
+    n_st = geom["n_stages"]
+    per_stage = geom["per_stage"]
+    hc, wc, cc = geom["container"]
+    mb = microbatches
+    ticks = mb + n_st - 1
+    h_out, w_out = plan.map_hw[-1]
+    c_out = plan.layers[-1].out_channels
+    axis_kind, shift, axis_len = _stage_shift(plan)
+    shift_axis = row_axis if axis_kind == "row" else col_axis
+    perm = [(k, k + shift) for k in range(axis_len - shift)]
+
+    def _to_container(x):
+        return jnp.pad(
+            x,
+            ((0, 0), (0, hc - x.shape[1]), (0, wc - x.shape[2]), (0, cc - x.shape[3])),
+        )
+
+    def mk_branch(g, bg):
+        hin, win = plan.map_hw[g.start]
+        cin = plan.layers[g.start].in_channels
+
+        def f(params, xc):
+            x = xc[:, :hin, :win, :cin]
+            for l in g.layers:
+                x = apply_layer_data(
+                    x,
+                    params[l],
+                    plan.layers[l],
+                    map_out_hw=plan.map_hw[l + 1],
+                    row_axis=row_axis,
+                    col_axis=col_axis,
+                    batch_global=bg,
+                    backend=plan.backend,
+                    batch_axis=None,
+                    block_oh=plan.block_oh,
+                )
+            return _to_container(x)
+
+        return f
+
+    def local_fn(params, xs, ts):
+        b_mu = xs.shape[1]
+        bg = _global_batch(b_mu, None, batch_global)
+        bp = b_mu // per_stage
+        r = lax.axis_index(row_axis) * plan.m + lax.axis_index(col_axis)
+        stage = r // per_stage
+        rank = r % per_stage
+        branches = [mk_branch(g, bg) for g in pg]
+
+        def tick(carry, t):
+            buf, s_acc, c_acc = carry
+            k0 = jnp.clip(t, 0, mb - 1)
+            x_mu = lax.dynamic_index_in_dim(xs, k0, axis=0, keepdims=False)
+            h = _apply_spatial_prefix(
+                params, x_mu, plan, row_axis=row_axis, col_axis=col_axis, bg=bg
+            )
+            h = lax.all_gather(h, row_axis, axis=1, tiled=True)
+            h = lax.all_gather(h, col_axis, axis=2, tiled=True)
+            entry = lax.dynamic_slice_in_dim(h, rank * bp, bp, axis=0)
+            x_in = jnp.where(jnp.equal(stage, 0), _to_container(entry), buf)
+            out = lax.switch(stage, branches, params, x_in)
+            k_l = jnp.clip(t - (n_st - 1), 0, mb - 1)
+            t_mu = lax.dynamic_index_in_dim(ts, k_l, axis=0, keepdims=False)
+            t_blk = lax.dynamic_slice_in_dim(t_mu, rank * bp, bp, axis=0)
+            y = out[:, :h_out, :w_out, :c_out]
+            s_l, c_l = loss_local(y, t_blk)
+            s_l = jnp.asarray(s_l, jnp.float32)
+            c_l = jnp.asarray(c_l, jnp.float32)
+            valid = jnp.logical_and(jnp.equal(stage, n_st - 1), t >= n_st - 1)
+            s_acc = s_acc + jnp.where(valid, s_l, 0.0)
+            c_acc = c_acc + jnp.where(valid, c_l, 0.0)
+            buf = lax.ppermute(out, shift_axis, perm)
+            return (buf, s_acc, c_acc), None
+
+        buf0 = jnp.zeros((bp, hc, wc, cc), xs.dtype)
+        (_, s_tot, c_tot), _ = lax.scan(
+            tick,
+            (buf0, jnp.float32(0.0), jnp.float32(0.0)),
+            jnp.arange(ticks),
+        )
+        return s_tot, c_tot
+
+    return local_fn
+
+
 def make_tiled_forward(
     plan: StackPlan,
     mesh: Mesh,
@@ -1059,6 +1405,13 @@ def make_tiled_forward(
     plans return the bare shard_map'd function, jaxpr-identical to the
     pre-partition executor.
     """
+    if plan.stages:
+        raise ValueError(
+            "pipeline plans have no single-shot forward layout: outputs "
+            "live on the last stage's devices only, one microbatch per "
+            "tick; use make_tiled_loss / make_deferred_grad_step (or a "
+            "non-pipeline plan for inference)"
+        )
     spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
     aspec = (
         P(batch_axis, None, None, None)
@@ -1157,7 +1510,42 @@ def make_tiled_loss(
     output extents trainable (the data tail is exempt from tile-grid
     divisibility, and so must be its target).  Each (sample, position) is
     still owned by exactly one device, so the psum'd mean is unchanged.
+
+    Pipeline plans (DESIGN.md §11) run the tick executor with M=1 (pure
+    fill/drain - every batch streams through the stages once); the target
+    is bound replicated and each last-stage device scores its stage-rank
+    block, so the psum'd scalar still equals the untiled loss exactly.
     """
+    if plan.stages:
+        if batch_axis is not None:
+            raise ValueError(
+                "pipeline plans stream microbatch blocks over stage ranks; "
+                "batch_axis must be None"
+            )
+        local = _make_pipeline_local(
+            plan, loss_local, row_axis=row_axis, col_axis=col_axis,
+            batch_global=batch_global, microbatches=1,
+        )
+        axes = (row_axis, col_axis)
+
+        def pfn(params, xs, ts):
+            s, c = local(params, xs, ts)
+            return lax.psum(s, axes) / lax.psum(c, axes)
+
+        mapped = shard_map(
+            pfn,
+            mesh=mesh,
+            in_specs=(P(), P(None, None, row_axis, col_axis, None), P()),
+            out_specs=P(),
+            check_rep=False,
+        )
+
+        def loss(params, x, target):
+            _check_pipeline_batch(plan, x.shape[0])
+            return mapped(params, x[None], target[None])
+
+        return loss
+
     spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
     aspec = (
         P(batch_axis, None, None, None)
@@ -1239,7 +1627,57 @@ def make_deferred_grad_step(
     and microbatching, are untouched by the crossover.  The target is bound
     with the data-side layout (batch sharded over the tile axes, full maps)
     like ``make_tiled_loss``.
+
+    Pipeline plans (DESIGN.md §11) reuse ``microbatches`` as the pipeline
+    depth M: instead of a scan over independent microbatch grad steps, ONE
+    fill/drain tick scan streams all M microbatches through the stages and
+    is differentiated as a whole (cotangents flow backward through the
+    transposed inter-stage ppermutes).  The batch-end psum tail - and
+    therefore the int8-EF weight path - is identical to the non-pipeline
+    executor's.
     """
+    if plan.stages:
+        if batch_axis is not None:
+            raise ValueError(
+                "pipeline plans stream microbatch blocks over stage ranks; "
+                "batch_axis must be None"
+            )
+        local = _make_pipeline_local(
+            plan, loss_local, row_axis=row_axis, col_axis=col_axis,
+            batch_global=batch_global, microbatches=microbatches,
+        )
+        pipe_axes = (row_axis, col_axis)
+
+        def pfn(params, xs, ts):
+            (s_tot, c_tot), g = jax.value_and_grad(local, has_aux=True)(
+                params, xs, ts
+            )
+            # The single end-of-batch aggregation, shared with the
+            # non-pipeline path (partial sums -> final grads).
+            cnt_g = lax.psum(c_tot, pipe_axes)
+            grads = jax.tree.map(lambda a: lax.psum(a, pipe_axes) / cnt_g, g)
+            loss = lax.psum(s_tot, pipe_axes) / cnt_g
+            return loss, grads
+
+        pmapped = shard_map(
+            pfn,
+            mesh=mesh,
+            in_specs=(P(), P(None, None, row_axis, col_axis, None), P()),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )
+
+        def pstep(params, xs, ts):
+            if xs.shape[0] != microbatches:
+                raise ValueError(
+                    f"pipeline grad step built for microbatches={microbatches}; "
+                    f"got {xs.shape[0]} microbatches"
+                )
+            _check_pipeline_batch(plan, xs.shape[1])
+            return pmapped(params, xs, ts)
+
+        return pstep
+
     spec_exec = not plan.is_uniform and plan.ragged_exec == "spec"
     aspec = (
         P(None, batch_axis, None, None, None)

@@ -46,10 +46,17 @@ from repro.core.tiling import (
     crossover_of,
     derive_axis_bounds,
     even_bounds_1d,
+    pipeline_first_of,
     pull_bounds_1d,
 )
 
 SCHEDULES = ("sync", "overlap")
+
+#: Microbatch count the pipeline cost terms assume when the caller does not
+#: say (DESIGN.md §11): the bubble fraction (S-1)/(S-1+M) needs M at *plan*
+#: time, while the executor takes the true M (``grad_accum``) at trace time.
+#: Planner callers that know their accumulation depth should pass it.
+PIPELINE_MICROBATCHES = 8
 
 #: MAC-equivalents charged per pad-slot element the shape-specialized
 #: executor repads each layer output with (one read + one write, forward and
@@ -800,6 +807,210 @@ def _reshard_cost(
     )
 
 
+# ---------------------------------------------------------------------------
+# Pipeline stages (DESIGN.md §11): stage-assignment cost terms
+# ---------------------------------------------------------------------------
+
+
+def _tail_start(groups: Sequence[Group]) -> int | None:
+    """First non-spatial layer (data crossover or pipeline entry) - the
+    point past which nothing is spatially sharded.  At most one of the two
+    exists (``validate_profile``)."""
+    c = crossover_of(groups)
+    return pipeline_first_of(groups) if c is None else c
+
+
+def bubble_fraction(stages: int, microbatches: int) -> float:
+    """Idle fraction of a fill/drain pipeline pass: S-1 of the S-1+M ticks
+    each device sits out while the pipe fills and drains (DESIGN.md §11).
+    The executor's tick scan realises exactly this schedule, so the model
+    and the measured idle-slot census agree identically."""
+    if stages < 1 or microbatches < 1:
+        raise ValueError(
+            f"bubble_fraction needs stages >= 1 and microbatches >= 1; "
+            f"got S={stages}, M={microbatches}"
+        )
+    return (stages - 1) / (stages - 1 + microbatches)
+
+
+def feasible_stage_counts(n: int, m: int, tail_layers: int) -> list[int]:
+    """Stage counts S the executor can map onto an n x m mesh: S must split
+    the n*m devices into equal *flat-contiguous* subsets whose boundaries
+    align with mesh rows (so the inter-stage transfer is one axis-aligned
+    ppermute) - i.e. a 1-D mesh, or a stage size that is a whole number of
+    rows - and the tail must have at least one layer per stage."""
+    out = []
+    t = n * m
+    for s in range(2, min(t, tail_layers) + 1):
+        if t % s:
+            continue
+        p = t // s
+        if n == 1 or m == 1 or p % m == 0:
+            out.append(s)
+    return out
+
+
+def check_pipeline_arg(
+    pipeline: int | str | None, n: int, m: int, n_layers: int
+) -> None:
+    """Validate the ``pipeline`` argument form early, with actionable
+    errors - shared by the planner and the optimizer so every entry point
+    (``--pipeline`` included) fails identically and before any executor
+    tracing."""
+    if pipeline is None or pipeline == "auto":
+        return
+    if isinstance(pipeline, bool) or not isinstance(pipeline, int):
+        raise ValueError(
+            f"pipeline must be None, 'auto', or an int stage count; "
+            f"got {pipeline!r}"
+        )
+    if pipeline < 2:
+        raise ValueError(
+            f"pipeline stage count must be >= 2 (got {pipeline}): each stage "
+            "needs its own device subset and a 1-stage pipeline is just the "
+            "spatial/data plan - use pipeline=None (--pipeline none) to "
+            "disable pipelining"
+        )
+    feas = feasible_stage_counts(n, m, n_layers)
+    if pipeline not in feas:
+        raise ValueError(
+            f"pipeline stage count {pipeline} cannot map onto the {n}x{m} "
+            f"mesh ({n_layers} layers): stages must be equal row-aligned "
+            f"flat device ranges; feasible counts here: {feas or 'none'}"
+        )
+
+
+def _dense_macs3(layers: Sequence[LayerDef], ext, s: int, e: int) -> float:
+    """Full-map MACs of layers [s, e] per sample, with the 3x fwd+delta+
+    wgrad pass weighting (1x for pools) - the data/pipeline compute kernel."""
+    macs = 0.0
+    for idx in range(s, e + 1):
+        l = layers[idx]
+        oh, ow = ext[idx + 1]
+        if l.pool:
+            macs += oh * ow * max(l.in_channels, 1) * l.kernel * l.kernel
+        else:
+            macs += 3.0 * oh * ow * l.kernel * l.kernel * l.in_channels * l.out_channels
+    return macs
+
+
+def stage_cost(
+    layers: Sequence[LayerDef],
+    ext,
+    g: Group,
+    *,
+    stage_size: int,
+    hw: HardwareProfile | ClusterSpec,
+    batch: int,
+    first_stage: bool,
+) -> tuple[float, float]:
+    """(compute_s, transfer_s) of one pipeline stage per batch, per device:
+    each of the stage's ``stage_size`` devices computes ``ceil(batch /
+    stage_size)`` whole samples of the stage's dense full-map work, and
+    (except stage 0, whose entry traffic is the plan-level reshard term)
+    receives its samples' input activations from the previous stage - the
+    cotangents travel the same bytes back, hence the 2x."""
+    comp = -(-batch // stage_size) * _dense_macs3(layers, ext, g.start, g.end) / hw.flops
+    xfer = 0.0
+    if not first_stage:
+        h, w = ext[g.start]
+        cin = max(layers[g.start].in_channels, 1)
+        xfer = (
+            -(-batch // stage_size) * 2.0 * h * w * cin * hw.dtype_bytes / hw.link_bw
+        )
+    return comp, xfer
+
+
+def _pipeline_tail_cost(
+    layers: Sequence[LayerDef],
+    ext,
+    pipe_groups: Sequence[Group],
+    n: int,
+    m: int,
+    hw: HardwareProfile | ClusterSpec,
+    batch: int,
+    microbatches: int,
+) -> tuple[float, float, float, float]:
+    """(compute, boundary, sync, bubble) of a pipeline tail per batch.
+
+    Stages run concurrently, so the steady-state cost is the *makespan*
+    (slowest stage bounds every tick) and the fill/drain idle time is the
+    bubble: M microbatches take M + S - 1 ticks, so the slowest stage's
+    per-batch time inflates by (S-1)/M - equivalently, a bubble fraction
+    (S-1)/(S-1+M) of the elapsed pass (``bubble_fraction``).  Decomposed as
+    compute = max stage compute, boundary = max stage transfer, sync = two
+    collective launches per tick (fwd tick ppermute + its adjoint), bubble
+    = (compute + boundary) * (S-1)/M."""
+    s_count = len(pipe_groups)
+    p = (n * m) // s_count
+    comp_max = xfer_max = 0.0
+    for k, g in enumerate(pipe_groups):
+        comp, xfer = stage_cost(
+            layers, ext, g, stage_size=p, hw=hw, batch=batch, first_stage=(k == 0)
+        )
+        comp_max = max(comp_max, comp)
+        xfer_max = max(xfer_max, xfer)
+    ticks = microbatches + s_count - 1
+    sync = 2.0 * ticks * hw.sync_latency
+    bubble = (comp_max + xfer_max) * (s_count - 1) / microbatches
+    return comp_max, xfer_max, sync, bubble
+
+
+def balance_stages(
+    layers: Sequence[LayerDef],
+    ext,
+    start: int,
+    end: int,
+    stages: int,
+    *,
+    stage_size: int,
+    hw: HardwareProfile | ClusterSpec,
+    batch: int,
+) -> list[Group]:
+    """Split layers [start, end) into ``stages`` contiguous pipeline groups
+    minimising the modeled makespan (max per-stage compute + transfer-in) -
+    the stage-assignment DP (DESIGN.md §11).  For a fixed (entry, S) the
+    bubble and sync terms are split-independent, so minimising the makespan
+    minimises the whole tail cost; brute-force-verified on small stacks.
+
+    dp[i][k] = min over j of max(dp[j][k-1], cost(stage j..i)); O(L^2 S)."""
+    L = end - start
+    if stages < 1 or L < stages:
+        raise ValueError(
+            f"cannot split {L} pipeline layers [{start}, {end}) into "
+            f"{stages} stages (need >= 1 layer per stage)"
+        )
+
+    def cost(s: int, e: int, first: bool) -> float:
+        c, x = stage_cost(
+            layers, ext, Group(s, e, "pipeline"),
+            stage_size=stage_size, hw=hw, batch=batch, first_stage=first,
+        )
+        return c + x
+
+    INF = float("inf")
+    # dp[i][k]: best makespan covering layers [start, start+i) with k stages
+    dp = [[INF] * (stages + 1) for _ in range(L + 1)]
+    cut = [[0] * (stages + 1) for _ in range(L + 1)]
+    dp[0][0] = 0.0
+    for i in range(1, L + 1):
+        for k in range(1, min(i, stages) + 1):
+            for j in range(k - 1, i):
+                c = cost(start + j, start + i - 1, first=(k == 1))
+                cand = max(dp[j][k - 1], c)
+                if cand < dp[i][k]:
+                    dp[i][k] = cand
+                    cut[i][k] = j
+    bounds = []
+    i, k = L, stages
+    while k > 0:
+        j = cut[i][k]
+        bounds.append((start + j, start + i - 1))
+        i, k = j, k - 1
+    bounds.reverse()
+    return [Group(s, e, "pipeline") for s, e in bounds]
+
+
 def profile_cost(
     input_hw: tuple[int, int],
     layers: Sequence[LayerDef],
@@ -811,6 +1022,7 @@ def profile_cost(
     schedule: str = "sync",
     *,
     partition: TilePartition | None = None,
+    microbatches: int = PIPELINE_MICROBATCHES,
 ) -> dict:
     """Total cycle cost split by component for a (possibly hybrid) grouping
     profile - per-group modes are read off the groups themselves.
@@ -834,17 +1046,20 @@ def profile_cost(
     """
     _check_schedule(schedule)
     ext = _map_extents(input_hw, layers)
+    tail = _tail_start(groups)
     tiles_rc = None
     if isinstance(hw, ClusterSpec):
         if (hw.n, hw.m) != (n, m):
             raise ValueError(f"cluster grid {(hw.n, hw.m)} != tile grid {(n, m)}")
-        cross = crossover_of(groups)
         if partition is None:
             # score against the partition the planner would build
-            partition = cluster_partition(input_hw, layers, hw, cross)
-        tiles_rc = _layer_tiles(input_hw, layers, n, m, partition, cross)
-    compute = boundary = sync = hidden = 0.0
+            partition = cluster_partition(input_hw, layers, hw, tail)
+        tiles_rc = _layer_tiles(input_hw, layers, n, m, partition, tail)
+    compute = boundary = sync = hidden = bubble = 0.0
+    pipe_groups = [g for g in groups if g.mode == "pipeline"]
     for g in groups:
+        if g.mode == "pipeline":
+            continue
         c, b, s_, h = _any_group_cost(
             layers, ext, tiles_rc, g.start, g.end, n, m, hw, batch, schedule,
             mode=g.mode,
@@ -853,13 +1068,23 @@ def profile_cost(
         boundary += b
         sync += s_
         hidden += h
+    if pipe_groups:
+        c, b, s_, bub = _pipeline_tail_cost(
+            layers, ext, pipe_groups, n, m, hw, batch, microbatches
+        )
+        compute += c
+        boundary += b
+        sync += s_
+        bubble += bub
     tiles = n * m
     cross = crossover_of(groups)
     widx = range(len(layers)) if cross is None else range(cross, len(layers))
     wbytes = _filter_bytes(layers, widx, hw.dtype_bytes)
     weights = 2.0 * wbytes * (tiles - 1) / tiles / hw.agg_bw + hw.sync_latency
-    reshard = _reshard_cost(ext, cross, layers, tiles, hw, batch)
-    total = compute + boundary + sync + weights + reshard - hidden
+    # The pipeline entry all-gathers the tile grid exactly like the data
+    # crossover (same bytes on the wire), so both charge the same term.
+    reshard = _reshard_cost(ext, tail, layers, tiles, hw, batch)
+    total = compute + boundary + sync + weights + reshard + bubble - hidden
     return {
         "compute": compute,
         "boundary": boundary,
@@ -867,6 +1092,7 @@ def profile_cost(
         "weights": weights,
         "reshard": reshard,
         "hidden": hidden,
+        "bubble": bubble,
         "total": total,
     }
 
@@ -936,18 +1162,30 @@ def peak_device_memory(
                    all-gathers hold the full map for the whole local
                    microbatch before the batch slice drops to the steady
                    share.
-      filters      weights + weight grads, full copy per device in *both*
-                   modes - the constant floor behind Fig. 6's diminishing
-                   returns.
+      filters      weights + weight grads, full copy per device in spatial
+                   and data modes - the constant floor behind Fig. 6's
+                   diminishing returns.  Pipeline stages break that floor
+                   (DESIGN.md §11): a stage's devices keep only the
+                   *stage's* filters resident (every other layer's gradient
+                   is structurally zero on them), so the charge is the
+                   replicated prefix plus the heaviest stage - the
+                   inter-layer memory win the paper's 8x claim targets.
+      Pipeline activations: a stage device stores its ceil(batch / P)
+                   samples of the stage's own layer inputs (P = devices per
+                   stage) - charged as the heaviest stage.
     """
     ext = _map_extents(input_hw, layers)
     tiles = n * m
+    tail = _tail_start(groups)
     tiles_rc = (
         None
         if partition is None
-        else _layer_tiles(input_hw, layers, n, m, partition, crossover_of(groups))
+        else _layer_tiles(input_hw, layers, n, m, partition, tail)
     )
+    pipe_groups = [g for g in groups if g.mode == "pipeline"]
+    stage_devs = tiles // len(pipe_groups) if pipe_groups else tiles
     act = halo = 0.0
+    pipe_act_max = 0.0
     for g in groups:
         if g.mode == "data":
             for idx in g.layers:
@@ -957,24 +1195,42 @@ def peak_device_memory(
                     * max(layers[idx].in_channels, 1) * dtype_bytes
                 )
             continue
+        if g.mode == "pipeline":
+            stage_act = 0.0
+            for idx in g.layers:
+                ih, iw = ext[idx]
+                stage_act += (
+                    2.0 * -(-batch // stage_devs) * ih * iw
+                    * max(layers[idx].in_channels, 1) * dtype_bytes
+                )
+            pipe_act_max = max(pipe_act_max, stage_act)
+            continue
         a, h = _spatial_group_mem(
             layers, ext, g.start, g.end, n, m, batch, dtype_bytes, tiles_rc
         )
         act += a
         halo += h
+    act += pipe_act_max
     # Reshard transient: the two tiled all-gathers materialise the full map
     # for the entire local microbatch before the batch slice keeps 1/T of
-    # it - for one instant the crossover layer holds batch (not
-    # ceil(batch/T)) whole maps.  Charged as the bytes *above* the steady
-    # data-mode share already counted, so mem_limit filtering sees the real
-    # peak, not just the steady state.
+    # it - for one instant the crossover (or pipeline-entry) layer holds
+    # batch (not ceil(batch/T)) whole maps.  Charged as the bytes *above*
+    # the steady share already counted, so mem_limit filtering sees the
+    # real peak, not just the steady state.
     reshard = 0.0
-    cross = crossover_of(groups)
-    if cross is not None and tiles > 1:
-        h_c, w_c = ext[cross]
-        c_c = max(layers[cross].in_channels, 1)
-        reshard = (batch - -(-batch // tiles)) * h_c * w_c * c_c * dtype_bytes
-    filters = 2.0 * _filter_bytes(layers, range(len(layers)), dtype_bytes)
+    if tail is not None and tail > 0 and tiles > 1:
+        h_c, w_c = ext[tail]
+        c_c = max(layers[tail].in_channels, 1)
+        keep = stage_devs if pipe_groups else tiles
+        reshard = (batch - -(-batch // keep)) * h_c * w_c * c_c * dtype_bytes
+    if pipe_groups:
+        shared = [l for l in range(len(layers)) if l < pipe_groups[0].start]
+        stage_f_max = max(
+            _filter_bytes(layers, g.layers, dtype_bytes) for g in pipe_groups
+        )
+        filters = 2.0 * (_filter_bytes(layers, shared, dtype_bytes) + stage_f_max)
+    else:
+        filters = 2.0 * _filter_bytes(layers, range(len(layers)), dtype_bytes)
     return {
         "activations": act,
         "halo": halo,
@@ -1010,6 +1266,7 @@ def score_profile(
     schedule: str = "sync",
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
+    microbatches: int = PIPELINE_MICROBATCHES,
 ) -> float | None:
     """Modeled cycle total for a candidate profile, or None when its
     ``peak_device_memory`` total exceeds ``mem_limit``.  The single scoring
@@ -1023,7 +1280,7 @@ def score_profile(
     feasibility check model the padded tiles the ragged executor actually
     allocates."""
     if isinstance(hw, ClusterSpec) and partition is None:
-        partition = cluster_partition(input_hw, layers, hw, crossover_of(groups))
+        partition = cluster_partition(input_hw, layers, hw, _tail_start(groups))
     if mem_limit is not None:
         mem = peak_device_memory(
             input_hw, layers, groups, n, m, batch=batch,
@@ -1032,7 +1289,8 @@ def score_profile(
         if mem > mem_limit:
             return None
     return profile_cost(
-        input_hw, layers, groups, n, m, hw, batch, schedule, partition=partition
+        input_hw, layers, groups, n, m, hw, batch, schedule, partition=partition,
+        microbatches=microbatches,
     )["total"]
 
 
@@ -1048,6 +1306,8 @@ def optimize_grouping(
     crossover: int | str | None = None,
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
+    pipeline: int | str | None = None,
+    microbatches: int = PIPELINE_MICROBATCHES,
 ) -> list[Group]:
     """DP over group boundaries minimising modelled cycle time, optionally
     jointly with the spatial->data crossover layer.
@@ -1077,9 +1337,21 @@ def optimize_grouping(
     tracks only the cheapest grouping per prefix (plus a per-group
     working-set prune), so a feasible-but-costlier grouping that the DP
     never surfaces cannot be recovered by tightening the limit.
+
+    ``pipeline``: None keeps pipeline tails out of the search entirely;
+    ``"auto"`` adds pipeline-tail candidates (entry layer c x feasible
+    stage count S, stages split by the ``balance_stages`` makespan DP) to
+    the same ``profile_cost`` comparison, so the bubble/transfer terms
+    compete directly with halo and reshard traffic; an int forces a
+    pipeline tail with exactly that many stages.  When both ``crossover``
+    and ``pipeline`` name an int, ``crossover`` denotes the
+    spatial->pipeline entry layer (a plan has one non-spatial tail, never
+    a data tail *and* a pipeline tail).  ``microbatches`` is the M the
+    bubble fraction (S-1)/(S-1+M) is modelled against.
     """
     _check_schedule(schedule)
     L = len(layers)
+    check_pipeline_arg(pipeline, n, m, L)
     ext = _map_extents(input_hw, layers)
     tiles_rc = None
     if isinstance(hw, ClusterSpec):
@@ -1141,7 +1413,7 @@ def optimize_grouping(
         out.reverse()
         return out
 
-    if crossover is None:
+    if crossover is None and pipeline is None:
         if dp[L] == INF:
             raise ValueError(
                 f"no feasible spatial grouping (mem_limit={mem_limit}, "
@@ -1160,30 +1432,69 @@ def optimize_grouping(
             )
         return groups
 
-    check_crossover_arg(crossover, L)
-    if crossover == "auto":
-        candidates: list[int | None] = [None] + list(range(L))
-    else:
-        candidates = [None if crossover == L else crossover]
+    if crossover is not None:
+        check_crossover_arg(crossover, L)
 
     best: tuple[float, list[Group]] | None = None
-    for c in candidates:
-        prefix_len = L if c is None else c
-        if dp[prefix_len] == INF:
-            continue
-        groups = backtrack(prefix_len)
-        if c is not None:
-            groups = groups + [Group(c, L - 1, mode="data")]
-        cost = score_profile(
-            input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit,
-            partition=partition,
-        )
-        if cost is None:
-            continue
-        if best is None or cost < best[0]:
-            best = (cost, groups)
+
+    # Non-pipeline candidates (all-spatial plus data-tail crossovers).
+    # Skipped when a pipeline tail is *forced* — then only stage counts
+    # compete — but always present under pipeline="auto" so the bubble
+    # term competes against plain halo/reshard traffic.
+    if pipeline is None or pipeline == "auto":
+        if crossover is None:
+            candidates: list[int | None] = [None]
+        elif crossover == "auto":
+            candidates = [None] + list(range(L))
+        else:
+            candidates = [None if crossover == L else crossover]
+        for c in candidates:
+            prefix_len = L if c is None else c
+            if dp[prefix_len] == INF:
+                continue
+            groups = backtrack(prefix_len)
+            if c is not None:
+                groups = groups + [Group(c, L - 1, mode="data")]
+            cost = score_profile(
+                input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit,
+                partition=partition, microbatches=microbatches,
+            )
+            if cost is None:
+                continue
+            if best is None or cost < best[0]:
+                best = (cost, groups)
+
+    # Pipeline-tail candidates: entry layer c x feasible stage count S.
+    # The spatial prefix [0:c) reuses the same DP table; the tail [c:L)
+    # is split into S stages by the balance_stages makespan DP.
+    if pipeline is not None:
+        if crossover is None or crossover == "auto":
+            entries: Sequence[int] = range(L)
+        else:
+            entries = [] if crossover == L else [crossover]
+        for c in entries:
+            if dp[c] == INF:
+                continue
+            prefix = backtrack(c)
+            counts = feasible_stage_counts(n, m, L - c)
+            if pipeline != "auto":
+                counts = [s for s in counts if s == pipeline]
+            for s_count in counts:
+                stages = balance_stages(
+                    layers, ext, c, L, s_count,
+                    stage_size=(n * m) // s_count, hw=hw, batch=batch,
+                )
+                groups = prefix + stages
+                cost = score_profile(
+                    input_hw, layers, groups, n, m, hw, batch, schedule,
+                    mem_limit, partition=partition, microbatches=microbatches,
+                )
+                if cost is None:
+                    continue
+                if best is None or cost < best[0]:
+                    best = (cost, groups)
     if best is None:
         raise ValueError(
-            f"no grouping/crossover candidate fits mem_limit={mem_limit}"
+            f"no grouping/crossover/pipeline candidate fits mem_limit={mem_limit}"
         )
     return best[1]

@@ -368,13 +368,18 @@ def derive_axis_bounds(
 # Layer grouping
 # ---------------------------------------------------------------------------
 
-#: Partition modes a group can run under (DESIGN.md §7).  ``"spatial"`` is
-#: the paper's tiling/fusing regime: the feature map is sharded over the
+#: Partition modes a group can run under (DESIGN.md §7, §11).  ``"spatial"``
+#: is the paper's tiling/fusing regime: the feature map is sharded over the
 #: tile grid and group inputs exchange halos.  ``"data"`` replicates the
 #: full feature map per device and shards the *batch* over the same mesh
 #: axes instead - the regime that wins for the weight-dominated tail of a
 #: CNN, reached through one reshard at the spatial->data crossover.
-MODES = ("spatial", "data")
+#: ``"pipeline"`` assigns the group itself to a disjoint *device subset*
+#: (a stage) and streams microbatches through consecutive stages - the
+#: inter-layer partitioning axis (DESIGN.md §11): each pipeline group is
+#: one stage, activations/cotangents ppermute between adjacent stage
+#: subsets, and per-device memory holds only the stage's own layers.
+MODES = ("spatial", "data", "pipeline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -384,10 +389,12 @@ class Group:
     inclusive layer indices).
 
     ``mode`` selects the group's partitioning: ``"spatial"`` (tile grid +
-    halos, the default and the paper's front-of-network regime) or
-    ``"data"`` (batch split over the same devices, full maps, no halos).
-    A valid profile is a spatial prefix followed by a data suffix - one
-    crossover at most (``validate_profile``)."""
+    halos, the default and the paper's front-of-network regime), ``"data"``
+    (batch split over the same devices, full maps, no halos) or
+    ``"pipeline"`` (the group is one pipeline *stage* on its own device
+    subset, DESIGN.md §11).  A valid profile is a spatial prefix followed
+    by either a data suffix or a pipeline suffix - one mode transition at
+    most (``validate_profile``)."""
 
     start: int
     end: int
@@ -400,24 +407,43 @@ class Group:
 
 def validate_profile(groups: Sequence[Group], n_layers: int) -> None:
     """A grouping profile must tile 0..n_layers-1 contiguously, with valid
-    per-group modes forming a spatial prefix + data suffix (at most one
-    spatial->data transition; data->spatial would need a second reshard
-    the executor deliberately does not implement)."""
+    per-group modes forming a spatial prefix + (data | pipeline) suffix: at
+    most one mode transition, and data/pipeline groups never mix.  A
+    data->spatial or pipeline->anything-else transition would need a second
+    reshard the executor deliberately does not implement, and a data group
+    before a pipeline group would leave the batch sharded over all devices
+    while stage 0 expects whole-map microbatch blocks."""
     if not groups:
         raise ValueError("empty grouping profile")
     expect = 0
-    seen_data = False
+    seen_data = seen_pipe = False
     for g in groups:
         if g.start != expect or g.end < g.start:
             raise ValueError(f"profile not contiguous at group {g}")
         if g.mode not in MODES:
             raise ValueError(f"group {g} mode must be one of {MODES}")
         if g.mode == "data":
+            if seen_pipe:
+                raise ValueError(
+                    f"data group {g} follows a pipeline group; a plan takes "
+                    "either a data tail or a pipeline tail, never both "
+                    "(spatial prefix -> one non-spatial suffix)"
+                )
             seen_data = True
-        elif seen_data:
+        elif g.mode == "pipeline":
+            if seen_data:
+                raise ValueError(
+                    f"pipeline group {g} follows a data group; pipeline "
+                    "stages must directly follow the spatial prefix - a "
+                    "plan takes either a data tail or a pipeline tail, "
+                    "never both"
+                )
+            seen_pipe = True
+        elif seen_data or seen_pipe:
             raise ValueError(
-                f"spatial group {g} follows a data group; modes must be a "
-                "spatial prefix + data suffix (single crossover)"
+                f"spatial group {g} follows a {'data' if seen_data else 'pipeline'} "
+                "group; modes must be a spatial prefix + one non-spatial "
+                "suffix (single transition)"
             )
         expect = g.end + 1
     if expect != n_layers:
@@ -429,6 +455,16 @@ def crossover_of(groups: Sequence[Group]) -> int | None:
     is all-spatial.  This is where the executor reshards (DESIGN.md §7)."""
     for g in groups:
         if g.mode == "data":
+            return g.start
+    return None
+
+
+def pipeline_first_of(groups: Sequence[Group]) -> int | None:
+    """First pipeline-mode *layer* index, or None when no pipeline tail
+    exists.  This is where the executor reshards the tile grid into
+    stage-0 microbatch blocks (DESIGN.md §11)."""
+    for g in groups:
+        if g.mode == "pipeline":
             return g.start
     return None
 

@@ -56,10 +56,20 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
                          "newest loadable checkpoint in --ckpt-dir if one "
                          "exists, 'always' requires one, 'never' starts fresh")
     ap.add_argument("--fault-schedule", default=None,
-                    help="fault-injection schedule (runtime.faults), e.g. "
-                         "'drop:jetson@5,slow:0.2@8,ckpt-crash@10,corrupt@12'; "
-                         "device drops trigger an elastic replan onto the "
-                         "surviving devices (tiled arch only)")
+                    help="fault-injection schedule (runtime.faults): "
+                         "comma-separated 'kind[:arg]@step' items.  Kinds: "
+                         "'drop:<device>@N' (device leaves at step N), "
+                         "'add:<device>@N' (device joins), 'slow:<sec>@N' "
+                         "(step N stalls <sec> seconds - straggler "
+                         "detection), 'fail@N' (step N raises; checkpoint "
+                         "restart), 'ckpt-crash[:count]@N' (writer crashes "
+                         "count times mid-save), 'corrupt@N' (flip bytes in "
+                         "the latest checkpoint).  Example: "
+                         "'drop:jetson@5,slow:0.2@8,ckpt-crash@10,corrupt@12'. "
+                         "Drops/adds trigger an elastic replan onto the "
+                         "surviving devices (tiled arch only; pipeline plans "
+                         "re-pack stages onto survivors or degrade to "
+                         "spatial/data)")
     ap.add_argument("--mesh", choices=["local", "single", "multi"], default="local")
     ap.add_argument("--seed", type=int, default=0)
     # tiled-CNN (planner) options
@@ -79,6 +89,18 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
                     help="tiled: spatial->data crossover layer - 'none' (all "
                          "spatial), 'auto' (cost-model choice; joint with the "
                          "grouping DP under --groups auto), or a layer index N")
+    ap.add_argument("--pipeline", default="none",
+                    help="tiled: pipeline tail over stage device subsets "
+                         "(DESIGN.md §11) - 'none', 'auto' (the planner "
+                         "weighs bubble + inter-stage transfer against halo "
+                         "and reshard traffic), or a stage count S; requires "
+                         "--groups auto, and BN layers must stay out of the "
+                         "tail (see --no-batch-norm)")
+    ap.add_argument("--no-batch-norm", action="store_true",
+                    help="tiled: build the YOLO stack without batch norm "
+                         "(required for layers inside pipeline stages: BN's "
+                         "cross-device psums cannot run in stage-local "
+                         "programs)")
     ap.add_argument("--hw-profile", default="pi3-core",
                     help="tiled: hardware profile for --groups/--crossover auto")
     ap.add_argument("--cluster", default=None,
@@ -107,6 +129,19 @@ def _resolve_crossover(spec: str):
     return int(spec)
 
 
+def _resolve_pipeline(spec: str):
+    if spec == "none":
+        return None
+    if spec == "auto":
+        return "auto"
+    try:
+        return int(spec)   # check_pipeline_arg validates the count itself
+    except ValueError:
+        raise SystemExit(
+            f"--pipeline must be 'none', 'auto', or a stage count; got {spec!r}"
+        ) from None
+
+
 def _run_tiled(args) -> int:
     from repro.core.grouping import parse_cluster_spec
     from repro.models.yolo import make_yolo_tiled_arch, yolov2_16_layers
@@ -118,6 +153,7 @@ def _run_tiled(args) -> int:
         else None
     )
     hw = cluster if cluster is not None else args.hw_profile
+    pipeline = _resolve_pipeline(args.pipeline)
     arch = make_yolo_tiled_arch(
         input_hw=(args.input_hw, args.input_hw),
         depth=args.depth,
@@ -129,12 +165,16 @@ def _run_tiled(args) -> int:
         hw=hw,
         batch=args.batch,
         crossover=_resolve_crossover(args.crossover),
+        pipeline=pipeline,
+        microbatches=max(args.grad_accum, 1),
+        batch_norm=not args.no_batch_norm,
     )
     part = arch.plan.partition
     print(
         f"plan: backend={arch.plan.backend} schedule={arch.plan.schedule} "
         f"grid={args.grid}x{args.grid} crossover={arch.plan.crossover} "
         f"groups={[(g.start, g.end, g.mode) for g in arch.plan.groups]}"
+        + (f" stages={arch.plan.stages}" if arch.plan.stages else "")
     )
     print(
         f"partition: rows={part.row_bounds} cols={part.col_bounds} "
@@ -189,7 +229,9 @@ def _run_tiled(args) -> int:
             f"replan ({ev.kind}:{ev.device}): grid={new_plan.n}x{new_plan.m} "
             f"rows={new_plan.partition.row_bounds} "
             f"cols={new_plan.partition.col_bounds} "
-            f"crossover={new_plan.crossover}"
+            f"crossover={new_plan.crossover} "
+            f"modes={[(g.start, g.end, g.mode) for g in new_plan.groups]}"
+            + (f" stages={new_plan.stages}" if new_plan.stages else "")
         )
         return jax.jit(new_step, donate_argnums=(0,)), plan_manifest(new_plan, cl)
 

@@ -90,6 +90,8 @@ def make_yolo_tiled_arch(
     crossover: int | str | None = None,
     mem_limit: float | None = None,
     partition=None,
+    pipeline: int | str | None = None,
+    microbatches: int | None = None,
     batch_norm: bool = True,
     mesh=None,
     loss_local=l2_loss_local,
@@ -101,7 +103,12 @@ def make_yolo_tiled_arch(
     index | "auto"; DESIGN.md §7) chosen at plan time.  ``hw`` may be a
     ``HardwareProfile``, a ``ClusterSpec`` (or cluster spec string like
     ``"pi3x3+jetson"``) for heterogeneous grids, and ``partition`` an
-    explicit ``TilePartition`` (DESIGN.md §8)."""
+    explicit ``TilePartition`` (DESIGN.md §8).  ``pipeline``
+    (None | "auto" | stage count; DESIGN.md §11) asks the planner for a
+    pipeline tail over device subsets - requires ``groups="auto"`` and
+    ``batch_norm=False`` layers in the tail; ``microbatches`` feeds the
+    bubble model (defaults to the planner's standard M)."""
+    from repro.core.grouping import PIPELINE_MICROBATCHES
     from repro.launch.mesh import make_tile_mesh
 
     layers = yolov2_16_layers(batch_norm=batch_norm)[:depth]
@@ -109,6 +116,8 @@ def make_yolo_tiled_arch(
         input_hw, layers, n, m, groups,
         backend=backend, schedule=schedule, hw=hw, batch=batch,
         crossover=crossover, mem_limit=mem_limit, partition=partition,
+        pipeline=pipeline,
+        microbatches=PIPELINE_MICROBATCHES if microbatches is None else microbatches,
     )
     return TiledCNNArch(
         plan=plan,

@@ -211,6 +211,16 @@ def run_training(
                 log.warning("cluster change: %s; replanning", ev)
                 mgr.wait()            # drain in-flight save before remap
                 train_step, plan = replan(ev)
+                if isinstance(plan, dict) and plan.get("groups"):
+                    # surface what the replan decided: per-group partition
+                    # modes, and stage device ranges for pipeline plans
+                    log.warning(
+                        "replanned: grid=%sx%s modes=%s%s",
+                        plan.get("n"), plan.get("m"),
+                        [m for _, _, m in plan["groups"]],
+                        " stages=%s" % (plan["stages"],)
+                        if plan.get("stages") else "",
+                    )
                 state = jax.tree.map(np.asarray, state)
                 report.replans += 1
                 # continue at the same step: no progress lost on a replan

@@ -143,6 +143,7 @@ def _make_tiled_cnn_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
     opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
     init_state = _make_init_state(arch, opt, tcfg)
     accum = max(pcfg.grad_accum, 1)
+    plan = arch.plan
     grad_step = make_deferred_grad_step(
         arch.plan,
         arch.mesh,
@@ -162,6 +163,19 @@ def _make_tiled_cnn_train_step(arch, pcfg: ParallelConfig, tcfg: TrainConfig):
                 )
             return v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
 
+        if plan.stages:
+            # trainer-vocabulary guard for pipeline plans: each of the
+            # grad_accum microbatches streamed through the stages must
+            # split over one stage's device subset
+            per = (plan.n * plan.m) // len(plan.stages)
+            b = batch["x"].shape[0]
+            if b % accum or (b // accum) % per:
+                raise ValueError(
+                    f"pipeline plan with {len(plan.stages)} stages needs "
+                    f"the global batch ({b}) divisible by grad_accum "
+                    f"({accum}) and the per-microbatch batch by the "
+                    f"devices per stage ({per}); adjust --batch/--grad-accum"
+                )
         loss, grads = grad_step(state.params, split(batch["x"]), split(batch["t"]))
         return _apply_updates(state, loss, grads, opt, tcfg)
 

@@ -165,6 +165,7 @@ def test_plan_manifest_roundtrip_uniform_hetero_hybrid():
         (build_stack_plan((64, 64), LAYERS, 2, 2), None),
         (build_stack_plan((64, 64), LAYERS, 2, 2, hw=cluster), cluster),
         (build_stack_plan((64, 64), LAYERS, 2, 2, crossover=1), None),
+        (build_stack_plan((64, 64), LAYERS, 2, 2, "auto", pipeline=2), None),
     ]:
         man = json.loads(json.dumps(plan_manifest(plan, cl)))
         assert plan_from_manifest(man) == plan
@@ -172,6 +173,49 @@ def test_plan_manifest_roundtrip_uniform_hetero_hybrid():
             assert cluster_from_manifest(man["cluster"]).grid == cl.grid
         else:
             assert man["cluster"] is None
+        # stage device ranges survive the round-trip (re-derived from the
+        # groups, never read from the manifest's informational key)
+        assert plan_from_manifest(man).stages == plan.stages
+
+
+def test_checkpoint_under_pipeline_plan_restores_under_spatial(tmp_path):
+    """Checkpoints are partition-independent (global-array leaves): a state
+    saved while training a pipeline plan restores bit-exact for a spatial
+    plan over the same layers, and the stored plan manifest still names
+    the staged plan it was trained under."""
+    import json
+
+    from repro.ckpt.manager import CheckpointManager
+    from repro.core.spatial import init_stack_params
+    from repro.train.trainer import check_state_matches
+
+    pipe_plan = build_stack_plan((64, 64), LAYERS, 2, 2, "auto", pipeline=2)
+    assert pipe_plan.stages
+    spatial_plan = build_stack_plan((64, 64), LAYERS, 2, 2)
+    assert spatial_plan.layers == pipe_plan.layers
+
+    state = {
+        "params": init_stack_params(jax.random.PRNGKey(0), LAYERS),
+        "step": jnp.int32(3),
+    }
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state, blocking=True,
+             plan=json.loads(json.dumps(plan_manifest(pipe_plan))))
+
+    restored = mgr.restore(jax.eval_shape(lambda: state))
+    check_state_matches(restored, state)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the manifest names the pipeline plan it was saved under...
+    stored = plan_from_manifest(mgr.plan_of())
+    assert stored == pipe_plan and stored.stages == pipe_plan.stages
+    # ...and the same leaves are exactly what the spatial plan's stack
+    # expects (params are partition-independent)
+    check_state_matches(
+        restored,
+        {"params": init_stack_params(jax.random.PRNGKey(1), spatial_plan.layers),
+         "step": jnp.int32(0)},
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,382 @@
+"""Pipeline partition mode (DESIGN.md §11): stage feasibility, the
+bubble/makespan cost terms, joint (grouping x crossover x pipeline)
+optimality vs brute force, plan manifests, the planner's memory lever,
+argument validation, and the elastic degradation ladder.
+
+Everything here is planner/cost-model level (single device); multi-device
+executor exactness lives in scripts/check_pipeline_parallel.py (spawned by
+tests/test_spmd.py with 4 fake devices).
+"""
+import itertools
+import json
+
+import pytest
+
+from repro.core import (
+    Group,
+    HardwareProfile,
+    JETSON_EDGE_PROFILE,
+    PI3_PROFILE,
+    PIPELINE_MICROBATCHES,
+    balance_stages,
+    bubble_fraction,
+    build_stack_plan,
+    check_pipeline_arg,
+    drop_device,
+    feasible_stage_counts,
+    optimize_grouping,
+    parse_cluster_spec,
+    peak_device_memory,
+    pipeline_first_of,
+    pipeline_schedule_census,
+    plan_from_manifest,
+    plan_manifest,
+    profile_cost,
+    replan_stack,
+    score_profile,
+    validate_profile,
+)
+from repro.core.spatial import LayerDef
+from repro.models.yolo import yolov2_16_layers
+
+LAYERS = yolov2_16_layers(batch_norm=False)
+HW = (64, 64)
+
+# filter-dominated acceptance stack: 1x1 convs at 128 channels make the
+# replicated-filter floor (2x full stack, charged by EVERY non-pipeline
+# plan regardless of grouping or crossover) the binding memory term, so a
+# mem_limit below it is infeasible for all-spatial/hybrid plans while a
+# pipeline tail (stage-local filters) still fits
+WIDE = [
+    LayerDef(3, 1, 3, 128, act="leaky"),
+    *[LayerDef(1, 1, 128, 128, act="leaky") for _ in range(7)],
+]
+WIDE_HW = (4, 4)
+
+
+def _filter_floor(layers) -> float:
+    # matches grouping._filter_bytes: weights + weight grads (x2), biases
+    # excluded from the model
+    return 2.0 * sum(
+        l.kernel * l.kernel * l.in_channels * l.out_channels * 4
+        for l in layers if not l.pool
+    )
+
+
+# ---------------------------------------------------------------------------
+# stage feasibility + argument validation
+# ---------------------------------------------------------------------------
+
+
+def test_feasible_stage_counts():
+    # 1-D meshes: any S dividing the device count (and <= tail layers)
+    assert feasible_stage_counts(1, 4, 8) == [2, 4]
+    assert feasible_stage_counts(4, 1, 8) == [2, 4]
+    assert feasible_stage_counts(1, 4, 3) == [2]       # S=4 needs 4 layers
+    # 2x2: S=2 gives row-aligned stages (P=2 = one row); S=4 would need
+    # P=1 which splits a mesh row -> infeasible
+    assert feasible_stage_counts(2, 2, 8) == [2]
+    # 3x3: only S=3 divides 9, and P=3 is a whole row
+    assert feasible_stage_counts(3, 3, 9) == [3]
+    # single device: no pipeline
+    assert feasible_stage_counts(1, 1, 8) == []
+
+
+@pytest.mark.parametrize("bad,match", [
+    (0, "stage count must be >= 2"),
+    (1, "stage count must be >= 2"),
+    (True, "must be None, 'auto', or an int"),
+    ("two", "must be None, 'auto', or an int"),
+    (3, "feasible counts here"),       # 3 does not divide the 1x4 mesh
+])
+def test_check_pipeline_arg_rejects(bad, match):
+    with pytest.raises(ValueError, match=match):
+        check_pipeline_arg(bad, 1, 4, 8)
+
+
+def test_check_pipeline_arg_accepts():
+    check_pipeline_arg(None, 1, 4, 8)
+    check_pipeline_arg("auto", 1, 4, 8)
+    check_pipeline_arg(2, 1, 4, 8)
+    check_pipeline_arg(4, 1, 4, 8)
+
+
+def test_planner_rejects_pipeline_with_overlap():
+    with pytest.raises(ValueError, match="overlap"):
+        build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", schedule="overlap",
+                         pipeline=2)
+
+
+def test_planner_rejects_pipeline_with_explicit_groups():
+    with pytest.raises(ValueError, match="groups='auto'"):
+        build_stack_plan(WIDE_HW, WIDE, 1, 4, [Group(0, len(WIDE) - 1)],
+                         pipeline=2)
+
+
+def test_planner_rejects_batchnorm_in_stage():
+    bn = yolov2_16_layers(batch_norm=True)[:6]
+    with pytest.raises(ValueError, match="batch_norm"):
+        build_stack_plan((64, 64), bn, 1, 4, "auto", pipeline=2)
+
+
+def test_validate_profile_rejects_data_before_pipeline():
+    # a plan has ONE non-spatial tail: a data group followed by a pipeline
+    # group (or vice versa) is structurally invalid
+    bad = [Group(0, 1), Group(2, 3, "data"), Group(4, 5, "pipeline")]
+    with pytest.raises(ValueError):
+        validate_profile(bad, 6)
+    bad = [Group(0, 1), Group(2, 3, "pipeline"), Group(4, 5, "data")]
+    with pytest.raises(ValueError):
+        validate_profile(bad, 6)
+
+
+# ---------------------------------------------------------------------------
+# bubble model == schedule census
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stages", [2, 3, 4])
+@pytest.mark.parametrize("microbatches", [1, 2, 4, 8])
+def test_bubble_census_matches_model(stages, microbatches):
+    """The 1F1B fill/drain tick schedule's idle-slot census equals the
+    analytic (S-1)/(S-1+M) exactly - the cost model and the executor
+    realise the same schedule."""
+    cen = pipeline_schedule_census(stages, microbatches)
+    assert cen["ticks"] == microbatches + stages - 1
+    assert cen["busy_slots"] == stages * microbatches
+    assert cen["idle_slots"] == stages * (stages - 1)
+    assert cen["bubble"] == pytest.approx(
+        bubble_fraction(stages, microbatches), abs=0)
+
+
+def test_bubble_fraction_validates():
+    with pytest.raises(ValueError):
+        bubble_fraction(0, 4)
+    with pytest.raises(ValueError):
+        bubble_fraction(2, 0)
+    assert bubble_fraction(1, 4) == 0.0          # one stage: no bubble
+    assert bubble_fraction(2, 4) == pytest.approx(1 / 5)
+
+
+def test_more_microbatches_shrink_modeled_bubble():
+    layers = LAYERS[:6]
+    hw = JETSON_EDGE_PROFILE
+    g = optimize_grouping(HW, layers, 1, 4, hw, batch=8, pipeline=2)
+    c4 = profile_cost(HW, layers, g, 1, 4, hw, batch=8, microbatches=4)
+    c16 = profile_cost(HW, layers, g, 1, 4, hw, batch=8, microbatches=16)
+    assert c16["bubble"] < c4["bubble"]
+    assert c4["bubble"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# joint (grouping x crossover x pipeline) DP vs brute force
+# ---------------------------------------------------------------------------
+
+
+def _enum_spatial(pre):
+    """All contiguous spatial groupings of [0, pre)."""
+    if pre == 0:
+        yield []
+        return
+    for bits in itertools.product([0, 1], repeat=pre - 1):
+        groups, s = [], 0
+        for i, b in enumerate(bits):
+            if b:
+                groups.append(Group(s, i))
+                s = i + 1
+        groups.append(Group(s, pre - 1))
+        yield groups
+
+
+def _enum_splits(start, end, k):
+    """All contiguous splits of [start, end) into k pipeline stages."""
+    for cuts in itertools.combinations(range(start + 1, end), k - 1):
+        bounds = [start, *cuts, end]
+        yield [Group(bounds[i], bounds[i + 1] - 1, "pipeline") for i in range(k)]
+
+
+def _enum_all_candidates(n_layers, n, m):
+    """Every profile the joint optimizer searches over: all-spatial and
+    data-tail plans (any prefix grouping) plus every (entry x stage count
+    x stage split) pipeline tail."""
+    for c in [None] + list(range(n_layers)):
+        pre = n_layers if c is None else c
+        tail = [] if c is None else [Group(c, n_layers - 1, "data")]
+        for g in _enum_spatial(pre):
+            yield g + tail
+    for c in range(n_layers):
+        for s_count in feasible_stage_counts(n, m, n_layers - c):
+            for tail in _enum_splits(c, n_layers, s_count):
+                for g in _enum_spatial(c):
+                    yield g + tail
+
+
+@pytest.mark.parametrize("grid", [(1, 4), (2, 2)], ids=["1x4", "2x2"])
+@pytest.mark.parametrize(
+    "hw", [PI3_PROFILE, JETSON_EDGE_PROFILE], ids=["pi", "jetson-edge"]
+)
+@pytest.mark.parametrize("n_layers", [3, 4, 5])
+def test_pipeline_auto_matches_bruteforce(hw, n_layers, grid):
+    """optimize_grouping(crossover="auto", pipeline="auto") is exactly
+    optimal over the full (grouping x crossover x pipeline-entry x stage
+    count x stage split) space under the cost model."""
+    n, m = grid
+    layers = LAYERS[:n_layers]
+
+    def cost(groups):
+        validate_profile(groups, n_layers)
+        return score_profile(HW, layers, groups, n, m, hw, batch=4,
+                             microbatches=PIPELINE_MICROBATCHES)
+
+    best = min(c for g in _enum_all_candidates(n_layers, n, m)
+               if (c := cost(g)) is not None)
+    dp = optimize_grouping(HW, layers, n, m, hw, batch=4,
+                           crossover="auto", pipeline="auto")
+    assert cost(dp) == pytest.approx(best, rel=1e-9)
+
+
+@pytest.mark.slow  # brute-force enumeration sweep; CI full-suite job only
+@pytest.mark.parametrize("grid", [(1, 4), (2, 2), (1, 6)],
+                         ids=["1x4", "2x2", "1x6"])
+def test_pipeline_auto_matches_bruteforce_deep(grid):
+    n, m = grid
+    n_layers = 6
+    layers = LAYERS[:n_layers]
+    for flops, link in ((1e9, 1e7), (1e10, 1e6), (1e11, 1e9)):
+        hw = HardwareProfile("h", flops=flops, link_bw=link,
+                             sync_latency=1e-3, agg_bw=link)
+
+        def cost(groups):
+            validate_profile(groups, n_layers)
+            return score_profile(HW, layers, groups, n, m, hw, batch=4)
+
+        best = min(c for g in _enum_all_candidates(n_layers, n, m)
+                   if (c := cost(g)) is not None)
+        dp = optimize_grouping(HW, layers, n, m, hw, batch=4,
+                               crossover="auto", pipeline="auto")
+        assert cost(dp) == pytest.approx(best, rel=1e-9)
+
+
+def test_forced_stage_count_respected():
+    layers = LAYERS[:8]
+    for s_count in (2, 4):
+        g = optimize_grouping(HW, layers, 1, 4, JETSON_EDGE_PROFILE, batch=4,
+                              pipeline=s_count)
+        assert len([x for x in g if x.mode == "pipeline"]) == s_count
+    # forced entry: crossover int + pipeline int pins the entry layer
+    g = optimize_grouping(HW, layers, 1, 4, JETSON_EDGE_PROFILE, batch=4,
+                          crossover=3, pipeline=2)
+    assert pipeline_first_of(g) == 3
+
+
+def test_balance_stages_is_contiguous_cover():
+    from repro.core.grouping import _map_extents
+
+    layers = LAYERS[:8]
+    ext = _map_extents(HW, layers)
+    stages = balance_stages(layers, ext, 2, 8, 2, stage_size=2,
+                            hw=JETSON_EDGE_PROFILE, batch=4)
+    assert [g.mode for g in stages] == ["pipeline", "pipeline"]
+    assert stages[0].start == 2 and stages[-1].end == 7
+    assert stages[0].end + 1 == stages[1].start
+    with pytest.raises(ValueError, match="cannot split"):
+        balance_stages(layers, ext, 6, 8, 3, stage_size=1,
+                       hw=JETSON_EDGE_PROFILE, batch=4)
+
+
+# ---------------------------------------------------------------------------
+# plan manifest round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_plan_manifest_roundtrip():
+    plan = build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", pipeline=2, batch=4)
+    assert plan.stages and len(plan.stages) == 2
+    assert plan.n_stages == 2
+    man = json.loads(json.dumps(plan_manifest(plan)))
+    # stages key is informational: derived from the groups on rebuild
+    assert [tuple(s) for s in man["stages"]] == list(plan.stages)
+    back = plan_from_manifest(man)
+    assert back == plan
+    assert back.stages == plan.stages
+    assert back.pipeline_first == plan.pipeline_first
+
+
+def test_hybrid_pipeline_plan_manifest_roundtrip():
+    # spatial prefix -> pipeline tail (entry pinned via crossover)
+    layers = LAYERS[:8]
+    plan = build_stack_plan(HW, layers, 1, 4, "auto", crossover=4, pipeline=2,
+                            batch=4)
+    assert plan.pipeline_first == 4 and plan.crossover is None
+    assert plan.spatial_last == 4
+    back = plan_from_manifest(json.loads(json.dumps(plan_manifest(plan))))
+    assert back == plan
+
+
+# ---------------------------------------------------------------------------
+# the memory lever: a stack no all-spatial/hybrid plan can hold
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_fits_where_every_nonpipeline_plan_cannot():
+    """Acceptance (planner half; executor half in
+    scripts/check_pipeline_parallel.py): under a mem_limit below the
+    replicated-filter floor, every non-pipeline candidate is infeasible -
+    the floor is grouping- and crossover-independent - while the planner's
+    pipeline tail (stage-local filters) fits."""
+    floor = _filter_floor(WIDE)
+    lim = 0.75 * floor
+    # the floor binds every non-pipeline profile, not just the optimum
+    for groups in ([Group(0, len(WIDE) - 1)],
+                   [Group(i, i) for i in range(len(WIDE))],
+                   [Group(0, 3), Group(4, len(WIDE) - 1, "data")]):
+        mem = peak_device_memory(WIDE_HW, WIDE, groups, 1, 4, batch=4)
+        assert mem["filters"] == pytest.approx(floor, rel=1e-6)
+        assert mem["total"] > lim
+    with pytest.raises(ValueError, match="no grouping/crossover/pipeline"):
+        build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", crossover="auto",
+                         batch=4, mem_limit=lim)
+    plan = build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", crossover="auto",
+                            pipeline="auto", batch=4, mem_limit=lim)
+    assert plan.stages
+    mem = peak_device_memory(WIDE_HW, WIDE, plan.groups, 1, 4, batch=4)
+    assert mem["total"] <= lim
+    assert mem["filters"] < floor
+
+
+# ---------------------------------------------------------------------------
+# elastic degradation ladder (satellite: replan over survivors)
+# ---------------------------------------------------------------------------
+
+
+def test_replan_repacks_pipeline_stages_on_survivors():
+    """Drop a device owning a stage: replan re-packs the pipeline for the
+    surviving 1x3 grid (S=3 is its only feasible count) - or, when no
+    stage count fits, degrades to a spatial/data plan.  Either way a valid
+    plan comes back."""
+    cluster = parse_cluster_spec("pi3x4", 1, 4)
+    plan = build_stack_plan(WIDE_HW, WIDE, 1, 4, "auto", hw=cluster,
+                            pipeline=2, batch=4)
+    assert plan.n_stages == 2
+    surv = drop_device(cluster, 3)      # flat index 3 owned stage 1
+    new = replan_stack(plan, surv, batch=4)
+    assert (new.n, new.m) == (1, 3)
+    validate_profile(new.groups, len(WIDE))
+    if new.stages:
+        assert len(new.stages) in feasible_stage_counts(1, 3, len(WIDE))
+    else:
+        assert all(g.mode in ("spatial", "data") for g in new.groups)
+
+
+def test_replan_degrades_to_spatial_when_no_stage_count_fits():
+    """2 survivors, 1-layer tail window: with pipeline requiring >= 2 tail
+    layers per feasible split nothing fits, so the ladder's non-pipeline
+    rungs must produce the plan."""
+    layers = LAYERS[:2]
+    plan = build_stack_plan((32, 32), layers, 1, 4, "auto", pipeline=2,
+                            batch=4)
+    assert plan.stages
+    new = replan_stack(plan, PI3_PROFILE, 1, 1, batch=4)
+    assert (new.n, new.m) == (1, 1)
+    assert not new.stages
+    validate_profile(new.groups, len(layers))

@@ -20,6 +20,12 @@ non-zero on failure:
                       partition == untiled reference; crash-during-save
                       atomicity; corrupted-leaf fallback; cross-plan
                       restore sweep
+  check_pipeline_parallel.py - pipeline partition mode (DESIGN.md §11):
+                      memory-lever stack no all-spatial plan can hold
+                      trains on a 1x4 mesh == untiled reference (xla +
+                      pallas), hybrid spatial->pipeline on 2x2, bubble
+                      census == model, execution-time validation, trainer
+                      integration
 """
 import os
 import subprocess
@@ -74,3 +80,8 @@ def test_overlap_schedule_exact():
 def test_elastic_fault_tolerance_exact():
     out = _run("check_elastic.py")
     assert "ELASTIC CHECK OK" in out
+
+
+def test_pipeline_parallel_exact():
+    out = _run("check_pipeline_parallel.py")
+    assert "PIPELINE-PARALLEL CHECK OK" in out
