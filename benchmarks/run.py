@@ -83,9 +83,11 @@ def validate_trajectory(path: str) -> list[str]:
     every entry's hetero-sweep rows must carry the first-class ``overhead``
     column (measured step time / the uniform partition's) - the headline
     number the shape-specialized ragged executor (DESIGN.md §9) is judged
-    by - and every pipeline-sweep row the first-class ``bubble`` column
-    (the fill/drain idle fraction the §11 stage-assignment cost term is
-    judged by), so neither can silently drop out of the history."""
+    by - every pipeline-sweep row the first-class ``bubble`` column (the
+    fill/drain idle fraction the §11 stage-assignment cost term is judged
+    by), and every wire-sweep row the ``wire_codec``/``bytes_per_step``
+    columns (the modeled byte cut the §12 codec is judged by), so none can
+    silently drop out of the history."""
     if not os.path.exists(path):
         return []
     try:
@@ -114,6 +116,17 @@ def validate_trajectory(path: str) -> list[str]:
             problems.append(
                 f"entry {entry.get('sha', '?')[:12]} pipeline rows lack "
                 f"'bubble': {', '.join(no_bubble)}"
+            )
+        no_codec = [
+            r.get("name", "?")
+            for r in entry.get("rows", [])
+            if "/wire/" in r.get("name", "")
+            and not ("wire_codec" in r and "bytes_per_step" in r)
+        ]
+        if no_codec:
+            problems.append(
+                f"entry {entry.get('sha', '?')[:12]} wire rows lack "
+                f"'wire_codec'/'bytes_per_step': {', '.join(no_codec)}"
             )
     return problems
 

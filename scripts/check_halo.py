@@ -10,12 +10,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.halo import (
+    EFBag,
+    WireCtx,
     halo_exchange_1d,
     halo_exchange_1d_packed,
     halo_exchange_2d,
     halo_exchange_2d_packed,
     send_boundary_sum_1d,
 )
+from repro.optim.compression import get_codec
 
 mesh1 = jax.make_mesh((8,), ("x",))
 mesh2 = jax.make_mesh((4, 2), ("r", "c"))
@@ -138,6 +141,71 @@ def check_adjoint():
     print("halo adjoint property sweep ok (2- and 8-shard axes, halos 0..3)")
 
 
+def check_wire_codec_adjoint():
+    """Per-codec ``send_boundary_sum_1d`` sweep (DESIGN.md §12).  codec=none
+    is the exact adjoint (``check_adjoint``); int8/topk ship quantised
+    strips under error feedback, so over T repeated steps with the same
+    cotangent the telescoping invariant holds *exactly* (up to fp32):
+
+        T * exact - sum_t out_t == fold(residual_T)
+
+    i.e. everything the codec withheld is precisely the final residual, and
+    the mean applied adjoint converges to the true one at rate 1/T."""
+    lo, hi = 2, 1
+    rows, ch, T = 4, 3, 8
+    for mesh, n in ((mesh_pair, 2), (mesh1, 8)):
+        y = jax.random.normal(jax.random.PRNGKey(3), (n * (rows + lo + hi), ch))
+        exact_f = shard_map(
+            lambda v: send_boundary_sum_1d(v, lo, hi, "x", dim=0),
+            mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+            check_rep=False,
+        )
+        exact = np.asarray(exact_f(y))
+        for spec in ("int8", "topk:0.5"):
+            codec = get_codec(spec)
+
+            def step_fn(v, res_lo, res_hi):
+                bag = EFBag("buffers", [res_lo, res_hi])
+                out = send_boundary_sum_1d(
+                    v, lo, hi, "x", dim=0, wire=WireCtx(codec, bag)
+                )
+                new_lo, new_hi = bag.emitted
+                return out, new_lo, new_hi
+
+            stepped = shard_map(
+                step_fn, mesh=mesh,
+                in_specs=(P("x", None),) * 3,
+                out_specs=(P("x", None),) * 3, check_rep=False,
+            )
+            res_lo = jnp.zeros((n * lo, ch))
+            res_hi = jnp.zeros((n * hi, ch))
+            total = np.zeros_like(exact)
+            first_err = None
+            for t in range(T):
+                out, res_lo, res_hi = stepped(y, res_lo, res_hi)
+                total = total + np.asarray(out)
+                if first_err is None:
+                    first_err = float(np.max(np.abs(np.asarray(out) - exact)))
+            # fold(residual_T): reuse the uncompressed adjoint on a map whose
+            # strips are the final residuals and whose core is zero
+            vres = np.zeros((n, rows + lo + hi, ch), np.float32)
+            vres[:, :lo] = np.asarray(res_lo).reshape(n, lo, ch)
+            vres[:, rows + lo:] = np.asarray(res_hi).reshape(n, hi, ch)
+            folded = np.asarray(exact_f(jnp.asarray(vres.reshape(-1, ch))))
+            np.testing.assert_allclose(
+                T * exact - total, folded, atol=1e-4,
+                err_msg=f"telescoping broken: n={n} codec={spec}",
+            )
+            # and the mean applied adjoint converges at rate ~1/T (factor 2:
+            # the EF residual is bounded but can sit above the first step's)
+            mean_err = float(np.max(np.abs(total / T - exact)))
+            assert mean_err <= 2.0 * first_err / T + 1e-5, (
+                f"EF not converging: n={n} codec={spec} "
+                f"first={first_err:.3e} mean@{T}={mean_err:.3e}"
+            )
+    print(f"wire-codec EF telescoping ok (int8, topk:0.5; {T} steps, 2- and 8-shard axes)")
+
+
 def check_2d():
     x = jnp.arange(16 * 8 * 2, dtype=jnp.float32).reshape(16, 8, 2)
 
@@ -163,5 +231,6 @@ if __name__ == "__main__":
     check_packed_1d()
     check_packed_2d()
     check_adjoint()
+    check_wire_codec_adjoint()
     check_2d()
     print("HALO CHECK OK")

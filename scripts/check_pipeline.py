@@ -450,4 +450,67 @@ print(f"[batch-axis BN] loss err={lerr:.3e} grad maxerr={gerr:.3e}")
 assert lerr < 1e-5 * max(1.0, abs(float(ref_loss)))
 assert gerr < 1e-4
 
+# ---------------------------------------------------------------------------
+# Compressed wire (DESIGN.md §12): codec=none is byte-for-byte the legacy
+# jaxpr; int8 end-to-end training stays within 1e-2 of uncompressed on the
+# 2x2 mesh; and the jetson-edge planner shifts its grouping when the wire
+# gets 4x cheaper.
+# ---------------------------------------------------------------------------
+from repro.core.grouping import modeled_step_wire_bytes  # noqa: E402
+
+wargs = (params0, x.reshape(MB, B, H, W, 3), t.reshape((MB, B) + out_shape[1:]))
+wplan_none = build_stack_plan((H, W), LAYERS, 2, 2, wire_codec="none")
+assert wplan_none == plan_ref, "wire_codec='none' must build the identical plan"
+j_legacy = str(jax.make_jaxpr(
+    make_deferred_grad_step(plan_ref, mesh, l2_loss_local, microbatches=MB))(*wargs))
+j_none = str(jax.make_jaxpr(
+    make_deferred_grad_step(wplan_none, mesh, l2_loss_local, microbatches=MB))(*wargs))
+assert j_legacy == j_none, "codec=none must trace the byte-for-byte legacy jaxpr"
+print("[wire] codec=none: plan and deferred-step jaxpr byte-for-byte legacy")
+
+
+def _train_losses(codec, steps=6):
+    wplan = build_stack_plan((H, W), LAYERS, 2, 2, wire_codec=codec)
+    wstep = jax.jit(make_deferred_grad_step(wplan, mesh, l2_loss_local,
+                                            microbatches=MB))
+    p = params0
+    out = []
+    for _ in range(steps):
+        loss, grads = wstep(p, *wargs[1:])
+        p = jax.tree.map(lambda w, g: w - 1e-2 * g, p, grads)
+        out.append(float(loss))
+    return out
+
+
+w_none = _train_losses("none")
+w_int8 = _train_losses("int8")
+wdelta = abs(w_none[-1] - w_int8[-1])
+print(f"[wire] 6-step training: none={w_none[-1]:.5f} int8={w_int8[-1]:.5f} "
+      f"delta={wdelta:.3e}")
+assert wdelta <= 1e-2, "int8 wire must converge within 1e-2 of uncompressed"
+assert abs(w_none[0] - ref_loss) < 1e-5 * max(1.0, abs(float(ref_loss)))
+
+# planner shift: on the comm-bound jetson-edge profile an int8 wire makes
+# sync latency the binding cost, so the auto plan coarsens its grouping
+# (or moves the crossover) - and the modeled wire bytes drop >= 4x.
+g_wire_none = _opt((416, 416), YOLO16, 2, 2, JETSON_EDGE_PROFILE, batch=4,
+                   crossover="auto")
+g_wire_int8 = _opt((416, 416), YOLO16, 2, 2, JETSON_EDGE_PROFILE, batch=4,
+                   crossover="auto", wire_codec="int8")
+print(f"[wire] jetson-edge auto: none={[(g.start, g.end, g.mode) for g in g_wire_none]}")
+print(f"[wire] jetson-edge auto: int8={[(g.start, g.end, g.mode) for g in g_wire_int8]}")
+assert list(g_wire_int8) != list(g_wire_none), (
+    "int8 wire must shift the jetson-edge plan")
+assert (len(g_wire_int8) < len(g_wire_none)
+        or crossover_of(g_wire_int8) != crossover_of(g_wire_none)), (
+    "int8 must coarsen the grouping or move the crossover")
+wb_none = modeled_step_wire_bytes((416, 416), YOLO16, g_wire_none, 2, 2,
+                                  JETSON_EDGE_PROFILE, batch=4)["total"]
+wb_int8 = modeled_step_wire_bytes((416, 416), YOLO16, g_wire_none, 2, 2,
+                                  JETSON_EDGE_PROFILE, batch=4,
+                                  wire_codec="int8")["total"]
+print(f"[wire] modeled bytes/step on the none-plan: none={wb_none:.3e} "
+      f"int8={wb_int8:.3e} ratio={wb_none / wb_int8:.2f}x")
+assert wb_none / wb_int8 >= 4.0, "int8 must cut modeled wire bytes >= 4x"
+
 print("PIPELINE CHECK OK")

@@ -45,12 +45,16 @@ from repro.core.tiling import (
     validate_profile,
 )
 from repro.core.halo import (
+    EFBag,
+    WireCtx,
     axis_size,
     halo_exchange_2d,
     halo_exchange_2d_ragged,
     halo_exchange_2d_spec,
     static_table_lookup,
+    wire_shift,
 )
+from repro.optim.compression import get_codec
 from repro.core.backend import get_conv_backend
 from repro.core.spatial import (
     LayerDef,
@@ -127,6 +131,7 @@ class StackPlan:
     tile_cols: tuple[tuple[int, ...], ...] = ()
     ragged_exec: str = "spec"                    # non-uniform executor (DESIGN.md §9)
     stages: tuple[tuple[int, int], ...] = ()     # per pipeline stage: flat device range
+    wire_codec: str = "none"                     # per-sample collective codec (DESIGN.md §12)
 
     @property
     def n_layers(self) -> int:
@@ -206,6 +211,7 @@ def _resolve_crossover(
     schedule: str,
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
+    wire_codec: str = "none",
 ) -> tuple[Group, ...]:
     """Assign partition modes to an *explicit* grouping profile.
 
@@ -225,7 +231,7 @@ def _resolve_crossover(
         cand = tuple(apply_crossover(groups, c))
         cost = score_profile(
             input_hw, layers, cand, n, m, hw, batch, schedule, mem_limit,
-            partition=partition,
+            partition=partition, wire_codec=wire_codec,
         )
         if cost is None:
             continue
@@ -284,6 +290,7 @@ def build_stack_plan(
     ragged_exec: str = "spec",
     pipeline: int | str | None = None,
     microbatches: int = PIPELINE_MICROBATCHES,
+    wire_codec: str = "none",
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
 
@@ -349,6 +356,7 @@ def build_stack_plan(
         )
     if block_oh is not None and block_oh < 1:
         raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
+    get_codec(wire_codec)   # fail fast on bad codec specs (none | int8 | topk:<k>)
     layers = tuple(layers)
     check_pipeline_arg(pipeline, n, m, len(layers))
     if pipeline is not None:
@@ -389,6 +397,7 @@ def build_stack_plan(
                 batch=batch, schedule=schedule, crossover=crossover,
                 mem_limit=mem_limit, partition=partition,
                 pipeline=pipeline, microbatches=microbatches,
+                wire_codec=wire_codec,
             )
         )
     else:
@@ -399,7 +408,7 @@ def build_stack_plan(
         groups = _resolve_crossover(
             input_hw, layers, groups, crossover, n, m,
             hw if isinstance(hw, ClusterSpec) else resolve_hw_profile(hw),
-            batch, schedule, mem_limit, partition,
+            batch, schedule, mem_limit, partition, wire_codec,
         )
     validate_profile(groups, len(layers))
     cross = crossover_of(groups)
@@ -552,6 +561,7 @@ def build_stack_plan(
         tile_cols=tuple(tile_cols),
         ragged_exec=ragged_exec,
         stages=stages,
+        wire_codec=wire_codec,
     )
 
 
@@ -562,7 +572,8 @@ def build_stack_plan(
 
 _log = logging.getLogger("repro.core")
 
-PLAN_MANIFEST_VERSION = 1
+# v2 added "wire_codec" (DESIGN.md §12); v1 manifests read back as "none".
+PLAN_MANIFEST_VERSION = 2
 
 
 def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
@@ -599,6 +610,7 @@ def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
         "schedule": plan.schedule,
         "block_oh": plan.block_oh,
         "ragged_exec": plan.ragged_exec,
+        "wire_codec": plan.wire_codec,
         "cluster": None if cluster is None else cluster_manifest(cluster),
     }
 
@@ -626,6 +638,7 @@ def plan_from_manifest(man: dict) -> StackPlan:
         block_oh=man.get("block_oh"),
         partition=partition,
         ragged_exec=man.get("ragged_exec", "spec"),
+        wire_codec=man.get("wire_codec", "none"),
     )
 
 
@@ -693,6 +706,7 @@ def replan_stack(
             partition=partition,
             ragged_exec=plan.ragged_exec,
             pipeline=p if g == "auto" else None,
+            wire_codec=plan.wire_codec,
         )
 
     ladder = [(groups, crossover, pipeline)]
@@ -779,6 +793,7 @@ def _apply_group_ragged(
     col_axis: str,
     batch_axis: str | None,
     batch_global: int,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """One spatial group on a ragged (non-uniform partition) tile.
 
@@ -802,6 +817,7 @@ def _apply_group_ragged(
         plan.tile_cols[g.start],
         dims=(1, 2),
         out_extents=geom["ein"][0],
+        wire=wire,
     )
     for k, l in enumerate(g.layers):
         out_rows = plan.tile_rows[l + 1]
@@ -841,6 +857,7 @@ def _apply_group_spec(
     col_axis: str,
     batch_axis: str | None,
     batch_global: int,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """One spatial group on a shape-specialized ragged tile (DESIGN.md §9).
 
@@ -870,6 +887,7 @@ def _apply_group_spec(
         plan.tile_cols[g.start],
         dims=(1, 2),
         out_extents=geom["ein"][0],
+        wire=wire,
     )
     rtab, runiq = dedup_axis_shapes(plan.tile_rows[g.start])
     ctab, cuniq = dedup_axis_shapes(plan.tile_cols[g.start])
@@ -941,6 +959,7 @@ def apply_stack_local(
     col_axis: str = "tw",
     batch_axis: str | None = None,
     batch_global: int | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Forward through all groups on one tile.  ``x``: (b, h/n, w/m, c).
 
@@ -970,11 +989,12 @@ def apply_stack_local(
         if g.mode == "data":
             if gi == 0 or plan.groups[gi - 1].mode != "data":
                 if uniform:
-                    x = reshard_spatial_to_data(x, row_axis, col_axis)
+                    x = reshard_spatial_to_data(x, row_axis, col_axis, wire=wire)
                 else:
                     x = reshard_spatial_to_data_ragged(
                         x, row_axis, col_axis,
                         plan.tile_rows[g.start], plan.tile_cols[g.start],
+                        wire=wire,
                     )
             for l in g.layers:
                 x = apply_layer_data(
@@ -998,6 +1018,7 @@ def apply_stack_local(
                 x, params, plan, gi,
                 row_axis=row_axis, col_axis=col_axis,
                 batch_axis=batch_axis, batch_global=bg,
+                wire=wire,
             )
             continue
         layers = list(g.layers)
@@ -1018,9 +1039,12 @@ def apply_stack_local(
                 backend=plan.backend,
                 batch_axis=batch_axis,
                 block_oh=plan.block_oh,
+                wire=wire,
             )
         else:
-            x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
+            x = halo_exchange_2d(
+                x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2), wire=wire
+            )
         for l in layers:
             x = apply_layer_local(
                 x,
@@ -1220,14 +1244,18 @@ def pipeline_schedule_census(n_stages: int, microbatches: int) -> dict:
     }
 
 
-def _apply_spatial_prefix(params, x, plan: StackPlan, *, row_axis, col_axis, bg):
+def _apply_spatial_prefix(
+    params, x, plan: StackPlan, *, row_axis, col_axis, bg, wire=None
+):
     """The (possibly empty) spatial prefix of a pipeline plan - uniform
     sync executor only (pipeline plans forbid overlap and require uniform
     partitions, checked at build time)."""
     for gi, g in enumerate(plan.groups):
         if g.mode != "spatial":
             break
-        x = halo_exchange_2d(x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2))
+        x = halo_exchange_2d(
+            x, plan.group_halos[gi], row_axis, col_axis, dims=(1, 2), wire=wire
+        )
         for l in g.layers:
             x = apply_layer_local(
                 x,
@@ -1305,6 +1333,12 @@ def _make_pipeline_local(
     axis_kind, shift, axis_len = _stage_shift(plan)
     shift_axis = row_axis if axis_kind == "row" else col_axis
     perm = [(k, k + shift) for k in range(axis_len - shift)]
+    # The tick hand-off rides STATELESS compression both directions: an EF
+    # residual inside the tick scan would have its cotangents summed across
+    # ticks, breaking the one-residual-per-exchange bookkeeping (DESIGN.md
+    # §12); the spatial prefix's exchanges are stateless for the same reason.
+    codec = get_codec(plan.wire_codec)
+    wire = None if codec is None else WireCtx(codec, EFBag("stateless"))
 
     def _to_container(x):
         return jnp.pad(
@@ -1349,7 +1383,8 @@ def _make_pipeline_local(
             k0 = jnp.clip(t, 0, mb - 1)
             x_mu = lax.dynamic_index_in_dim(xs, k0, axis=0, keepdims=False)
             h = _apply_spatial_prefix(
-                params, x_mu, plan, row_axis=row_axis, col_axis=col_axis, bg=bg
+                params, x_mu, plan, row_axis=row_axis, col_axis=col_axis, bg=bg,
+                wire=wire,
             )
             h = lax.all_gather(h, row_axis, axis=1, tiled=True)
             h = lax.all_gather(h, col_axis, axis=2, tiled=True)
@@ -1366,7 +1401,7 @@ def _make_pipeline_local(
             valid = jnp.logical_and(jnp.equal(stage, n_st - 1), t >= n_st - 1)
             s_acc = s_acc + jnp.where(valid, s_l, 0.0)
             c_acc = c_acc + jnp.where(valid, c_l, 0.0)
-            buf = lax.ppermute(out, shift_axis, perm)
+            buf = wire_shift(out, shift_axis, perm, wire)
             return (buf, s_acc, c_acc), None
 
         buf0 = jnp.zeros((bp, hc, wc, cc), xs.dtype)
@@ -1378,6 +1413,15 @@ def _make_pipeline_local(
         return s_tot, c_tot
 
     return local_fn
+
+
+def _stateless_wire(plan: StackPlan) -> WireCtx | None:
+    """Wire ctx for paths with no EF carry (single-shot forward/loss, the
+    pipeline tick): residuals are zeros constants, so compression is
+    stateless.  ``None`` for codec=none - every call site then runs the
+    legacy collective byte-for-byte."""
+    codec = get_codec(plan.wire_codec)
+    return None if codec is None else WireCtx(codec, EFBag("stateless"))
 
 
 def make_tiled_forward(
@@ -1426,6 +1470,7 @@ def make_tiled_forward(
         col_axis=col_axis,
         batch_axis=batch_axis,
         batch_global=batch_global,
+        wire=_stateless_wire(plan),
     )
 
     def fn(params, x):
@@ -1560,6 +1605,7 @@ def make_tiled_loss(
         tspec = _out_spec(plan, row_axis, col_axis, batch_axis)
     axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
     ragged_out = not plan.is_uniform and plan.crossover is None and not spec_exec
+    wire = _stateless_wire(plan)
 
     def fn(params, x, target):
         if spec_exec:
@@ -1570,6 +1616,7 @@ def make_tiled_loss(
             params, x, plan,
             row_axis=row_axis, col_axis=col_axis,
             batch_axis=batch_axis, batch_global=batch_global,
+            wire=wire,
         )
         if spec_exec and plan.crossover is None:
             s, c = _spec_core_loss(y, target, plan, loss_local, row_axis, col_axis)
@@ -1692,7 +1739,9 @@ def make_deferred_grad_step(
     tile_axes = (row_axis, col_axis) if batch_axis is None else (batch_axis, row_axis, col_axis)
     ragged_out = not plan.is_uniform and plan.crossover is None and not spec_exec
 
-    def local_loss(params, x, t):
+    codec = get_codec(plan.wire_codec)
+
+    def local_loss(params, x, t, wire=None):
         if spec_exec:
             x = _shard_pack_grid(
                 x, plan.tile_rows[0], plan.tile_cols[0], row_axis, col_axis
@@ -1701,6 +1750,7 @@ def make_deferred_grad_step(
             params, x, plan,
             row_axis=row_axis, col_axis=col_axis,
             batch_axis=batch_axis, batch_global=batch_global,
+            wire=wire,
         )
         if spec_exec and plan.crossover is None:
             s, c = _spec_core_loss(y, t, plan, loss_local, row_axis, col_axis)
@@ -1712,25 +1762,73 @@ def make_deferred_grad_step(
         # gradient aggregation (linearity), matching the paper's schedule.
         return s, c
 
-    def fn(params, xs, ts):
-        def step(carry, xt):
-            acc, loss_acc, cnt_acc = carry
-            x, t = xt
-            (s, c), g = jax.value_and_grad(local_loss, has_aux=True)(params, x, t)
+    if codec is None:
 
-            def _upd(a, b):
-                return a + b
+        def fn(params, xs, ts):
+            def step(carry, xt):
+                acc, loss_acc, cnt_acc = carry
+                x, t = xt
+                (s, c), g = jax.value_and_grad(local_loss, has_aux=True)(params, x, t)
 
-            acc = jax.tree.map(_upd, acc, g)
-            return (acc, loss_acc + s, cnt_acc + c), None
+                def _upd(a, b):
+                    return a + b
 
-        zeros = jax.tree.map(jnp.zeros_like, params)
-        (acc, loss_sum, cnt), _ = lax.scan(step, (zeros, 0.0, 0.0), (xs, ts))
-        # The single end-of-batch aggregation (partial sums -> final grads).
-        cnt_g = lax.psum(cnt, tile_axes)
-        grads = jax.tree.map(lambda a: lax.psum(a, tile_axes) / cnt_g, acc)
-        loss = lax.psum(loss_sum, tile_axes) / cnt_g
-        return loss, grads
+                acc = jax.tree.map(_upd, acc, g)
+                return (acc, loss_acc + s, cnt_acc + c), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (acc, loss_sum, cnt), _ = lax.scan(step, (zeros, 0.0, 0.0), (xs, ts))
+            # The single end-of-batch aggregation (partial sums -> final grads).
+            cnt_g = lax.psum(cnt, tile_axes)
+            grads = jax.tree.map(lambda a: lax.psum(a, tile_axes) / cnt_g, acc)
+            loss = lax.psum(loss_sum, tile_axes) / cnt_g
+            return loss, grads
+
+    else:
+        # Compressed wire: the backward cotangents of every recurring
+        # exchange ride error feedback, and the residual buffers are
+        # EXPLICIT scan carry - taken apart into a flat tuple whose layout
+        # is discovered by an abstract probe (jax.eval_shape adds no ops),
+        # handed to each microbatch's trace in deterministic order, and
+        # returned as the gradient w.r.t. the residual argument by the
+        # custom-VJP shifts (DESIGN.md §12).  Residuals accumulate across
+        # the microbatches of one batch and start at zero each step.
+
+        def local_loss_ef(params, ef, x, t):
+            bag = EFBag("buffers", ef)
+            return local_loss(params, x, t, wire=WireCtx(codec, bag))
+
+        def fn(params, xs, ts):
+            bag_c = EFBag("collect")
+
+            def probe(p, x, t):
+                return local_loss(p, x, t, wire=WireCtx(codec, bag_c))[0]
+
+            jax.eval_shape(
+                probe,
+                params,
+                jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype),
+                jax.ShapeDtypeStruct(ts.shape[1:], ts.dtype),
+            )
+            ef0 = tuple(jnp.zeros(s, d) for s, d in bag_c.shapes)
+
+            def step(carry, xt):
+                acc, ef, loss_acc, cnt_acc = carry
+                x, t = xt
+                (s, c), (g, new_ef) = jax.value_and_grad(
+                    local_loss_ef, argnums=(0, 1), has_aux=True
+                )(params, ef, x, t)
+                acc = jax.tree.map(lambda a, b: a + b, acc, g)
+                return (acc, new_ef, loss_acc + s, cnt_acc + c), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (acc, _, loss_sum, cnt), _ = lax.scan(
+                step, (zeros, ef0, 0.0, 0.0), (xs, ts)
+            )
+            cnt_g = lax.psum(cnt, tile_axes)
+            grads = jax.tree.map(lambda a: lax.psum(a, tile_axes) / cnt_g, acc)
+            loss = lax.psum(loss_sum, tile_axes) / cnt_g
+            return loss, grads
 
     mapped = shard_map(
         fn,

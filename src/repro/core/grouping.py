@@ -39,6 +39,7 @@ import re
 from typing import Sequence
 
 from repro.core.spatial import LayerDef, split_1d
+from repro.optim.compression import modeled_wire_bytes
 from repro.core.tiling import (
     Group,
     TilePartition,
@@ -67,6 +68,41 @@ PIPELINE_MICROBATCHES = 8
 #: skews are free - the balancer's objective is unchanged, but grouping/
 #: crossover scoring sees the executor's real padding bill.
 SPEC_PAD_MACS = 2.0
+
+#: MAC-equivalents charged per element for a wire codec's quantize +
+#: dequantize passes (abs-max scan, round, rescale - a few streaming ops on
+#: each side of the link).  Every compressed comm term adds
+#: ``2 * elems * QDQ_MACS / flops`` (encode the send + decode the receive)
+#: next to its byte term, so a codec is never modeled as free: on fat links
+#: the QDQ tax exceeds the byte savings and the planner correctly leaves
+#: the wire uncompressed.
+QDQ_MACS = 8.0
+
+
+def _hw_flops(hw: "HardwareProfile | ClusterSpec") -> float:
+    """Per-device MAC rate the QDQ compute charge is priced at - the
+    conservative (slowest-device) scalar for clusters, matching the other
+    plan-level collective terms."""
+    return hw.min_flops if isinstance(hw, ClusterSpec) else hw.flops
+
+
+def _xfer_seconds(
+    n_elems: float, dtype_bytes: int, bw: float, flops: float, wire_codec: str
+) -> float:
+    """Seconds to push ``n_elems`` across a ``bw``-byte/s link under
+    ``wire_codec``: compressed wire bytes (``modeled_wire_bytes``) plus the
+    encode/decode compute at ``flops``.  The single routine every comm term
+    (halo boundary, reshard, weight aggregation, pipeline hand-off) prices
+    bytes through, so the codec discount can never apply to one wire and
+    not another.  The ``"none"`` branch reproduces the legacy expression
+    exactly - codec-free plans cost (and therefore plan) identically to
+    pre-codec builds."""
+    if wire_codec == "none":
+        return n_elems * dtype_bytes / bw
+    return (
+        modeled_wire_bytes(n_elems, dtype_bytes, wire_codec) / bw
+        + 2.0 * n_elems * QDQ_MACS / flops
+    )
 
 
 def _check_schedule(schedule: str) -> None:
@@ -598,6 +634,7 @@ def _group_cost(
     batch: int,
     schedule: str = "sync",
     mode: str = "spatial",
+    wire_codec: str = "none",
 ) -> tuple[float, float, float, float]:
     """(compute_s, boundary_s, sync_s, hidden_s) for group [s, e] per cycle.
 
@@ -656,7 +693,9 @@ def _group_cost(
     halo_elems = (core_h + halo_lo[0] + halo_hi[0]) * (core_w + halo_lo[0] + halo_hi[0]) - core_h * core_w
     # fwd boundary + bwd boundary (delta halo ~ same width; paper §4.2 notes
     # wgrad reuses the fwd halo so it adds no traffic)
-    boundary_s = batch * 2 * halo_elems * cin * hw.dtype_bytes / hw.link_bw
+    boundary_s = batch * 2 * _xfer_seconds(
+        halo_elems * cin, hw.dtype_bytes, hw.link_bw, hw.flops, wire_codec
+    )
     sync_s = batch * 2 * hw.sync_latency
 
     hidden_s = 0.0
@@ -688,6 +727,7 @@ def _group_cost_cluster(
     cluster: ClusterSpec,
     batch: int,
     mode: str = "spatial",
+    wire_codec: str = "none",
 ) -> tuple[float, float, float, float]:
     """Heterogeneous-cluster group cost: per-*device* times from each
     device's own tile extents (the partition's boundary arrays) and its own
@@ -751,7 +791,9 @@ def _group_cost_cluster(
                 (ch + halo_lo[0] + halo_hi[0]) * (cw + halo_lo[0] + halo_hi[0])
                 - ch * cw
             )
-            boundary_ij = batch * 2 * halo_elems * cin * db / p.link_bw
+            boundary_ij = batch * 2 * _xfer_seconds(
+                halo_elems * cin, db, p.link_bw, p.flops, wire_codec
+            )
             comp_max = max(comp_max, compute_ij)
             bound_max = max(bound_max, boundary_ij)
             tot_max = max(tot_max, compute_ij + boundary_ij)
@@ -773,12 +815,17 @@ def _group_halo_lohi(layers: Sequence[LayerDef], s: int, e: int) -> tuple[int, i
 
 
 def _any_group_cost(
-    layers, ext, tiles, s, e, n, m, hw, batch, schedule, mode="spatial"
+    layers, ext, tiles, s, e, n, m, hw, batch, schedule, mode="spatial",
+    wire_codec="none",
 ) -> tuple[float, float, float, float]:
     """Dispatch: homogeneous symmetric-tile model vs cluster makespan model."""
     if isinstance(hw, ClusterSpec):
-        return _group_cost_cluster(layers, ext, tiles, s, e, hw, batch, mode)
-    return _group_cost(layers, ext, s, e, n, m, hw, batch, schedule, mode)
+        return _group_cost_cluster(
+            layers, ext, tiles, s, e, hw, batch, mode, wire_codec
+        )
+    return _group_cost(
+        layers, ext, s, e, n, m, hw, batch, schedule, mode, wire_codec
+    )
 
 
 def _filter_bytes(layers: Sequence[LayerDef], idxs, dtype_bytes: int) -> float:
@@ -791,7 +838,7 @@ def _filter_bytes(layers: Sequence[LayerDef], idxs, dtype_bytes: int) -> float:
 
 def _reshard_cost(
     ext, cross: int | None, layers: Sequence[LayerDef], tiles: int,
-    hw: HardwareProfile, batch: int,
+    hw: HardwareProfile, batch: int, wire_codec: str = "none",
 ) -> float:
     """One spatial->data reshard per sample per direction: the forward
     all-gather of the tile grid into full maps and its backward adjoint
@@ -801,10 +848,11 @@ def _reshard_cost(
         return 0.0
     h, w = ext[cross]
     ch = max(layers[cross].in_channels, 1)
-    map_bytes = h * w * ch * hw.dtype_bytes
-    return batch * (
-        2.0 * map_bytes * (tiles - 1) / tiles / hw.link_bw + 2.0 * hw.sync_latency
+    xfer = _xfer_seconds(
+        h * w * ch * (tiles - 1) / tiles, hw.dtype_bytes, hw.link_bw,
+        _hw_flops(hw), wire_codec,
     )
+    return batch * (2.0 * xfer + 2.0 * hw.sync_latency)
 
 
 # ---------------------------------------------------------------------------
@@ -903,6 +951,7 @@ def stage_cost(
     hw: HardwareProfile | ClusterSpec,
     batch: int,
     first_stage: bool,
+    wire_codec: str = "none",
 ) -> tuple[float, float]:
     """(compute_s, transfer_s) of one pipeline stage per batch, per device:
     each of the stage's ``stage_size`` devices computes ``ceil(batch /
@@ -915,8 +964,8 @@ def stage_cost(
     if not first_stage:
         h, w = ext[g.start]
         cin = max(layers[g.start].in_channels, 1)
-        xfer = (
-            -(-batch // stage_size) * 2.0 * h * w * cin * hw.dtype_bytes / hw.link_bw
+        xfer = -(-batch // stage_size) * 2.0 * _xfer_seconds(
+            h * w * cin, hw.dtype_bytes, hw.link_bw, _hw_flops(hw), wire_codec
         )
     return comp, xfer
 
@@ -930,6 +979,7 @@ def _pipeline_tail_cost(
     hw: HardwareProfile | ClusterSpec,
     batch: int,
     microbatches: int,
+    wire_codec: str = "none",
 ) -> tuple[float, float, float, float]:
     """(compute, boundary, sync, bubble) of a pipeline tail per batch.
 
@@ -946,7 +996,8 @@ def _pipeline_tail_cost(
     comp_max = xfer_max = 0.0
     for k, g in enumerate(pipe_groups):
         comp, xfer = stage_cost(
-            layers, ext, g, stage_size=p, hw=hw, batch=batch, first_stage=(k == 0)
+            layers, ext, g, stage_size=p, hw=hw, batch=batch,
+            first_stage=(k == 0), wire_codec=wire_codec,
         )
         comp_max = max(comp_max, comp)
         xfer_max = max(xfer_max, xfer)
@@ -966,6 +1017,7 @@ def balance_stages(
     stage_size: int,
     hw: HardwareProfile | ClusterSpec,
     batch: int,
+    wire_codec: str = "none",
 ) -> list[Group]:
     """Split layers [start, end) into ``stages`` contiguous pipeline groups
     minimising the modeled makespan (max per-stage compute + transfer-in) -
@@ -985,6 +1037,7 @@ def balance_stages(
         c, x = stage_cost(
             layers, ext, Group(s, e, "pipeline"),
             stage_size=stage_size, hw=hw, batch=batch, first_stage=first,
+            wire_codec=wire_codec,
         )
         return c + x
 
@@ -1023,9 +1076,19 @@ def profile_cost(
     *,
     partition: TilePartition | None = None,
     microbatches: int = PIPELINE_MICROBATCHES,
+    wire_codec: str = "none",
 ) -> dict:
     """Total cycle cost split by component for a (possibly hybrid) grouping
     profile - per-group modes are read off the groups themselves.
+
+    ``wire_codec`` prices every traffic term (halo boundary, reshard,
+    pipeline hand-off, weight aggregation) through ``_xfer_seconds`` -
+    compressed wire bytes plus the per-element quantize/dequantize compute
+    - so planning under ``--wire-codec int8`` sees the cheaper wire and
+    shifts the grouping/crossover the way the executor's codec actually
+    changes the trade.  The weight term is included because the batch-end
+    gradient all-reduce rides the same codec family
+    (``optim.compress_with_feedback``).
 
     Under ``schedule="overlap"`` the ``hidden`` component (boundary time
     overlapped with interior compute) is subtracted from the total.
@@ -1062,7 +1125,7 @@ def profile_cost(
             continue
         c, b, s_, h = _any_group_cost(
             layers, ext, tiles_rc, g.start, g.end, n, m, hw, batch, schedule,
-            mode=g.mode,
+            mode=g.mode, wire_codec=wire_codec,
         )
         compute += c
         boundary += b
@@ -1070,7 +1133,7 @@ def profile_cost(
         hidden += h
     if pipe_groups:
         c, b, s_, bub = _pipeline_tail_cost(
-            layers, ext, pipe_groups, n, m, hw, batch, microbatches
+            layers, ext, pipe_groups, n, m, hw, batch, microbatches, wire_codec
         )
         compute += c
         boundary += b
@@ -1079,11 +1142,20 @@ def profile_cost(
     tiles = n * m
     cross = crossover_of(groups)
     widx = range(len(layers)) if cross is None else range(cross, len(layers))
-    wbytes = _filter_bytes(layers, widx, hw.dtype_bytes)
-    weights = 2.0 * wbytes * (tiles - 1) / tiles / hw.agg_bw + hw.sync_latency
+    welems = _filter_bytes(layers, widx, 1)
+    if wire_codec == "none":
+        weights = (
+            2.0 * welems * hw.dtype_bytes * (tiles - 1) / tiles / hw.agg_bw
+            + hw.sync_latency
+        )
+    else:
+        weights = 2.0 * _xfer_seconds(
+            welems * (tiles - 1) / tiles, hw.dtype_bytes, hw.agg_bw,
+            _hw_flops(hw), wire_codec,
+        ) + hw.sync_latency
     # The pipeline entry all-gathers the tile grid exactly like the data
     # crossover (same bytes on the wire), so both charge the same term.
-    reshard = _reshard_cost(ext, tail, layers, tiles, hw, batch)
+    reshard = _reshard_cost(ext, tail, layers, tiles, hw, batch, wire_codec)
     total = compute + boundary + sync + weights + reshard + bubble - hidden
     return {
         "compute": compute,
@@ -1094,6 +1166,84 @@ def profile_cost(
         "hidden": hidden,
         "bubble": bubble,
         "total": total,
+    }
+
+
+def modeled_step_wire_bytes(
+    input_hw: tuple[int, int],
+    layers: Sequence[LayerDef],
+    groups: Sequence[Group],
+    n: int,
+    m: int,
+    hw: HardwareProfile | ClusterSpec,
+    batch: int = 1,
+    wire_codec: str = "none",
+) -> dict:
+    """Modeled bytes on the wire per training step (one ``batch``) under
+    ``wire_codec``, split by traffic family - ``profile_cost``'s comm terms
+    with the time divisors stripped.  The quantity behind the bench's
+    ``bytes_per_step`` column and the int8 >= 4x wire-savings assertion:
+    byte counts (unlike seconds) are independent of link speeds, so the
+    none-vs-codec ratio isolates exactly what the codec buys.
+
+      halo      2x per-group-input halo strip per sample (fwd + bwd)
+      reshard   2x (T-1)/T of the crossover map per sample (all-gather +
+                adjoint reduce-scatter)
+      weights   2x (T-1)/T of the replicated filter set per batch (ring
+                all-reduce of the gradients, which ride the same codec via
+                ``optim.compress_with_feedback``)
+      pipeline  2x each non-first stage's input activations per microbatch
+                (tick hand-off + its adjoint)
+    """
+    ext = _map_extents(input_hw, layers)
+    tiles = n * m
+    halo = 0.0
+    for g in groups:
+        if g.mode != "spatial":
+            continue
+        halo_lo, halo_hi = _halo_widths(layers, g.start, g.end)
+        ih, iw = ext[g.start]
+        cin = max(layers[g.start].in_channels, 1)
+        core_h, core_w = ih // n, iw // m
+        halo_elems = (
+            (core_h + halo_lo[0] + halo_hi[0]) * (core_w + halo_lo[0] + halo_hi[0])
+            - core_h * core_w
+        )
+        halo += batch * 2.0 * modeled_wire_bytes(
+            halo_elems * cin, hw.dtype_bytes, wire_codec
+        )
+    tail = _tail_start(groups)
+    reshard = 0.0
+    if tail is not None and tiles > 1:
+        h, w = ext[tail]
+        ch = max(layers[tail].in_channels, 1)
+        reshard = batch * 2.0 * modeled_wire_bytes(
+            h * w * ch * (tiles - 1) / tiles, hw.dtype_bytes, wire_codec
+        )
+    cross = crossover_of(groups)
+    widx = range(len(layers)) if cross is None else range(cross, len(layers))
+    welems = _filter_bytes(layers, widx, 1)
+    weights = 2.0 * modeled_wire_bytes(
+        welems * (tiles - 1) / tiles, hw.dtype_bytes, wire_codec
+    )
+    pipe_groups = [g for g in groups if g.mode == "pipeline"]
+    pipeline = 0.0
+    if pipe_groups:
+        p = tiles // len(pipe_groups)
+        for k, g in enumerate(pipe_groups):
+            if k == 0:
+                continue
+            h, w = ext[g.start]
+            cin = max(layers[g.start].in_channels, 1)
+            pipeline += -(-batch // p) * 2.0 * modeled_wire_bytes(
+                h * w * cin, hw.dtype_bytes, wire_codec
+            )
+    return {
+        "halo": halo,
+        "reshard": reshard,
+        "weights": weights,
+        "pipeline": pipeline,
+        "total": halo + reshard + weights + pipeline,
     }
 
 
@@ -1267,6 +1417,7 @@ def score_profile(
     mem_limit: float | None = None,
     partition: TilePartition | None = None,
     microbatches: int = PIPELINE_MICROBATCHES,
+    wire_codec: str = "none",
 ) -> float | None:
     """Modeled cycle total for a candidate profile, or None when its
     ``peak_device_memory`` total exceeds ``mem_limit``.  The single scoring
@@ -1290,7 +1441,7 @@ def score_profile(
             return None
     return profile_cost(
         input_hw, layers, groups, n, m, hw, batch, schedule, partition=partition,
-        microbatches=microbatches,
+        microbatches=microbatches, wire_codec=wire_codec,
     )["total"]
 
 
@@ -1308,6 +1459,7 @@ def optimize_grouping(
     partition: TilePartition | None = None,
     pipeline: int | str | None = None,
     microbatches: int = PIPELINE_MICROBATCHES,
+    wire_codec: str = "none",
 ) -> list[Group]:
     """DP over group boundaries minimising modelled cycle time, optionally
     jointly with the spatial->data crossover layer.
@@ -1391,7 +1543,8 @@ def optimize_grouping(
                 ):
                     continue
             c, b, y, h = _any_group_cost(
-                layers, ext, tiles_rc, s - 1, e - 1, n, m, hw, batch, schedule
+                layers, ext, tiles_rc, s - 1, e - 1, n, m, hw, batch, schedule,
+                wire_codec=wire_codec,
             )
             if mem_limit is not None:
                 # necessary condition: one group's own working set must fit
@@ -1423,7 +1576,7 @@ def optimize_grouping(
         groups = backtrack(L)
         if (
             score_profile(input_hw, layers, groups, n, m, hw, batch, schedule,
-                          mem_limit, partition=partition)
+                          mem_limit, partition=partition, wire_codec=wire_codec)
             is None
         ):
             raise ValueError(
@@ -1458,6 +1611,7 @@ def optimize_grouping(
             cost = score_profile(
                 input_hw, layers, groups, n, m, hw, batch, schedule, mem_limit,
                 partition=partition, microbatches=microbatches,
+                wire_codec=wire_codec,
             )
             if cost is None:
                 continue
@@ -1483,11 +1637,13 @@ def optimize_grouping(
                 stages = balance_stages(
                     layers, ext, c, L, s_count,
                     stage_size=(n * m) // s_count, hw=hw, batch=batch,
+                    wire_codec=wire_codec,
                 )
                 groups = prefix + stages
                 cost = score_profile(
                     input_hw, layers, groups, n, m, hw, batch, schedule,
                     mem_limit, partition=partition, microbatches=microbatches,
+                    wire_codec=wire_codec,
                 )
                 if cost is None:
                     continue

@@ -16,9 +16,14 @@ present in the mesh.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.optim.compression import WireCodec, ef_encode
 
 
 def axis_size(axis_name: str) -> int:
@@ -43,6 +48,120 @@ def _shift_perm(n: int, direction: int) -> list[tuple[int, int]]:
     raise ValueError(direction)
 
 
+# ---------------------------------------------------------------------------
+# Wire compression (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class EFBag:
+    """Dispenser of error-feedback residual buffers for the recurring
+    exchanges of one step trace, in deterministic trace order.
+
+    Modes: ``stateless`` hands out fresh zeros (forward-only paths and
+    ``make_tiled_loss`` - no EF carry, every microbatch starts clean);
+    ``collect`` additionally records each requested (shape, dtype) so the
+    deferred-grad builder can discover the EF carry layout with one
+    ``jax.eval_shape`` probe; ``buffers`` hands out the supplied arrays in
+    the same deterministic order (the scan's EF carry).  ``emitted``
+    collects residuals produced *eagerly* (``send_boundary_sum_1d``'s
+    primal-direction EF) - the custom-VJP shifts instead return theirs as
+    the cotangent of the residual argument.
+    """
+
+    def __init__(self, mode: str = "stateless", buffers=None):
+        if mode not in ("stateless", "collect", "buffers"):
+            raise ValueError(mode)
+        self.mode = mode
+        self.shapes: list[tuple[tuple[int, ...], Any]] = []
+        self.buffers = list(buffers) if buffers is not None else None
+        self.emitted: list[jax.Array] = []
+        self._i = 0
+
+    def take(self, shape, dtype=jnp.float32) -> jax.Array:
+        shape = tuple(shape)
+        if self.mode == "collect":
+            self.shapes.append((shape, dtype))
+            return jnp.zeros(shape, dtype)
+        if self.mode == "buffers":
+            if self._i >= len(self.buffers):
+                raise ValueError(
+                    f"EF bag exhausted after {len(self.buffers)} buffers: the "
+                    "collect probe and the real trace drew different exchange "
+                    "counts (non-deterministic trace order?)"
+                )
+            buf = self.buffers[self._i]
+            self._i += 1
+            if tuple(buf.shape) != shape:
+                raise ValueError(
+                    f"EF buffer {self._i - 1} shape {buf.shape} != requested "
+                    f"{shape}: collect/trace order drifted"
+                )
+            return buf
+        return jnp.zeros(shape, dtype)
+
+    def emit(self, new_res: jax.Array) -> None:
+        self.emitted.append(new_res)
+
+
+@dataclasses.dataclass
+class WireCtx:
+    """Codec + residual dispenser threaded through the tiled executors down
+    to every collective call site.  ``None`` everywhere means uncompressed -
+    the legacy code paths run byte-for-byte unchanged."""
+
+    codec: WireCodec
+    bag: EFBag
+
+
+def _tree_ppermute(payload, axis_name: str, perm):
+    return jax.tree.map(lambda p: lax.ppermute(p, axis_name, perm), payload)
+
+
+def wire_shift(x: jax.Array, axis_name: str, perm, wire: WireCtx | None) -> jax.Array:
+    """``lax.ppermute`` with optional wire compression.
+
+    ``wire=None`` is *literally* ``lax.ppermute`` - codec=none plans keep
+    the legacy jaxpr byte-for-byte.  Otherwise the strip is encoded, each
+    payload leaf rides its own ppermute (static shapes, zero payloads decode
+    to zeros so the edge-delivery convention survives), and the receiver
+    decodes.  The forward is stateless: halo strips are activations, a
+    fresh value every microbatch, so there is no recurring signal for EF to
+    cancel against.  The backward is a custom rule - the straight-line
+    transpose would differentiate through ``round``/``top_k`` and kill the
+    gradient - shipping the cotangent over the transposed perm under error
+    feedback: the residual buffer comes from the ctx's bag (it lives on the
+    forward receiver == the backward sender), and the NEW residual leaves
+    the rule as the cotangent of the residual argument, which the
+    deferred-grad scan carries across microbatches (DESIGN.md §12).
+    """
+    if wire is None:
+        return lax.ppermute(x, axis_name, perm)
+    res = wire.bag.take(x.shape)
+    return _wire_shift_ef(x, res, axis_name, tuple(perm), wire.codec)
+
+
+def _wire_shift_ef(x, res, axis_name, perm, codec: WireCodec):
+    inv = tuple((d, s) for (s, d) in perm)
+
+    @jax.custom_vjp
+    def shift(x, res):
+        payload = codec.encode(x)
+        recv = _tree_ppermute(payload, axis_name, perm)
+        return codec.decode(recv, x.shape, x.dtype)
+
+    def fwd(x, res):
+        return shift(x, res), res
+
+    def bwd(res, ct):
+        payload, new_res = ef_encode(codec, ct, res)
+        recv = _tree_ppermute(payload, axis_name, inv)
+        ct_x = codec.decode(recv, ct.shape, ct.dtype)
+        return ct_x, new_res
+
+    shift.defvjp(fwd, bwd)
+    return shift(x, res)
+
+
 def halo_exchange_1d(
     x: jax.Array,
     halo_lo: int,
@@ -50,6 +169,7 @@ def halo_exchange_1d(
     axis_name: str,
     *,
     dim: int = 0,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Extend ``x`` along ``dim`` with ``halo_lo`` rows from the previous
     shard and ``halo_hi`` rows from the next shard (zeros at the ends).
@@ -61,12 +181,12 @@ def halo_exchange_1d(
     if halo_lo > 0:
         # strip the *previous* shard must send us: its last halo_lo rows
         send_up = lax.slice_in_dim(x, x.shape[dim] - halo_lo, x.shape[dim], axis=dim)
-        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+        recv_lo = wire_shift(send_up, axis_name, _shift_perm(n, +1), wire)
         parts.append(recv_lo)
     parts.append(x)
     if halo_hi > 0:
         send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
-        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+        recv_hi = wire_shift(send_down, axis_name, _shift_perm(n, -1), wire)
         parts.append(recv_hi)
     if len(parts) == 1:
         return x
@@ -80,6 +200,7 @@ def halo_exchange_2d(
     col_axis: str,
     *,
     dims: tuple[int, int] = (0, 1),
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """2-D halo exchange (paper Fig. 4).
 
@@ -89,8 +210,8 @@ def halo_exchange_2d(
     8 neighbours.
     """
     top, bottom, left, right = halo
-    y = halo_exchange_1d(x, top, bottom, row_axis, dim=dims[0])
-    y = halo_exchange_1d(y, left, right, col_axis, dim=dims[1])
+    y = halo_exchange_1d(x, top, bottom, row_axis, dim=dims[0], wire=wire)
+    y = halo_exchange_1d(y, left, right, col_axis, dim=dims[1], wire=wire)
     return y
 
 
@@ -107,6 +228,7 @@ def halo_exchange_1d_packed(
     axis_name: str,
     *,
     dim: int = 0,
+    wire: WireCtx | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Packed halo exchange: returns ``(recv_lo, recv_hi)`` strips *without*
     concatenating them onto ``x``, so the caller can schedule interior
@@ -132,7 +254,7 @@ def halo_exchange_1d_packed(
             ],
             dimension=dim,
         )
-        recv = lax.ppermute(send, axis_name, [(0, 1), (1, 0)])
+        recv = wire_shift(send, axis_name, [(0, 1), (1, 0)], wire)
         idx = lax.axis_index(axis_name)
         recv_lo = lax.slice_in_dim(recv, 0, halo_lo, axis=dim)
         recv_hi = lax.slice_in_dim(recv, halo_lo, halo_lo + halo_hi, axis=dim)
@@ -144,12 +266,12 @@ def halo_exchange_1d_packed(
     # un-concatenated return (interior compute stays independent).
     if halo_lo > 0:
         send_up = lax.slice_in_dim(x, x.shape[dim] - halo_lo, x.shape[dim], axis=dim)
-        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+        recv_lo = wire_shift(send_up, axis_name, _shift_perm(n, +1), wire)
     else:
         recv_lo = _zeros_strip(x, 0, dim)
     if halo_hi > 0:
         send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
-        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+        recv_hi = wire_shift(send_down, axis_name, _shift_perm(n, -1), wire)
     else:
         recv_hi = _zeros_strip(x, 0, dim)
     return recv_lo, recv_hi
@@ -162,6 +284,7 @@ def halo_exchange_2d_packed(
     col_axis: str,
     *,
     dims: tuple[int, int] = (0, 1),
+    wire: WireCtx | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Packed 2-D halo exchange for the overlap schedule.
 
@@ -173,7 +296,9 @@ def halo_exchange_2d_packed(
     callers overlapping compute consume only what each region needs.
     """
     top, bottom, left, right = halo
-    row_lo, row_hi = halo_exchange_1d_packed(x, top, bottom, row_axis, dim=dims[0])
+    row_lo, row_hi = halo_exchange_1d_packed(
+        x, top, bottom, row_axis, dim=dims[0], wire=wire
+    )
     parts = []
     if top > 0:
         parts.append(row_lo)
@@ -181,7 +306,9 @@ def halo_exchange_2d_packed(
     if bottom > 0:
         parts.append(row_hi)
     x_rows = lax.concatenate(parts, dimension=dims[0]) if len(parts) > 1 else x
-    col_lo, col_hi = halo_exchange_1d_packed(x_rows, left, right, col_axis, dim=dims[1])
+    col_lo, col_hi = halo_exchange_1d_packed(
+        x_rows, left, right, col_axis, dim=dims[1], wire=wire
+    )
     return x_rows, col_lo, col_hi
 
 
@@ -201,6 +328,7 @@ def halo_exchange_1d_ragged(
     *,
     dim: int = 0,
     out_extent: int | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Halo exchange over *ragged* shards in padded-to-max layout
     (DESIGN.md §8).
@@ -239,11 +367,11 @@ def halo_exchange_1d_ragged(
     h_i = jnp.asarray(sizes, jnp.int32)[lax.axis_index(axis_name)]
     if halo_hi > 0:
         send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
-        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+        recv_hi = wire_shift(send_down, axis_name, _shift_perm(n, -1), wire)
         out = _update_in_dim(out, recv_hi, halo_lo + h_i, dim)
     if halo_lo > 0:
         send_up = lax.dynamic_slice_in_dim(x, h_i - halo_lo, halo_lo, axis=dim)
-        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+        recv_lo = wire_shift(send_up, axis_name, _shift_perm(n, +1), wire)
         out = _update_in_dim(out, recv_lo, 0, dim)
     return out
 
@@ -258,6 +386,7 @@ def halo_exchange_2d_ragged(
     *,
     dims: tuple[int, int] = (0, 1),
     out_extents: tuple[int, int] | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """2-D ragged halo exchange: rows first, then columns over the
     row-extended array so corner strips ride the second round (same ordering
@@ -267,10 +396,10 @@ def halo_exchange_2d_ragged(
     top, bottom, left, right = halo
     oe = out_extents or (None, None)
     y = halo_exchange_1d_ragged(
-        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0]
+        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0], wire=wire
     )
     y = halo_exchange_1d_ragged(
-        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1]
+        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1], wire=wire
     )
     return y
 
@@ -306,6 +435,7 @@ def halo_exchange_1d_spec(
     *,
     dim: int = 0,
     out_extent: int | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Shape-specialized halo exchange over ragged shards (DESIGN.md §9).
 
@@ -347,12 +477,12 @@ def halo_exchange_1d_spec(
             return lambda a: lax.slice_in_dim(a, s - halo_lo, s, axis=dim)
 
         send_up = _switch_by_size(branch, [mk_send(s) for s in uniq], x)
-        recv_lo = lax.ppermute(send_up, axis_name, _shift_perm(n, +1))
+        recv_lo = wire_shift(send_up, axis_name, _shift_perm(n, +1), wire)
     if halo_hi > 0:
         # Valid data starts at slot 0 on every shard: the send-down strip is
         # the same static slice for all shapes - no switch needed.
         send_down = lax.slice_in_dim(x, 0, halo_hi, axis=dim)
-        recv_hi = lax.ppermute(send_down, axis_name, _shift_perm(n, -1))
+        recv_hi = wire_shift(send_down, axis_name, _shift_perm(n, -1), wire)
 
     def mk_assemble(s):
         def f(a):
@@ -385,6 +515,7 @@ def halo_exchange_2d_spec(
     *,
     dims: tuple[int, int] = (0, 1),
     out_extents: tuple[int, int] | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """2-D shape-specialized halo exchange: rows first, then columns over
     the row-extended array (corners ride the second round, same ordering as
@@ -393,12 +524,12 @@ def halo_exchange_2d_spec(
     top, bottom, left, right = halo
     oe = out_extents or (None, None)
     y = halo_exchange_1d_spec(
-        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0]
+        x, top, bottom, row_axis, row_sizes, dim=dims[0], out_extent=oe[0], wire=wire
     )
     # After the row round every shard in a tile-row holds the same static
     # row extent, so the column exchange rags only over col_sizes.
     y = halo_exchange_1d_spec(
-        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1]
+        y, left, right, col_axis, col_sizes, dim=dims[1], out_extent=oe[1], wire=wire
     )
     return y
 
@@ -410,25 +541,42 @@ def send_boundary_sum_1d(
     axis_name: str,
     *,
     dim: int = 0,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Adjoint of ``halo_exchange_1d``: fold halo regions back onto their
     owners and sum.  ``x`` carries ``overlap_lo``/``overlap_hi`` rows at each
     end that belong to the neighbouring shards; they are shipped back and
     accumulated onto the neighbour's interior.  (JAX AD derives exactly this
     for the backward pass - provided here for explicit schedules and tests.)
+
+    Under ``wire`` the shipped strips are cotangents of a *recurring*
+    exchange, so they ride error feedback in the primal direction: each
+    strip is quantised against a residual drawn from the bag, and the new
+    residual is pushed to ``wire.bag.emitted`` (eager - there is no AD pass
+    here to smuggle it through), in the same order the bag was drawn from.
     """
     n = axis_size(axis_name)
     core_lo, core_hi = overlap_lo, x.shape[dim] - overlap_hi
     core = lax.slice_in_dim(x, core_lo, core_hi, axis=dim)
+
+    def ship(strip, perm):
+        if wire is None:
+            return lax.ppermute(strip, axis_name, perm)
+        res = wire.bag.take(strip.shape)
+        payload, new_res = ef_encode(wire.codec, strip, res)
+        wire.bag.emit(new_res)
+        recv = _tree_ppermute(payload, axis_name, perm)
+        return wire.codec.decode(recv, strip.shape, strip.dtype)
+
     if overlap_lo > 0:
         up = lax.slice_in_dim(x, 0, overlap_lo, axis=dim)  # belongs to prev shard
-        up = lax.ppermute(up, axis_name, _shift_perm(n, -1))
+        up = ship(up, _shift_perm(n, -1))
         pad = [(0, 0)] * x.ndim
         pad[dim] = (core.shape[dim] - overlap_lo, 0)
         core = core + jnp.pad(up, pad)
     if overlap_hi > 0:
         down = lax.slice_in_dim(x, x.shape[dim] - overlap_hi, x.shape[dim], axis=dim)
-        down = lax.ppermute(down, axis_name, _shift_perm(n, +1))
+        down = ship(down, _shift_perm(n, +1))
         pad = [(0, 0)] * x.ndim
         pad[dim] = (0, core.shape[dim] - overlap_hi)
         core = core + jnp.pad(down, pad)

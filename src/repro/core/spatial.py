@@ -34,10 +34,12 @@ from jax import lax
 
 from repro.core.tiling import ConvSpec
 from repro.core.halo import (
+    WireCtx,
     axis_size,
     halo_exchange_2d,
     halo_exchange_1d_packed,
 )
+from repro.optim.compression import ef_encode
 from repro.core.backend import (
     ACTIVATIONS as _ACTIVATIONS,
     Activation,
@@ -713,12 +715,71 @@ def apply_layer_local_spec(
 # ---------------------------------------------------------------------------
 
 
+def _wire_all_gather(x: jax.Array, axis_name: str, dim: int, wire: WireCtx | None):
+    """``lax.all_gather(tiled=True)`` with optional wire compression.
+
+    ``wire=None`` is literally the tiled all-gather (legacy jaxpr).
+    Otherwise the local block is encoded once and each payload leaf rides a
+    stacking all-gather so every receiver can decode per-source blocks and
+    re-concatenate - static shapes throughout.  The backward is a custom
+    rule (the straight-line transpose would differentiate through
+    ``round``/``top_k``): the reduce-scatter cotangent is split into one
+    chunk per destination device, each chunk quantised under error feedback
+    against its own residual (one buffer per (sender, dest) pair, drawn
+    from the bag in destination order), shipped via ``all_to_all``, decoded
+    and summed on the receiver (DESIGN.md §12)."""
+    if wire is None:
+        return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+    n = axis_size(axis_name)
+    codec = wire.codec
+    res = tuple(wire.bag.take(x.shape) for _ in range(n))
+    xshape, xdtype = tuple(x.shape), x.dtype   # trace constants, closed over
+
+    @jax.custom_vjp
+    def gather(x, res):
+        payload = codec.encode(x)
+        recv = jax.tree.map(
+            lambda p: lax.all_gather(p, axis_name, axis=0, tiled=False), payload
+        )
+        blocks = [
+            codec.decode(jax.tree.map(lambda p: p[i], recv), xshape, xdtype)
+            for i in range(n)
+        ]
+        return lax.concatenate(blocks, dimension=dim)
+
+    def fwd(x, res):
+        return gather(x, res), res
+
+    def bwd(res, ct):
+        step = xshape[dim]
+        payloads, new_res = [], []
+        for i in range(n):
+            chunk = lax.slice_in_dim(ct, i * step, (i + 1) * step, axis=dim)
+            p, r = ef_encode(codec, chunk, res[i])
+            payloads.append(p)
+            new_res.append(r)
+        stacked = jax.tree.map(lambda *ps: jnp.stack(ps, axis=0), *payloads)
+        recv = jax.tree.map(
+            lambda p: lax.all_to_all(p, axis_name, split_axis=0, concat_axis=0),
+            stacked,
+        )
+        ct_x = sum(
+            codec.decode(jax.tree.map(lambda p: p[i], recv), xshape, jnp.float32)
+            for i in range(n)
+        )
+        return ct_x.astype(xdtype), tuple(new_res)
+
+    gather.defvjp(fwd, bwd)
+    return gather(x, res)
+
+
 def reshard_spatial_to_data(
     x: jax.Array,
     row_axis: str,
     col_axis: str,
     *,
     dims: tuple[int, int] = (1, 2),
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """The spatial->data crossover collective (DESIGN.md §7): all-gather
     the (row_axis x col_axis) tile grid into full feature maps, then split
@@ -740,8 +801,8 @@ def reshard_spatial_to_data(
     """
     n = axis_size(row_axis)
     m = axis_size(col_axis)
-    x = lax.all_gather(x, row_axis, axis=dims[0], tiled=True)
-    x = lax.all_gather(x, col_axis, axis=dims[1], tiled=True)
+    x = _wire_all_gather(x, row_axis, dims[0], wire)
+    x = _wire_all_gather(x, col_axis, dims[1], wire)
     return _batch_block_slice(x, row_axis, col_axis, n, m)
 
 
@@ -768,6 +829,7 @@ def reshard_spatial_to_data_ragged(
     col_sizes: tuple[int, ...],
     *,
     dims: tuple[int, int] = (1, 2),
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Spatial->data crossover for ragged partitions: the tiled all-gathers
     assemble *padded* tiles (each block max-sized, pad slots zero), so the
@@ -777,8 +839,8 @@ def reshard_spatial_to_data_ragged(
     derived by AD, exactly like the uniform reshard."""
     n, m = len(row_sizes), len(col_sizes)
     hmax, wmax = max(row_sizes), max(col_sizes)
-    x = lax.all_gather(x, row_axis, axis=dims[0], tiled=True)
-    x = lax.all_gather(x, col_axis, axis=dims[1], tiled=True)
+    x = _wire_all_gather(x, row_axis, dims[0], wire)
+    x = _wire_all_gather(x, col_axis, dims[1], wire)
     if hmax * n != x.shape[dims[0]] or wmax * m != x.shape[dims[1]]:
         raise ValueError(
             f"gathered padded grid {x.shape} inconsistent with sizes "
@@ -901,6 +963,7 @@ def apply_group_lead_overlap(
     backend: str = "xla",
     batch_axis: str | None = None,
     block_oh: int | None = None,
+    wire: WireCtx | None = None,
 ) -> jax.Array:
     """Group-lead layer under the overlap schedule: packed halo exchange +
     interior/boundary split execution (DESIGN.md §5).
@@ -936,12 +999,14 @@ def apply_group_lead_overlap(
     )
 
     # 1. issue the packed row exchange (nothing below consumes it yet)
-    row_lo, row_hi = halo_exchange_1d_packed(x, top, bottom, row_axis, dim=1)
+    row_lo, row_hi = halo_exchange_1d_packed(x, top, bottom, row_axis, dim=1, wire=wire)
 
     if rs is None or cs is None:
         # no interior: whole-tile compute on the assembled extended tile
         ext = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
-        col_lo, col_hi = halo_exchange_1d_packed(ext, left, right, col_axis, dim=2)
+        col_lo, col_hi = halo_exchange_1d_packed(
+            ext, left, right, col_axis, dim=2, wire=wire
+        )
         ext = _assemble(col_lo, ext, col_hi, left, right, dim=2)
         y, fused = _conv_or_pool(ext, params, layer, backend, block_oh)
         return finish(y, fused=fused)
@@ -952,7 +1017,9 @@ def apply_group_lead_overlap(
 
     # 3. column exchange over the row-extended tile (carries the corners)
     x_rows = _assemble(row_lo, x, row_hi, top, bottom, dim=1)
-    col_lo, col_hi = halo_exchange_1d_packed(x_rows, left, right, col_axis, dim=2)
+    col_lo, col_hi = halo_exchange_1d_packed(
+        x_rows, left, right, col_axis, dim=2, wire=wire
+    )
     ext = _assemble(col_lo, x_rows, col_hi, left, right, dim=2)
 
     # 4. boundary strips once the halo strips land (extended coords)

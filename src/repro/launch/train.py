@@ -15,7 +15,10 @@ DESIGN.md §7) and the conv backend (``--backend pallas`` uses the MXU
 kernel; interpret-mode off TPU), and ``make_train_step`` supplies the
 deferred per-batch weight aggregation plus the full trainer tail (clipping,
 schedule, optional ``--compress int8`` error-feedback compression of the
-weight all-reduce).
+weight all-reduce).  ``--wire-codec int8|topk:<k>`` additionally compresses
+the per-sample collectives (halo strips, the reshard exchange, pipeline
+hand-offs) with error feedback on the recurring backward strips, and the
+planner prices its comm terms under the same codec (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -96,6 +99,13 @@ def _add_args(ap: argparse.ArgumentParser) -> None:
                          "and reshard traffic), or a stage count S; requires "
                          "--groups auto, and BN layers must stay out of the "
                          "tail (see --no-batch-norm)")
+    ap.add_argument("--wire-codec", default="none",
+                    help="tiled: per-sample collective codec - 'none', "
+                         "'int8' (blockwise absmax, stateless on forward "
+                         "halos, error feedback on backward strips and the "
+                         "reshard adjoint), or 'topk:<k>' (k a fraction "
+                         "0<k<1 or a count); the planner's comm terms are "
+                         "priced under the same codec (DESIGN.md §12)")
     ap.add_argument("--no-batch-norm", action="store_true",
                     help="tiled: build the YOLO stack without batch norm "
                          "(required for layers inside pipeline stages: BN's "
@@ -167,6 +177,7 @@ def _run_tiled(args) -> int:
         crossover=_resolve_crossover(args.crossover),
         pipeline=pipeline,
         microbatches=max(args.grad_accum, 1),
+        wire_codec=args.wire_codec,
         batch_norm=not args.no_batch_norm,
     )
     part = arch.plan.partition
@@ -175,6 +186,8 @@ def _run_tiled(args) -> int:
         f"grid={args.grid}x{args.grid} crossover={arch.plan.crossover} "
         f"groups={[(g.start, g.end, g.mode) for g in arch.plan.groups]}"
         + (f" stages={arch.plan.stages}" if arch.plan.stages else "")
+        + (f" wire_codec={arch.plan.wire_codec}"
+           if arch.plan.wire_codec != "none" else "")
     )
     print(
         f"partition: rows={part.row_bounds} cols={part.col_bounds} "

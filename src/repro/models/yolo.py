@@ -92,6 +92,7 @@ def make_yolo_tiled_arch(
     partition=None,
     pipeline: int | str | None = None,
     microbatches: int | None = None,
+    wire_codec: str = "none",
     batch_norm: bool = True,
     mesh=None,
     loss_local=l2_loss_local,
@@ -107,7 +108,9 @@ def make_yolo_tiled_arch(
     (None | "auto" | stage count; DESIGN.md §11) asks the planner for a
     pipeline tail over device subsets - requires ``groups="auto"`` and
     ``batch_norm=False`` layers in the tail; ``microbatches`` feeds the
-    bubble model (defaults to the planner's standard M)."""
+    bubble model (defaults to the planner's standard M).  ``wire_codec``
+    (``"none" | "int8" | "topk:<k>"``; DESIGN.md §12) compresses the
+    per-sample collectives and biases the planner's comm terms to match."""
     from repro.core.grouping import PIPELINE_MICROBATCHES
     from repro.launch.mesh import make_tile_mesh
 
@@ -118,6 +121,7 @@ def make_yolo_tiled_arch(
         crossover=crossover, mem_limit=mem_limit, partition=partition,
         pipeline=pipeline,
         microbatches=PIPELINE_MICROBATCHES if microbatches is None else microbatches,
+        wire_codec=wire_codec,
     )
     return TiledCNNArch(
         plan=plan,

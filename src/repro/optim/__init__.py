@@ -8,4 +8,12 @@ from repro.optim.optimizers import (
     clip_by_global_norm,
 )
 from repro.optim.schedules import cosine_schedule, linear_warmup
-from repro.optim.compression import int8_compress, int8_decompress, CompressionState
+from repro.optim.compression import (
+    CompressionState,
+    WireCodec,
+    ef_encode,
+    get_codec,
+    int8_compress,
+    int8_decompress,
+    modeled_wire_bytes,
+)

@@ -1,18 +1,34 @@
-"""Gradient compression for the cross-pod (DCN) all-reduce.
+"""Compression codecs for everything that crosses the wire.
 
-int8 block-quantisation with error feedback: gradients are quantised per
-block of 256 values (per-block fp32 scale = max-abs / 127), the residual is
-carried in a local error buffer and re-added next step (EF-SGD), which keeps
-convergence unbiased in practice.  Applied ONLY to the inter-pod reduction
-(runtime/train wiring): the intra-pod reduce-scatter stays full precision,
-the 8x smaller payload rides the slow DCN hop.
+Two consumers share this module:
+
+* The once-per-batch gradient all-reduce (``compress_with_feedback`` +
+  ``CompressionState``): int8 block-quantisation with error feedback - the
+  residual is carried in a local error buffer and re-added next step
+  (EF-SGD), which keeps convergence unbiased in practice.
+* The per-sample collectives (halo strips, the spatial->data reshard, the
+  pipeline tick hand-off): a small codec registry (``get_codec``) with the
+  same int8 block quantiser plus a top-k sparsifier.  Forward halo strips
+  are compressed stateless (activations - a fresh value every microbatch,
+  nothing recurs, so EF has nothing to cancel against); the *backward*
+  cotangents of recurring exchanges carry EF residuals threaded through the
+  deferred-grad scan (see ``ef_encode`` and DESIGN.md S12).
+
+Codec contract (DESIGN.md S12): ``encode`` maps an array to a pytree of
+payload arrays whose shapes depend only on the input shape (static, so SPMD
+still traces); ``decode(payload, shape, dtype)`` inverts it; a zero payload
+decodes to exact zeros, preserving the ppermute zero-delivery convention
+(edge shards receive zeros == SAME padding).  ``wire_bytes`` is the modeled
+payload size the planner's comm terms use.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 
 class CompressionState(NamedTuple):
@@ -20,20 +36,32 @@ class CompressionState(NamedTuple):
 
 
 BLOCK = 256
+# Smallest block the auto-shrink rule will go down to: thin halo strips
+# (< BLOCK values) would otherwise degenerate to a single scale for the
+# whole strip.
+MIN_BLOCK = 32
 
 
-def _pad_to_block(x):
+def _pad_to_block(x, block: int = BLOCK):
     n = x.size
-    pad = (-n) % BLOCK
+    pad = (-n) % block
     flat = x.reshape(-1)
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, BLOCK), pad
+    return flat.reshape(-1, block), pad
 
 
-def int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+def _auto_block(n: int, block: int) -> int:
+    """Shrink the block (by halving, floor MIN_BLOCK) while a tensor fits in
+    half of it - small strips get finer per-block scales."""
+    while block > MIN_BLOCK and n <= block // 2:
+        block //= 2
+    return block
+
+
+def int8_compress(g: jax.Array, block: int = BLOCK) -> tuple[jax.Array, jax.Array]:
     """-> (q: int8 blocks, scale: fp32 per block)."""
-    blocks, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks, _ = _pad_to_block(g.astype(jnp.float32), block)
     scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
     q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
     return q, scale[:, 0]
@@ -63,7 +91,107 @@ def compress_with_feedback(grads, state: CompressionState):
         deq = int8_decompress(q, scale, g.shape, jnp.float32)
         return deq.astype(g.dtype), target - deq
 
-    out = jax.tree.map(one, grads, state.error)
-    newg = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    newe = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    # Unzip by flattening once and rebuilding two trees: tree.map with an
+    # is_leaf tuple-sniff would stop at *structural* tuples inside the grad
+    # tree (e.g. a dict holding a (w, b) pair) and mis-flatten them.
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(state.error)
+    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
+    newg = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    newe = jax.tree.unflatten(treedef, [p[1] for p in pairs])
     return newg, CompressionState(newe)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec registry: none | int8 | topk:<k>
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """One wire codec.  ``encode``/``decode`` are trace-safe (static payload
+    shapes); ``wire_bytes`` is the modeled payload size for the cost model.
+
+    kind="int8": per-block int8 quantisation, block auto-shrunk for thin
+    strips (see ``_auto_block``).  kind="topk": keep the k largest-|x|
+    entries as (fp32 value, int32 index) pairs; k < 1 is a fraction of the
+    element count, k >= 1 an absolute count (clamped to [1, n])."""
+
+    spec: str
+    kind: str            # "int8" | "topk"
+    block: int = BLOCK   # int8 only
+    k: float = 0.0       # topk only
+
+    def _k_eff(self, n: int) -> int:
+        k = self.k
+        ke = int(round(k * n)) if k < 1.0 else int(round(k))
+        return max(1, min(n, ke))
+
+    def encode(self, x: jax.Array):
+        if self.kind == "int8":
+            return int8_compress(x, _auto_block(x.size, self.block))
+        flat = x.astype(jnp.float32).reshape(-1)
+        k = self._k_eff(flat.size)
+        _, idx = lax.top_k(jnp.abs(flat), k)
+        return flat[idx], idx.astype(jnp.int32)
+
+    def decode(self, payload, shape, dtype) -> jax.Array:
+        if self.kind == "int8":
+            q, scale = payload
+            return int8_decompress(q, scale, shape, dtype)
+        vals, idx = payload
+        n = 1
+        for s in shape:
+            n *= s
+        out = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+        return out.reshape(shape).astype(dtype)
+
+    def wire_bytes(self, n_elems: float, dtype_bytes: float) -> float:
+        """Modeled payload bytes for an ``n_elems`` message.  int8 is modeled
+        at exactly 1 byte/element: the per-block fp32 scales (4/BLOCK bytes
+        per element) are amortised into the per-message latency + QDQ compute
+        charges rather than the bandwidth term."""
+        del dtype_bytes
+        if self.kind == "int8":
+            return float(n_elems)
+        return self._k_eff(int(n_elems)) * 8.0   # fp32 value + int32 index
+
+
+def get_codec(spec: str | None) -> WireCodec | None:
+    """Parse a wire-codec spec: ``none`` (-> None), ``int8``, ``topk:<k>``.
+    Raises ValueError on anything else, so plans fail at build time."""
+    if spec is None or spec == "none":
+        return None
+    if spec == "int8":
+        return WireCodec(spec="int8", kind="int8")
+    if spec.startswith("topk:"):
+        try:
+            k = float(spec.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(f"bad topk spec {spec!r}: expected topk:<k>") from None
+        if k <= 0:
+            raise ValueError(f"topk k must be > 0, got {k}")
+        return WireCodec(spec=spec, kind="topk", k=k)
+    raise ValueError(f"unknown wire codec {spec!r}: expected none | int8 | topk:<k>")
+
+
+def modeled_wire_bytes(n_elems: float, dtype_bytes: float, spec: str | None) -> float:
+    """Planner helper: modeled bytes for an ``n_elems`` message under
+    ``spec`` (``None``/"none" -> full precision)."""
+    codec = get_codec(spec)
+    if codec is None:
+        return float(n_elems) * float(dtype_bytes)
+    return codec.wire_bytes(n_elems, dtype_bytes)
+
+
+def ef_encode(codec: WireCodec, ct: jax.Array, res: jax.Array):
+    """One error-feedback step on a recurring exchange's cotangent:
+    quantise (ct + res), return (payload for the wire, new residual).
+
+    The invariant tests (and DESIGN.md S12) rely on: applied = decode(payload)
+    satisfies  sum_t applied_t == sum_t ct_t - res_final  exactly (fp32), i.e.
+    the residual telescopes - nothing is ever lost, only deferred."""
+    target = ct.astype(jnp.float32) + res
+    payload = codec.encode(target)
+    applied = codec.decode(payload, target.shape, jnp.float32)
+    return payload, target - applied

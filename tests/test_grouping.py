@@ -109,22 +109,31 @@ def _enumerate_profiles(n_layers):
         yield groups
 
 
+@pytest.mark.parametrize("wire_codec", ["none", "int8", "topk:0.1"])
 @pytest.mark.parametrize("schedule", ["sync", "overlap"])
 @pytest.mark.parametrize(
     "hw", [PI3_PROFILE, JETSON_PROFILE], ids=["pi-compute-bound", "jetson-comm-bound"]
 )
 @pytest.mark.parametrize("n_layers", [3, 4, 5])
-def test_dp_matches_bruteforce_paper_profiles(hw, n_layers, schedule):
+def test_dp_matches_bruteforce_paper_profiles(hw, n_layers, schedule, wire_codec):
     """Deterministic (no hypothesis) DP-vs-enumeration check on the paper's
     two testbed profiles - the compute-bound and comm-bound regimes both
-    must be exactly optimal, under both executor schedules."""
+    must be exactly optimal, under both executor schedules and with the
+    compression-aware comm terms (DESIGN.md §12): the codec reprices each
+    group's boundary term but stays a per-group quantity, so the DP
+    decomposition must survive the repricing."""
     layers = LAYERS[:n_layers]
 
     def cost(groups):
-        return profile_cost((64, 64), layers, groups, 2, 2, hw, schedule=schedule)["total"]
+        return profile_cost(
+            (64, 64), layers, groups, 2, 2, hw, schedule=schedule,
+            wire_codec=wire_codec,
+        )["total"]
 
     best_cost = min(cost(g) for g in _enumerate_profiles(n_layers))
-    dp = optimize_grouping((64, 64), layers, 2, 2, hw, schedule=schedule)
+    dp = optimize_grouping(
+        (64, 64), layers, 2, 2, hw, schedule=schedule, wire_codec=wire_codec
+    )
     assert cost(dp) == pytest.approx(best_cost, rel=1e-9)
 
 

@@ -1,0 +1,275 @@
+"""Wire-codec registry, error feedback, and the compression-aware planner
+(DESIGN.md §12): codec parsing, int8/topk round-trips, the EF telescoping
+invariant, plan/manifest plumbing, and the planner shift + >=4x modeled
+byte cut on the comm-bound edge profile."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fusion import (
+    PLAN_MANIFEST_VERSION,
+    build_stack_plan,
+    plan_from_manifest,
+    plan_manifest,
+)
+from repro.core.grouping import (
+    JETSON_EDGE_PROFILE,
+    modeled_step_wire_bytes,
+    optimize_grouping,
+)
+from repro.core.halo import EFBag
+from repro.core.spatial import LayerDef
+from repro.core.tiling import crossover_of
+from repro.models.yolo import yolov2_16_layers
+from repro.optim.compression import (
+    BLOCK,
+    MIN_BLOCK,
+    _auto_block,
+    compress_with_feedback,
+    ef_encode,
+    get_codec,
+    init_error,
+    int8_compress,
+    int8_decompress,
+    modeled_wire_bytes,
+)
+
+YOLO16 = yolov2_16_layers()
+LAYERS5 = [LayerDef(3, 1, 3, 8)] + [LayerDef(3, 1, 8, 8) for _ in range(4)]
+
+
+# ---------------------------------------------------------------------------
+# codec registry: parsing and modeled bytes
+# ---------------------------------------------------------------------------
+
+
+def test_get_codec_parsing():
+    assert get_codec(None) is None
+    assert get_codec("none") is None
+    c8 = get_codec("int8")
+    assert c8.kind == "int8" and c8.block == BLOCK
+    ck = get_codec("topk:0.25")
+    assert ck.kind == "topk" and ck.k == 0.25
+    assert get_codec("topk:8").k == 8.0
+
+
+@pytest.mark.parametrize("bad", ["topk:0", "topk:-1", "topk:abc", "gzip", "int4"])
+def test_get_codec_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        get_codec(bad)
+
+
+def test_bad_codec_fails_at_plan_build_time():
+    with pytest.raises(ValueError, match="wire codec|topk"):
+        build_stack_plan((32, 32), LAYERS5, 2, 2, wire_codec="gzip")
+
+
+def test_modeled_wire_bytes():
+    # none: full-precision bytes; int8: exactly 1 B/elem (the 4x headline);
+    # topk: k_eff * (fp32 value + int32 index)
+    assert modeled_wire_bytes(1000, 4, None) == 4000.0
+    assert modeled_wire_bytes(1000, 4, "none") == 4000.0
+    assert modeled_wire_bytes(1000, 4, "int8") == 1000.0
+    assert modeled_wire_bytes(1000, 4, "none") / modeled_wire_bytes(1000, 4, "int8") == 4.0
+    assert modeled_wire_bytes(100, 4, "topk:0.25") == 25 * 8.0
+    assert modeled_wire_bytes(100, 4, "topk:8") == 8 * 8.0
+    # k_eff clamps to [1, n]
+    assert modeled_wire_bytes(10, 4, "topk:0.001") == 1 * 8.0
+    assert modeled_wire_bytes(10, 4, "topk:999") == 10 * 8.0
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantiser: explicit block parameter (satellite b)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, BLOCK - 1, BLOCK, BLOCK + 1])
+@pytest.mark.parametrize("block", [MIN_BLOCK, BLOCK])
+def test_int8_block_param_roundtrip(n, block):
+    """compress/decompress with an explicit block size round-trips within the
+    per-block quantisation bound (scale/2) at the block-edge sizes."""
+    x = jax.random.normal(jax.random.PRNGKey(n + block), (n,))
+    q, scale = int8_compress(x, block)
+    assert q.shape == (-(-n // block), block)
+    assert scale.shape == (q.shape[0],)
+    y = int8_decompress(q, scale, x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    bound = np.repeat(np.asarray(scale), block)[:n] / 2.0 + 1e-7
+    assert np.all(np.abs(np.asarray(y) - np.asarray(x)) <= bound)
+
+
+def test_auto_block_shrinks_for_thin_strips():
+    assert _auto_block(10 * BLOCK, BLOCK) == BLOCK
+    assert _auto_block(BLOCK, BLOCK) == BLOCK
+    assert _auto_block(BLOCK // 2, BLOCK) == BLOCK // 2
+    # halving stops at the MIN_BLOCK floor even for tiny strips
+    assert _auto_block(3, BLOCK) == MIN_BLOCK
+    assert _auto_block(1, BLOCK) == MIN_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# codec encode/decode contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["int8", "topk:0.5", "topk:4"])
+def test_codec_shape_dtype_and_zero_payload(spec):
+    """Shape/dtype round-trip, and a zero input -> exact-zero decode (the
+    ppermute zero-delivery convention: edge shards must see SAME padding)."""
+    codec = get_codec(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 5)).astype(jnp.float32)
+    y = codec.decode(codec.encode(x), x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    z = codec.decode(codec.encode(jnp.zeros_like(x)), x.shape, x.dtype)
+    np.testing.assert_array_equal(np.asarray(z), 0.0)
+
+
+def test_topk_full_k_is_exact():
+    # k >= 1 is an absolute count, so k == n keeps everything
+    codec = get_codec("topk:37")
+    x = jax.random.normal(jax.random.PRNGKey(1), (37,))
+    y = codec.decode(codec.encode(x), x.shape, x.dtype)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_codec_payload_shapes_are_static():
+    """Payload shapes depend only on the input shape - required for SPMD
+    tracing (ppermute needs static shapes)."""
+    for spec in ("int8", "topk:0.5"):
+        codec = get_codec(spec)
+        a = codec.encode(jnp.zeros((8, 4)))
+        b = codec.encode(jax.random.normal(jax.random.PRNGKey(2), (8, 4)))
+        assert jax.tree.map(jnp.shape, a) == jax.tree.map(jnp.shape, b)
+
+
+# ---------------------------------------------------------------------------
+# error feedback: tuple-pytree regression (satellite a) + telescoping
+# ---------------------------------------------------------------------------
+
+
+def test_compress_with_feedback_tuple_pytree():
+    """Regression: grads holding *structural* tuples (a dict of (w, b)
+    pairs) must unzip by treedef, not by tuple-sniffing - a naive
+    ``is_leaf=lambda x: isinstance(x, tuple)`` flattens the (deq, err)
+    output pairs one level too early and corrupts the tree."""
+    k = jax.random.PRNGKey(3)
+    grads = {
+        "conv1": (jax.random.normal(k, (3, 3, 2, 4)), jnp.ones((4,))),
+        "head": {"w": jax.random.normal(k, (7, 5)), "b": jnp.zeros((5,))},
+    }
+    state = init_error(grads)
+    out, new_state = compress_with_feedback(grads, state)
+    assert jax.tree.structure(out) == jax.tree.structure(grads)
+    assert jax.tree.structure(new_state.error) == jax.tree.structure(grads)
+    for g, o, e in zip(
+        jax.tree.leaves(grads), jax.tree.leaves(out), jax.tree.leaves(new_state.error)
+    ):
+        assert o.shape == g.shape and e.shape == g.shape
+        # one-step EF identity: applied + residual == grad (fp32-exact)
+        np.testing.assert_allclose(
+            np.asarray(o) + np.asarray(e), np.asarray(g), atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("spec", ["int8", "topk:0.3"])
+def test_ef_encode_telescopes(spec):
+    """sum_t applied_t == T * ct - residual_T exactly (fp32): the codec only
+    defers signal, never loses it (DESIGN.md §12)."""
+    codec = get_codec(spec)
+    ct = jax.random.normal(jax.random.PRNGKey(4), (2, 40))
+    res = jnp.zeros_like(ct)
+    T, total = 16, np.zeros(ct.shape, np.float32)
+    for _ in range(T):
+        payload, res = ef_encode(codec, ct, res)
+        total += np.asarray(codec.decode(payload, ct.shape, jnp.float32))
+    np.testing.assert_allclose(total, T * np.asarray(ct) - np.asarray(res), atol=1e-4)
+
+
+def test_efbag_modes_and_errors():
+    bag = EFBag("collect")
+    bag.take((3, 2))
+    bag.take((5,), jnp.float32)
+    assert [s for s, _ in bag.shapes] == [(3, 2), (5,)]
+
+    bag = EFBag("buffers", [jnp.zeros((3, 2))])
+    bag.take((3, 2))
+    with pytest.raises(ValueError, match="exhausted"):
+        bag.take((3, 2))
+    bag = EFBag("buffers", [jnp.zeros((3, 2))])
+    with pytest.raises(ValueError, match="drifted"):
+        bag.take((4, 2))
+    with pytest.raises(ValueError):
+        EFBag("recording")
+
+
+# ---------------------------------------------------------------------------
+# plan surface: manifest round-trip (version bump)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_manifest_roundtrip_wire_codec():
+    assert PLAN_MANIFEST_VERSION == 2
+    for spec in ("none", "int8", "topk:0.25"):
+        plan = build_stack_plan((32, 32), LAYERS5, 2, 2, wire_codec=spec)
+        assert plan.wire_codec == spec
+        man = json.loads(json.dumps(plan_manifest(plan)))
+        assert man["wire_codec"] == spec
+        assert plan_from_manifest(man) == plan
+    # v1 manifests (no wire_codec key) read back as uncompressed
+    man = plan_manifest(build_stack_plan((32, 32), LAYERS5, 2, 2))
+    del man["wire_codec"]
+    assert plan_from_manifest(man).wire_codec == "none"
+
+
+def test_default_plan_is_uncompressed():
+    plan = build_stack_plan((32, 32), LAYERS5, 2, 2)
+    assert plan.wire_codec == "none"
+    assert plan == build_stack_plan((32, 32), LAYERS5, 2, 2, wire_codec="none")
+
+
+# ---------------------------------------------------------------------------
+# compression-aware planner (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+
+def test_planner_shifts_under_int8_on_edge_profile():
+    """jetson-edge (fat compute, thin 100 Mb/s wire): once int8 cuts the
+    bytes 4x, per-group sync latency dominates the residual comm and the
+    auto plan coarsens its grouping."""
+    g_none = optimize_grouping(
+        (416, 416), YOLO16, 2, 2, JETSON_EDGE_PROFILE, batch=4, crossover="auto"
+    )
+    g_int8 = optimize_grouping(
+        (416, 416), YOLO16, 2, 2, JETSON_EDGE_PROFILE, batch=4, crossover="auto",
+        wire_codec="int8",
+    )
+    assert list(g_int8) != list(g_none)
+    assert (
+        len(g_int8) < len(g_none)
+        or crossover_of(g_int8) != crossover_of(g_none)
+    )
+
+
+def test_modeled_wire_bytes_drop_4x_under_int8():
+    """Same plan, both codecs: int8 must cut modeled wire bytes >= 4x on
+    jetson-edge-100m (the ISSUE acceptance bar)."""
+    groups = optimize_grouping(
+        (416, 416), YOLO16, 2, 2, JETSON_EDGE_PROFILE, batch=4, crossover="auto"
+    )
+    wb_none = modeled_step_wire_bytes(
+        (416, 416), YOLO16, groups, 2, 2, JETSON_EDGE_PROFILE, batch=4
+    )
+    wb_int8 = modeled_step_wire_bytes(
+        (416, 416), YOLO16, groups, 2, 2, JETSON_EDGE_PROFILE, batch=4,
+        wire_codec="int8",
+    )
+    assert wb_none["halo"] > 0 and wb_none["total"] > 0
+    assert wb_none["total"] / wb_int8["total"] >= 4.0
+    # per-family totals are consistent
+    for wb in (wb_none, wb_int8):
+        assert wb["total"] == pytest.approx(
+            wb["halo"] + wb["reshard"] + wb["weights"] + wb["pipeline"]
+        )
