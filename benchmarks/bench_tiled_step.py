@@ -41,6 +41,14 @@ jetson-edge-100m plan as a first-class ``bytes_per_step`` column - the
 >=4x none/int8 byte cut is the headline the codec is judged by, enforced
 by ``benchmarks/run.py --strict`` and the CI smoke jobs.
 
+Serve rows (PR 10): the reduced stack served by the dynamic-batching
+``CNNServeEngine`` (DESIGN.md §13) over its forward-only plan twin on a
+real 2x2 mesh - per-schedule rows with first-class ``p99_us`` and
+``throughput`` columns, the executable-cache hit/miss counters (misses ==
+bucket-ladder size is the steady-state zero-recompile claim) and the
+served outputs' exactness vs the untiled frozen-stats reference, enforced
+by ``benchmarks/run.py --strict`` and the CI smoke jobs.
+
 ``run(quick=True)`` (CI smoke) keeps the exactness checks but trims the
 timing loop.  Rows feed the persisted BENCH_tiled.json trajectory written
 by benchmarks/run.py.
@@ -133,7 +141,94 @@ def run(quick: bool = False) -> list[dict]:
     rows.extend(_hetero_sweep_rows(iters))
     rows.extend(_pipeline_sweep_rows(iters))
     rows.extend(_wire_sweep_rows(iters))
+    rows.extend(_serve_sweep_rows(quick))
     rows.extend(_bwd_kernel_rows(iters))
+    return rows
+
+
+def _serve_sweep_rows(quick: bool) -> list[dict]:
+    """Serving sweep (DESIGN.md §13): the reduced stack served by the
+    dynamic-batching ``CNNServeEngine`` over its forward-only plan twin on
+    a real 2x2 mesh, one row per executor schedule.  Each row carries
+    first-class ``p99_us``/``throughput`` columns (the tail-latency /
+    throughput pair the engine is judged by, asserted by
+    ``benchmarks/run.py --strict``) plus the cache hit/miss counters and
+    the bucket census of the dispatch log; ``value`` is the served outputs'
+    max error vs the untiled frozen-stats reference - the forward-only
+    plan's exactness claim, measured every commit.  The second half of the
+    workload re-visits every bucket, so ``misses == len(buckets)`` is also
+    the steady-state zero-recompile claim.  Skipped (empty) when fewer
+    than 4 devices are visible."""
+    import jax as _jax
+
+    if len(_jax.devices()) < 4:
+        return []
+    import numpy as np
+
+    from repro.core.spatial import freeze_bn_stats, stack_reference
+    from repro.serve.cnn_engine import CNNServeEngine
+
+    mesh = make_tile_mesh(2, 2)
+    params0 = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    buckets = (1, 2, 4)
+    rounds = 1 if quick else 2
+    rows = []
+    for schedule in SCHEDULES:
+        plan = build_stack_plan(
+            HW, LAYERS, 2, 2, schedule=schedule, inference=True
+        )
+        calib = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(1), (buckets[-1], *HW, 3))
+        )
+        params = freeze_bn_stats(params0, plan.layers, calib)
+        engine = CNNServeEngine(
+            plan, mesh, params, buckets=buckets, latency_budget=30.0,
+        )
+        t0 = time.perf_counter()
+        engine.warmup()
+        t_warm = time.perf_counter() - t0
+        n_req = (1 + rounds) * sum(buckets)
+        imgs = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(2), (n_req, *HW, 3))
+        )
+        # First pass visits every bucket once (all warmup hits); the extra
+        # ``rounds`` passes re-visit each bucket - steady-state switches
+        # must all be cache hits, so misses stays == len(buckets).
+        k = 0
+        for _ in range(1 + rounds):
+            for b in buckets:
+                for _ in range(b):
+                    engine.submit(imgs[k])
+                    k += 1
+                engine.step(force=True)
+        ref = np.asarray(
+            stack_reference(imgs, params, plan.layers, inference=True)
+        )
+        err = max(
+            float(np.max(np.abs(r.result - ref[r.rid])))
+            for r in engine.finished
+        )
+        s = engine.stats()
+        rows.append(
+            dict(
+                name=f"tiled_step/serve/{schedule}/infer_maxerr",
+                value=err,
+                backend="xla",
+                schedule=schedule,
+                served=s["served"],
+                dispatches=s["dispatches"],
+                bucket_census={str(b): c for b, c in s["bucket_census"].items()},
+                p50_us=round(s["p50_s"] * 1e6, 1),
+                p99_us=round(s["p99_s"] * 1e6, 1),
+                throughput=round(s["throughput"], 1),
+                warmup_s=round(t_warm, 3),
+                cache_hits=s["cache"]["hits"],
+                cache_misses=s["cache"]["misses"],
+                cache_hit_rate=round(s["cache"]["hit_rate"], 3),
+                fill_rate=round(s["fill_rate"], 3),
+                n_buckets=len(buckets),
+            )
+        )
     return rows
 
 
@@ -542,9 +637,35 @@ def check(rows) -> list[str]:
             )
     else:
         out.append("wire sweep skipped (<4 devices)")
+    serve = {r["schedule"]: r for r in rows if "/serve/" in r["name"]}
+    if serve:
+        out.append(
+            "serve sweep rows (sync + overlap schedule) present: "
+            f"{'OK' if {'sync', 'overlap'} <= set(serve) else 'OFF'}"
+        )
+        out.append(
+            "serve rows carry first-class p99_us/throughput columns: "
+            f"{'OK' if all('p99_us' in r and 'throughput' in r for r in serve.values()) else 'OFF'}"
+        )
+        for sched, r in serve.items():
+            out.append(
+                f"[serve/{sched}] served outputs == untiled frozen-stats "
+                f"reference: {'OK' if r['value'] < 1e-5 else 'OFF'} "
+                f"(err {r['value']:.2e})"
+            )
+            out.append(
+                f"[serve/{sched}] steady-state bucket switches hit the "
+                f"executable cache (compiles == bucket-ladder size): "
+                f"{'OK' if r['cache_misses'] == r['n_buckets'] else 'OFF'} "
+                f"({r['cache_misses']} compiles, {r['cache_hits']} hits, "
+                f"p50 {r['p50_us']}us p99 {r['p99_us']}us "
+                f"{r['throughput']} img/s)"
+            )
+    else:
+        out.append("serve sweep skipped (<4 devices)")
     for r in rows:
         if ("/hetero/" in r["name"] or "/pipeline/" in r["name"]
-                or "/wire/" in r["name"]):
+                or "/wire/" in r["name"] or "/serve/" in r["name"]):
             continue
         if "/mode/" in r["name"]:
             tag = f"mode/{r['mode']}"

@@ -86,7 +86,9 @@ def validate_trajectory(path: str) -> list[str]:
     by - every pipeline-sweep row the first-class ``bubble`` column (the
     fill/drain idle fraction the §11 stage-assignment cost term is judged
     by), and every wire-sweep row the ``wire_codec``/``bytes_per_step``
-    columns (the modeled byte cut the §12 codec is judged by), so none can
+    columns (the modeled byte cut the §12 codec is judged by), and every
+    serve-sweep row the ``p99_us``/``throughput`` columns (the tail-latency
+    / throughput pair the §13 serving engine is judged by), so none can
     silently drop out of the history."""
     if not os.path.exists(path):
         return []
@@ -127,6 +129,17 @@ def validate_trajectory(path: str) -> list[str]:
             problems.append(
                 f"entry {entry.get('sha', '?')[:12]} wire rows lack "
                 f"'wire_codec'/'bytes_per_step': {', '.join(no_codec)}"
+            )
+        no_serve = [
+            r.get("name", "?")
+            for r in entry.get("rows", [])
+            if "/serve/" in r.get("name", "")
+            and not ("p99_us" in r and "throughput" in r)
+        ]
+        if no_serve:
+            problems.append(
+                f"entry {entry.get('sha', '?')[:12]} serve rows lack "
+                f"'p99_us'/'throughput': {', '.join(no_serve)}"
             )
     return problems
 

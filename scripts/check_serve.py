@@ -1,0 +1,176 @@
+"""Tiled-CNN serving acceptance on 4 fake devices (DESIGN.md §13).
+
+Acceptance scenario for the inference serving engine (subprocess target;
+see tests/test_spmd.py / ISSUE 10):
+
+(a) HEADLINE - forward-only exactness sweep: ``build_stack_plan(...,
+    inference=True)`` serve steps across backend x schedule x crossover x
+    ragged partition on the real 2x2 mesh match the *untiled* frozen-stats
+    forward to <=1e-6 (xla; the pallas interpret-mode row is bounded at
+    the repo-standard 1e-5), and every serve jaxpr is free of training
+    collectives/grad ops
+    (no psum, no transpose-of-conv).
+(b) dynamic batching under a latency budget - 32 requests arrive on a
+    deterministic virtual clock; the engine's deadline policy (ship when
+    headroom drops below slack_factor x modeled step bound) must never
+    dispatch with less than one modeled step of slack (min_slack >= 0 -
+    no deadline can be exceeded by the model's own service estimate) and
+    every served output must match the untiled reference.
+(c) compiled-executable cache - warmup compiles exactly the bucket
+    ladder; the steady-state run adds ZERO compiles across bucket
+    switches (miss counter flat, hit counter strictly growing), and an
+    elastic replan A -> B -> A re-keys to the surviving executables and
+    pays nothing (DESIGN.md §10).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import numpy as np
+
+from repro.core.fusion import build_stack_plan, make_tiled_infer
+from repro.core.spatial import freeze_bn_stats, init_stack_params, stack_reference
+from repro.core.tiling import TilePartition
+from repro.launch.mesh import make_tile_mesh
+from repro.models.yolo import yolov2_16_layers
+from repro.runtime.driver import run_serving
+from repro.serve.cnn_engine import CNNServeEngine, ManualClock
+from repro.serve.exec_cache import ExecutableCache, plan_cache_key
+
+LAYERS = yolov2_16_layers()[:4]
+H = W = 64
+SEED = 0
+
+assert len(jax.devices()) >= 4, "needs 4 fake devices"
+mesh = make_tile_mesh(2, 2)
+params0 = init_stack_params(jax.random.PRNGKey(SEED), LAYERS)
+
+# ---------------------------------------------------------------------------
+# (a) forward-only exactness sweep vs the untiled frozen-stats forward
+# ---------------------------------------------------------------------------
+
+variants = {
+    "xla/sync": dict(backend="xla", schedule="sync"),
+    "xla/overlap": dict(backend="xla", schedule="overlap"),
+    "xla/hybrid@2": dict(backend="xla", crossover=2),
+    "xla/ragged-spec": dict(
+        backend="xla",
+        partition=TilePartition((0, 24, 64), (0, 40, 64)),
+    ),
+    "pallas/sync": dict(backend="pallas"),
+}
+x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (8, H, W, 3)), np.float32)
+calib = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (8, H, W, 3)), np.float32)
+
+serve_params = None
+for name, kw in variants.items():
+    plan = build_stack_plan((H, W), LAYERS, 2, 2, inference=True, **kw)
+    params = freeze_bn_stats(params0, plan.layers, calib)
+    if serve_params is None:
+        serve_params = params
+        ref = np.asarray(stack_reference(x, params, plan.layers, inference=True))
+    infer = make_tiled_infer(plan, mesh)
+    jaxpr = str(jax.make_jaxpr(infer)(params, x))
+    assert "psum" not in jaxpr, f"{name}: serve jaxpr carries a psum"
+    assert "conv_general_dilated_transpose" not in jaxpr, (
+        f"{name}: serve jaxpr carries grad ops"
+    )
+    y = np.asarray(jax.jit(infer)(params, x))
+    err = float(np.max(np.abs(y - ref)))
+    tol = 1e-5 if kw.get("backend") == "pallas" else 1e-6
+    print(f"[serve/{name:12s}] vs untiled forward maxerr={err:.3e} "
+          f"(tol {tol:.0e}, psum-free jaxpr)")
+    assert err <= tol, f"{name}: {err:.3e} > {tol}"
+
+# ---------------------------------------------------------------------------
+# (b) + (c) dynamic batching + executable cache on a 32-request workload
+# ---------------------------------------------------------------------------
+
+BUCKETS = (1, 2, 4, 8)
+N_REQ = 32
+plan = build_stack_plan((H, W), LAYERS, 2, 2, inference=True)
+clock = ManualClock()
+engine = CNNServeEngine(
+    plan, mesh, serve_params, buckets=BUCKETS,
+    clock=clock, simulate_step_s=None,
+)
+bound = engine.step_bound
+engine.latency_budget = 10.0 * bound     # deadlines the policy can honour
+
+warm = engine.warmup()
+assert warm["misses"] == len(BUCKETS), warm
+assert warm["hits"] == 0 and len(engine.cache) == len(BUCKETS)
+print(f"[cache] warmup compiled the bucket ladder: {warm['misses']} compiles "
+      f"(modeled step bound {bound:.3f}s)")
+
+rng = np.random.default_rng(SEED)
+imgs = rng.standard_normal((N_REQ, H, W, 3)).astype(np.float32)
+submitted = 0
+# bursty arrivals then a quiet tail: the early bursts fill the largest
+# bucket (throughput path); the stragglers sit until deadline pressure
+# ships a partial batch (latency path) - both dispatch modes exercised
+burst = [8, 8, 8, 4, 0, 0, 0, 0, 0, 0, 0, 3, 0, 0, 0, 1]
+assert sum(burst) == N_REQ
+
+
+def on_tick(t, eng):
+    global submitted
+    for _ in range(burst[t % len(burst)]):
+        if submitted < N_REQ:
+            eng.submit(imgs[submitted])
+            submitted += 1
+    clock.advance(1.1 * bound)
+
+
+report = run_serving(engine, ticks=16, on_tick=on_tick)
+assert submitted == N_REQ and report.served == N_REQ, report
+assert report.deadline_misses == 0, report
+assert report.min_slack_s >= 0.0, (
+    f"dispatched with less than one modeled step of deadline slack: "
+    f"{report.min_slack_s:+.4f}s"
+)
+ref_serve = np.asarray(
+    stack_reference(imgs, serve_params, plan.layers, inference=True)
+)
+for r in engine.finished:
+    err = float(np.max(np.abs(r.result - ref_serve[r.rid])))
+    assert err <= 1e-6, f"request {r.rid}: {err:.3e}"
+print(f"[engine] served {report.served}/{N_REQ} over {report.dispatches} "
+      f"dispatches, census={report.bucket_census}, "
+      f"min_slack={report.min_slack_s:+.4f}s, deadline_misses=0, "
+      f"outputs == untiled forward to <=1e-6")
+
+cache = report.cache
+assert cache["misses"] == len(BUCKETS), (
+    f"steady-state bucket switches recompiled: {cache}"
+)
+assert cache["hits"] == report.dispatches, cache
+assert cache["hit_rate"] >= 0.5, cache
+assert len(report.bucket_census) >= 2, (
+    f"workload only exercised one bucket size: {report.bucket_census}"
+)
+print(f"[cache] steady state: {cache['hits']} hits / {cache['misses']} "
+      f"compiles across {len(report.bucket_census)} bucket sizes "
+      f"(hit rate {cache['hit_rate']:.2f}) - zero recompiles after warmup")
+
+# (c) elastic replan A -> B -> A reuses the surviving executables
+shared = ExecutableCache(capacity=16)
+plan_b = build_stack_plan((H, W), LAYERS, 2, 2, inference=True,
+                          schedule="overlap")
+eng_a = CNNServeEngine(plan, mesh, serve_params, buckets=(1, 2),
+                       cache=shared, clock=clock)
+eng_a.warmup()
+eng_b = CNNServeEngine(plan_b, mesh, serve_params, buckets=(1, 2),
+                       cache=shared, clock=clock)
+eng_b.warmup()
+compiles_before = shared.misses
+eng_a2 = CNNServeEngine(plan, mesh, serve_params, buckets=(1, 2),
+                        cache=shared, clock=clock)
+eng_a2.warmup()
+assert shared.misses == compiles_before, shared.stats()
+assert plan_cache_key(plan, 1) in shared
+print(f"[cache] replan A->B->A: revert re-keyed to surviving executables, "
+      f"0 new compiles ({shared.stats()})")
+
+print("SERVE CHECK OK")

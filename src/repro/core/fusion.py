@@ -132,10 +132,24 @@ class StackPlan:
     ragged_exec: str = "spec"                    # non-uniform executor (DESIGN.md §9)
     stages: tuple[tuple[int, int], ...] = ()     # per pipeline stage: flat device range
     wire_codec: str = "none"                     # per-sample collective codec (DESIGN.md §12)
+    inference: bool = False                      # forward-only serve plan (DESIGN.md §13)
 
     @property
     def n_layers(self) -> int:
         return len(self.layers)
+
+    def inference_twin(self) -> "StackPlan":
+        """The forward-only serving twin of this plan (DESIGN.md §13): same
+        geometry, partition, and compute-path knobs, but BN runs from frozen
+        statistics (no cross-device psum) and the executor is used strictly
+        as a pure SPMD forward.  Pipeline plans have no serve twin - their
+        outputs live on the last stage only."""
+        if self.stages:
+            raise ValueError(
+                "pipeline plans have no inference twin: serve steps need a "
+                "single-shot forward layout; replan without the pipeline tail"
+            )
+        return dataclasses.replace(self, inference=True)
 
     def out_hw(self) -> tuple[int, int]:
         return self.map_hw[-1]
@@ -291,8 +305,16 @@ def build_stack_plan(
     pipeline: int | str | None = None,
     microbatches: int = PIPELINE_MICROBATCHES,
     wire_codec: str = "none",
+    inference: bool = False,
 ) -> StackPlan:
     """Planner: all static geometry + compute-path choices for a tiled stack.
+
+    inference (DESIGN.md §13): plan a *forward-only* serve step - BN runs
+    from frozen ``bn_mean``/``bn_var`` statistics instead of cross-device
+    batch psums, so the executor emits no training-only collective and a
+    serve step is one pure SPMD forward.  Incompatible with pipeline tails
+    (no single-shot output layout); every other knob (backend, schedule,
+    crossover, partition, ragged_exec, wire_codec) composes unchanged.
 
     groups: explicit profile, None (= sync every layer), or ``"auto"`` - run
     the DP cost-model optimizer (core.grouping) against ``hw`` (a
@@ -358,6 +380,12 @@ def build_stack_plan(
         raise ValueError(f"block_oh must be a positive int or None; got {block_oh!r}")
     get_codec(wire_codec)   # fail fast on bad codec specs (none | int8 | topk:<k>)
     layers = tuple(layers)
+    if inference and pipeline is not None:
+        raise ValueError(
+            "inference plans cannot carry a pipeline tail: a serve step "
+            "needs a single-shot forward layout, but pipeline outputs live "
+            "on the last stage's devices only; plan with pipeline=None"
+        )
     check_pipeline_arg(pipeline, n, m, len(layers))
     if pipeline is not None:
         if schedule == "overlap":
@@ -413,6 +441,12 @@ def build_stack_plan(
     validate_profile(groups, len(layers))
     cross = crossover_of(groups)
     pfirst = pipeline_first_of(groups)
+    if inference and pfirst is not None:
+        raise ValueError(
+            "inference plans cannot carry pipeline-mode groups: a serve "
+            "step needs a single-shot forward layout; use a spatial/data "
+            "grouping profile"
+        )
 
     # Pipeline tails: derive the per-stage device subsets (equal contiguous
     # flat ranges) and check the executor's structural requirements early,
@@ -562,6 +596,7 @@ def build_stack_plan(
         ragged_exec=ragged_exec,
         stages=stages,
         wire_codec=wire_codec,
+        inference=inference,
     )
 
 
@@ -573,7 +608,8 @@ def build_stack_plan(
 _log = logging.getLogger("repro.core")
 
 # v2 added "wire_codec" (DESIGN.md §12); v1 manifests read back as "none".
-PLAN_MANIFEST_VERSION = 2
+# v3 added "inference" (DESIGN.md §13); v1/v2 manifests read back as False.
+PLAN_MANIFEST_VERSION = 3
 
 
 def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
@@ -611,6 +647,7 @@ def plan_manifest(plan: StackPlan, cluster: ClusterSpec | None = None) -> dict:
         "block_oh": plan.block_oh,
         "ragged_exec": plan.ragged_exec,
         "wire_codec": plan.wire_codec,
+        "inference": plan.inference,
         "cluster": None if cluster is None else cluster_manifest(cluster),
     }
 
@@ -639,6 +676,7 @@ def plan_from_manifest(man: dict) -> StackPlan:
         partition=partition,
         ragged_exec=man.get("ragged_exec", "spec"),
         wire_codec=man.get("wire_codec", "none"),
+        inference=man.get("inference", False),
     )
 
 
@@ -707,6 +745,7 @@ def replan_stack(
             ragged_exec=plan.ragged_exec,
             pipeline=p if g == "auto" else None,
             wire_codec=plan.wire_codec,
+            inference=plan.inference,
         )
 
     ladder = [(groups, crossover, pipeline)]
@@ -843,6 +882,7 @@ def _apply_group_ragged(
             batch_axis=batch_axis,
             backend=plan.backend,
             block_oh=plan.block_oh,
+            inference=plan.inference,
         )
     return x
 
@@ -934,6 +974,7 @@ def _apply_group_spec(
             mask_offmap=mask,
             backend=plan.backend,
             block_oh=plan.block_oh,
+            inference=plan.inference,
         )
     return x
 
@@ -1008,6 +1049,7 @@ def apply_stack_local(
                     backend=plan.backend,
                     batch_axis=batch_axis,
                     block_oh=plan.block_oh,
+                    inference=plan.inference,
                 )
             continue
         if not uniform:
@@ -1040,6 +1082,7 @@ def apply_stack_local(
                 batch_axis=batch_axis,
                 block_oh=plan.block_oh,
                 wire=wire,
+                inference=plan.inference,
             )
         else:
             x = halo_exchange_2d(
@@ -1060,6 +1103,7 @@ def apply_stack_local(
                 backend=plan.backend,
                 batch_axis=batch_axis,
                 block_oh=plan.block_oh,
+                inference=plan.inference,
             )
     return x
 
@@ -1501,6 +1545,54 @@ def make_tiled_forward(
     return fwd
 
 
+def _check_not_inference(plan: StackPlan, what: str) -> None:
+    if plan.inference:
+        raise ValueError(
+            f"{what} is a training entry point, but the plan is forward-only "
+            "(inference=True): training BN needs cross-device batch "
+            "statistics the serve executor deliberately has no collectives "
+            "for; build a training plan (inference=False) instead"
+        )
+
+
+def make_tiled_infer(
+    plan: StackPlan,
+    mesh: Mesh,
+    *,
+    row_axis: str = "th",
+    col_axis: str = "tw",
+    batch_axis: str | None = None,
+):
+    """The serve step (DESIGN.md §13): shard_map'd forward-only
+    ``(params, x_global) -> y_global`` for an inference plan.
+
+    Structurally this is ``make_tiled_forward`` on a plan whose BN layers
+    read frozen ``bn_mean``/``bn_var`` statistics (``freeze_bn_stats``)
+    instead of psum'ing batch statistics - so the traced step contains *no*
+    training-only collective: no BN psum, no batch-end gradient psum, no
+    deferred-grad scan.  The only collectives left are the forward halo
+    ``ppermute``s and (for hybrid plans) the crossover all-gather - the
+    irreducible SPMD data movement.  ``scripts/check_serve.py`` asserts
+    this on the jaxpr.
+
+    Requires ``build_stack_plan(..., inference=True)`` (or
+    ``plan.inference_twin()``): refusing training plans here keeps the
+    train/serve BN semantics an explicit plan-time choice rather than a
+    silent numeric drift."""
+    if not plan.inference:
+        raise ValueError(
+            "make_tiled_infer needs a forward-only plan: build with "
+            "build_stack_plan(..., inference=True) or take "
+            "plan.inference_twin(); training plans psum BN batch statistics "
+            "and must go through make_tiled_forward/make_tiled_loss"
+        )
+    return make_tiled_forward(
+        plan, mesh,
+        row_axis=row_axis, col_axis=col_axis,
+        batch_axis=batch_axis,
+    )
+
+
 def _out_spec(plan: StackPlan, row_axis: str, col_axis: str, batch_axis: str | None):
     """Output layout of the executor: spatially sharded for all-spatial
     plans; batch-sharded full maps after a crossover."""
@@ -1561,6 +1653,7 @@ def make_tiled_loss(
     is bound replicated and each last-stage device scores its stage-rank
     block, so the psum'd scalar still equals the untiled loss exactly.
     """
+    _check_not_inference(plan, "make_tiled_loss")
     if plan.stages:
         if batch_axis is not None:
             raise ValueError(
@@ -1683,6 +1776,7 @@ def make_deferred_grad_step(
     therefore the int8-EF weight path - is identical to the non-pipeline
     executor's.
     """
+    _check_not_inference(plan, "make_deferred_grad_step")
     if plan.stages:
         if batch_axis is not None:
             raise ValueError(
@@ -1855,7 +1949,7 @@ def make_deferred_grad_step(
 
 
 def reference_forward(params, x, plan: StackPlan):
-    return stack_reference(x, params, plan.layers)
+    return stack_reference(x, params, plan.layers, inference=plan.inference)
 
 
 def reference_loss(params, x, target, plan: StackPlan, loss_local):

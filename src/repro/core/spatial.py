@@ -150,8 +150,31 @@ def _bn_apply(x, mean, var, scale, bias, eps=1e-5):
     return (x - mean) * inv * scale + bias
 
 
-def apply_layer_reference(x: jax.Array, params: dict, layer: LayerDef) -> jax.Array:
-    """Global (untiled) forward of one layer - the exactness oracle."""
+def _bn_infer(y: jax.Array, params: dict, layer: LayerDef) -> jax.Array:
+    """Inference-mode BN: normalise with the *frozen* running statistics
+    stored in the params (``bn_mean`` / ``bn_var``) instead of computing
+    cross-device batch statistics - the forward-only executor's replacement
+    for ``_bn_tiled``'s psums (DESIGN.md §13).  Purely elementwise, so it
+    is safe on padded/garbage slots and needs no collective."""
+    if "bn_mean" not in params or "bn_var" not in params:
+        raise ValueError(
+            "inference plan needs frozen BN statistics: params lack "
+            "bn_mean/bn_var - attach them with freeze_bn_stats(params, "
+            "layers, calibration_batch) before building the serve step"
+        )
+    return _bn_apply(
+        y, params["bn_mean"], params["bn_var"],
+        params["bn_scale"], params["bn_bias"],
+    )
+
+
+def apply_layer_reference(
+    x: jax.Array, params: dict, layer: LayerDef, *, inference: bool = False
+) -> jax.Array:
+    """Global (untiled) forward of one layer - the exactness oracle.
+
+    ``inference=True`` applies BN from the frozen ``bn_mean``/``bn_var``
+    params (serving semantics) instead of the batch statistics."""
     p = layer.padding
     if layer.pool:
         return maxpool2d(x, layer.kernel, layer.stride, p)
@@ -159,16 +182,61 @@ def apply_layer_reference(x: jax.Array, params: dict, layer: LayerDef) -> jax.Ar
     if layer.use_bias:
         y = y + params["b"]
     if layer.batch_norm:
-        mean = jnp.mean(y, axis=(0, 1, 2))
-        var = jnp.mean(jnp.square(y - mean), axis=(0, 1, 2))
-        y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+        if inference:
+            y = _bn_infer(y, params, layer)
+        else:
+            mean = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.mean(jnp.square(y - mean), axis=(0, 1, 2))
+            y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
     return _ACTIVATIONS[layer.act](y)
 
 
-def stack_reference(x: jax.Array, params: Sequence[dict], layers: Sequence[LayerDef]) -> jax.Array:
+def stack_reference(
+    x: jax.Array,
+    params: Sequence[dict],
+    layers: Sequence[LayerDef],
+    *,
+    inference: bool = False,
+) -> jax.Array:
     for p, l in zip(params, layers):
-        x = apply_layer_reference(x, p, l)
+        x = apply_layer_reference(x, p, l, inference=inference)
     return x
+
+
+def freeze_bn_stats(
+    params: Sequence[dict], layers: Sequence[LayerDef], x: jax.Array
+) -> list[dict]:
+    """Attach frozen BN statistics to a trained param stack (DESIGN.md §13).
+
+    Returns a copy of ``params`` where every BN layer gains ``bn_mean`` /
+    ``bn_var`` set to the batch statistics of the calibration batch ``x``
+    pushed through the (training-mode) reference forward.  With the same
+    batch fed to both, the inference forward then reproduces the training
+    forward exactly - the equivalence the serve acceptance gate asserts.
+    In production the stats would instead be EMA running statistics
+    accumulated during training; the inference executor only reads the two
+    leaves, so either source works."""
+    out = []
+    for p, l in zip(params, layers):
+        p = dict(p)
+        if l.batch_norm and not l.pool:
+            y = conv2d_same(x, p["w"], l.stride, l.padding)
+            if l.use_bias:
+                y = y + p["b"]
+            # Same centered formulation as the untiled training reference,
+            # so frozen-stats inference reproduces `stack_reference`'s
+            # training forward bit-for-bit (the tiled executors then agree
+            # to the usual tiled-vs-untiled float tolerance).
+            mean = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.mean(jnp.square(y - mean), axis=(0, 1, 2))
+            p["bn_mean"], p["bn_var"] = mean, var
+            # downstream layers must see the exact training activations, so
+            # finish this layer with the frozen (= batch) stats
+            x = apply_layer_reference(x, p, l, inference=True)
+        else:
+            x = apply_layer_reference(x, p, l)
+        out.append(p)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +366,7 @@ def apply_layer_local(
     backend: str = "xla",
     batch_axis: str | None = None,
     block_oh: int | None = None,
+    inference: bool = False,
 ) -> jax.Array:
     """One layer on a halo-extended local tile (input halo already present).
 
@@ -307,7 +376,8 @@ def apply_layer_local(
     the registered conv compute path (core.backend); ``block_oh`` is the
     planner's output-row VMEM block, forwarded to the backend.  BN and any
     activation the backend cannot fuse stay here, since BN needs cross-tile
-    psums (over the batch mesh axis too, when one is present).
+    psums (over the batch mesh axis too, when one is present) - unless
+    ``inference=True``, which swaps in the collective-free frozen-stats BN.
     """
     y, fused = _conv_or_pool(x, params, layer, backend, block_oh)
     return _finish_layer(
@@ -323,6 +393,7 @@ def apply_layer_local(
         batch_global=batch_global,
         mask_offmap=mask_offmap,
         batch_axis=batch_axis,
+        inference=inference,
     )
 
 
@@ -450,15 +521,20 @@ def _finish_layer(
     batch_global: int,
     mask_offmap: bool,
     batch_axis: str | None,
+    inference: bool = False,
 ) -> jax.Array:
     """Post-conv tail shared by the sync and overlap executors: cross-tile
-    BN, unfused activation, off-map masking."""
+    BN (frozen-stats BN for inference plans - no psum), unfused activation,
+    off-map masking."""
     if layer.batch_norm and not layer.pool:
-        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
-        bn_axes = (row_axis, col_axis)
-        if batch_axis is not None:
-            bn_axes = (batch_axis,) + bn_axes
-        y = _bn_tiled(y, layer, params, out_halo, bn_axes, n_global)
+        if inference:
+            y = _bn_infer(y, params, layer)
+        else:
+            n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+            bn_axes = (row_axis, col_axis)
+            if batch_axis is not None:
+                bn_axes = (batch_axis,) + bn_axes
+            y = _bn_tiled(y, layer, params, out_halo, bn_axes, n_global)
     if not fused:
         y = _ACTIVATIONS[layer.act](y)
     if mask_offmap and any(h > 0 for h in out_halo):
@@ -553,6 +629,7 @@ def apply_layer_local_ragged(
     batch_axis: str | None = None,
     backend: str = "xla",
     block_oh: int | None = None,
+    inference: bool = False,
 ) -> jax.Array:
     """One layer of a ragged (non-uniform partition) tile.
 
@@ -567,17 +644,21 @@ def apply_layer_local_ragged(
     y, fused = _conv_or_pool(x, params, layer, backend, block_oh)
     y = _fit_extent(y, canon_out_hw)
     if layer.batch_norm and not layer.pool:
-        n_global = batch_global * map_out_hw[0] * map_out_hw[1]
-        bn_axes = (row_axis, col_axis)
-        if batch_axis is not None:
-            bn_axes = (batch_axis,) + bn_axes
-        mask = _core_mask_ragged(y.shape[1], y.shape[2], out_halo, out_size)
-        mask = mask[None, :, :, None]
-        s = lax.psum(jnp.sum(y * mask, axis=(0, 1, 2)), bn_axes)
-        ss = lax.psum(jnp.sum(jnp.square(y) * mask, axis=(0, 1, 2)), bn_axes)
-        mean = s / n_global
-        var = ss / n_global - jnp.square(mean)
-        y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
+        if inference:
+            # frozen stats: elementwise, pad slots re-zeroed by the mask below
+            y = _bn_infer(y, params, layer)
+        else:
+            n_global = batch_global * map_out_hw[0] * map_out_hw[1]
+            bn_axes = (row_axis, col_axis)
+            if batch_axis is not None:
+                bn_axes = (batch_axis,) + bn_axes
+            mask = _core_mask_ragged(y.shape[1], y.shape[2], out_halo, out_size)
+            mask = mask[None, :, :, None]
+            s = lax.psum(jnp.sum(y * mask, axis=(0, 1, 2)), bn_axes)
+            ss = lax.psum(jnp.sum(jnp.square(y) * mask, axis=(0, 1, 2)), bn_axes)
+            mean = s / n_global
+            var = ss / n_global - jnp.square(mean)
+            y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
     if not fused:
         y = _ACTIVATIONS[layer.act](y)
     m = _ragged_mask(y.shape[1], y.shape[2], out_halo, out_size, out_off, map_out_hw)
@@ -633,6 +714,7 @@ def apply_layer_local_spec(
     mask_offmap: bool = False,
     backend: str = "xla",
     block_oh: int | None = None,
+    inference: bool = False,
 ) -> jax.Array:
     """One layer of a shape-specialized ragged tile (DESIGN.md §9).
 
@@ -650,6 +732,10 @@ def apply_layer_local_spec(
     exchange, the core loss switch, the unpack) reads valid windows only,
     and AD gives the garbage slots zero cotangent for the same reason."""
     bn = layer.batch_norm and not layer.pool
+    # Inference BN is elementwise (frozen stats, no core sums, no psum), so
+    # it runs once outside the switch on the padded container - pad slots
+    # turn garbage, which the invariant already allows (never read).
+    bn_stats = bn and not inference
     from repro.core.halo import _switch_by_size
 
     def mk(io):
@@ -664,7 +750,7 @@ def apply_layer_local_spec(
                     f"gave {y.shape[1:3]}, planner said {(vout_r, vout_c)}"
                 )
             outs = []
-            if bn:
+            if bn_stats:
                 top, bottom, left, right = out_halo
                 core = y[:, top:vout_r - bottom, left:vout_c - right, :]
                 outs = [
@@ -688,7 +774,7 @@ def apply_layer_local_spec(
         fused = False
     else:
         fused = (not layer.batch_norm) and layer.act in get_conv_backend(backend).fused_acts
-    if bn:
+    if bn_stats:
         y, s, ss = res
         n_global = batch_global * map_out_hw[0] * map_out_hw[1]
         bn_axes = (row_axis, col_axis)
@@ -701,6 +787,8 @@ def apply_layer_local_spec(
         y = _bn_apply(y, mean, var, params["bn_scale"], params["bn_bias"])
     else:
         y = res
+        if bn:
+            y = _bn_infer(y, params, layer)
     if not fused:
         y = _ACTIVATIONS[layer.act](y)
     if mask_offmap and any(h > 0 for h in out_halo):
@@ -871,6 +959,7 @@ def apply_layer_data(
     backend: str = "xla",
     batch_axis: str | None = None,
     block_oh: int | None = None,
+    inference: bool = False,
 ) -> jax.Array:
     """One data-mode layer: full (unhaloed) maps, batch shard per device.
 
@@ -895,6 +984,7 @@ def apply_layer_data(
         batch_global=batch_global,
         mask_offmap=False,
         batch_axis=batch_axis,
+        inference=inference,
     )
 
 
@@ -964,6 +1054,7 @@ def apply_group_lead_overlap(
     batch_axis: str | None = None,
     block_oh: int | None = None,
     wire: WireCtx | None = None,
+    inference: bool = False,
 ) -> jax.Array:
     """Group-lead layer under the overlap schedule: packed halo exchange +
     interior/boundary split execution (DESIGN.md §5).
@@ -996,6 +1087,7 @@ def apply_group_lead_overlap(
         batch_global=batch_global,
         mask_offmap=mask_offmap,
         batch_axis=batch_axis,
+        inference=inference,
     )
 
     # 1. issue the packed row exchange (nothing below consumes it yet)

@@ -32,7 +32,7 @@ from typing import Callable, Optional
 import jax
 
 from repro.core.fusion import StackPlan
-from repro.core.spatial import init_stack_params
+from repro.core.spatial import freeze_bn_stats, init_stack_params
 
 LossLocal = Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
 
@@ -76,3 +76,33 @@ class TiledCNNArch:
 
     def abstract_params(self):
         return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- serving (DESIGN.md §13) ---------------------------------------------
+
+    def serve_plan(self) -> StackPlan:
+        """The forward-only twin of the training plan: same geometry and
+        compute-path knobs, BN from frozen statistics, no training
+        collectives.  Pipeline plans raise (no single-shot output layout)."""
+        return self.plan.inference_twin()
+
+    def serve_params(self, params, calibration: jax.Array):
+        """Trained params + frozen BN statistics from a calibration batch -
+        what ``CNNServeEngine`` / ``make_tiled_infer`` consume."""
+        return freeze_bn_stats(params, self.plan.layers, calibration)
+
+    def make_serve_engine(self, params, *, calibration=None, **engine_kw):
+        """A ``CNNServeEngine`` over this arch's plan/mesh/axes.  Pass
+        ``calibration`` to freeze BN stats here; otherwise ``params`` must
+        already carry ``bn_mean``/``bn_var`` leaves."""
+        from repro.serve.cnn_engine import CNNServeEngine
+
+        if calibration is not None:
+            params = self.serve_params(params, calibration)
+        return CNNServeEngine(
+            self.serve_plan(),
+            self.mesh,
+            params,
+            row_axis=self.row_axis,
+            col_axis=self.col_axis,
+            **engine_kw,
+        )

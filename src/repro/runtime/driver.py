@@ -71,6 +71,22 @@ class DriverReport:
     last_metrics: Optional[dict] = None
 
 
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of a ``run_serving`` drive (DESIGN.md §13): request counts,
+    latency percentiles, dispatch-slack floor, bucket census, cache stats."""
+
+    served: int = 0
+    dispatches: int = 0
+    deadline_misses: int = 0
+    min_slack_s: Optional[float] = None
+    p50_s: Optional[float] = None
+    p99_s: Optional[float] = None
+    throughput: Optional[float] = None
+    bucket_census: dict = dataclasses.field(default_factory=dict)
+    cache: dict = dataclasses.field(default_factory=dict)
+
+
 class Watchdog:
     def __init__(self, timeout: float):
         self.timeout = timeout
@@ -95,6 +111,53 @@ class Watchdog:
 
     def stop(self):
         self._stop.set()
+
+
+def run_serving(
+    engine,
+    *,
+    ticks: int,
+    on_tick: Optional[Callable[[int, Any], None]] = None,
+    hang_timeout: float = 300.0,
+    drain: bool = True,
+) -> ServeReport:
+    """Drive a ``serve.cnn_engine.CNNServeEngine`` under the same
+    operational umbrella as ``run_training``: a watchdog heartbeats every
+    engine step (a hung XLA dispatch or a wedged device surfaces as the
+    same hang signal a stuck train step does), and the outcome comes back
+    as a structured ``ServeReport``.
+
+    ``on_tick(t, engine)`` is the traffic source: it submits requests
+    and/or advances an injected virtual clock - keeping arrivals outside
+    the driver makes the loop deterministic under test schedules and
+    trivially replaceable by a socket/HTTP front-end.  Each tick runs the
+    engine's admit-or-wait decision once; after ``ticks``, ``drain=True``
+    ships whatever is still queued (no further arrivals expected).
+    """
+    watchdog = Watchdog(hang_timeout)
+    try:
+        for t in range(ticks):
+            if on_tick is not None:
+                on_tick(t, engine)
+            engine.step()
+            watchdog.beat()
+        if drain:
+            engine.drain()
+            watchdog.beat()
+    finally:
+        watchdog.stop()
+    s = engine.stats()
+    return ServeReport(
+        served=s["served"],
+        dispatches=s["dispatches"],
+        deadline_misses=s["deadline_misses"],
+        min_slack_s=s["min_slack_s"],
+        p50_s=s.get("p50_s"),
+        p99_s=s.get("p99_s"),
+        throughput=s.get("throughput"),
+        bucket_census=s["bucket_census"],
+        cache=s["cache"],
+    )
 
 
 def run_training(

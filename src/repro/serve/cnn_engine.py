@@ -1,0 +1,319 @@
+"""Tiled-CNN serving engine: request queue + dynamic batching under a
+latency budget over forward-only StackPlans (DESIGN.md §13).
+
+The LM ``ServeEngine`` keeps shapes static with a fixed pool of decode
+slots; the CNN engine keeps them static with a ladder of *batch buckets*
+(e.g. 1/2/4/8): queued image requests are packed into the smallest bucket
+that covers them, padded with zero images, and dispatched through one
+ahead-of-time-compiled executable per bucket (``serve/exec_cache.py``) -
+the same slot discipline, transposed from sequence position to batch index.
+
+Dispatch policy - the tail-latency/throughput knob: a batch ships when the
+queue fills the largest bucket (throughput-optimal), or as soon as the
+oldest request's deadline headroom drops below ``slack_factor`` modeled
+step times (latency-bound partial batch).  The modeled step bound comes
+from the same ``profile_cost`` model the planner optimizes against, so the
+policy is consistent with how the plan was chosen, and the engine records
+per-dispatch slack = min(deadline) - (t_dispatch + step_bound) - the
+acceptance gate asserts it never goes negative.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.fusion import StackPlan, make_tiled_infer, resolve_hw_profile
+from repro.core.grouping import ClusterSpec, profile_cost
+from repro.serve.exec_cache import ExecutableCache, plan_cache_key
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One queued inference request: a single (H, W, C) image."""
+
+    rid: int
+    image: np.ndarray
+    deadline: float | None = None       # absolute; default submitted + budget
+    submitted: float | None = None      # stamped by Engine.submit
+    completed: float | None = None
+    result: np.ndarray | None = None
+
+    @property
+    def latency(self) -> float | None:
+        if self.completed is None or self.submitted is None:
+            return None
+        return self.completed - self.submitted
+
+
+class ManualClock:
+    """Deterministic injectable clock for tests/acceptance: time advances
+    only via ``advance`` (plus the engine's simulated service time)."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)
+
+
+def modeled_step_bound(
+    plan: StackPlan,
+    batch: int,
+    hw: Any = None,
+) -> float:
+    """Modeled seconds for one serve step at ``batch`` - ``profile_cost``'s
+    total for the plan's grouping on ``hw`` (a HardwareProfile, ClusterSpec,
+    registered name, or None for the Pi default).  This is the deadline
+    policy's service-time estimate; serving reuses the planner's cost model
+    rather than growing a second one."""
+    cost = profile_cost(
+        plan.input_hw,
+        plan.layers,
+        plan.groups,
+        plan.n,
+        plan.m,
+        hw if isinstance(hw, ClusterSpec) else resolve_hw_profile(hw),
+        batch=batch,
+        schedule=plan.schedule,
+        partition=plan.partition,
+        wire_codec=plan.wire_codec,
+    )
+    return float(cost["total"])
+
+
+class CNNServeEngine:
+    """Dynamic-batching serve loop over a forward-only StackPlan.
+
+    Parameters
+    ----------
+    plan, mesh, params: the serve step. ``plan`` must be forward-only
+        (``inference=True``); a training plan is refused - take
+        ``plan.inference_twin()`` and ``freeze_bn_stats`` the params first.
+    buckets: ascending batch-bucket ladder.  Hybrid (crossover) plans need
+        every bucket divisible by n*m (the data-mode batch split).
+    latency_budget: default per-request deadline (seconds after submit).
+    step_bound: modeled seconds per serve step (default: ``profile_cost``
+        on ``hw`` at the largest bucket).
+    slack_factor: ship a partial batch when the oldest request's headroom
+        is below ``slack_factor * step_bound``.
+    cache: a shared ``ExecutableCache`` (e.g. across elastic replans so a
+        reverted plan reuses its surviving executables); private by default.
+    clock: time source; inject ``ManualClock`` for deterministic tests.
+    simulate_step_s: with a ManualClock, advance it by this many seconds
+        per dispatch to model service time (virtual-time benchmarks).
+    """
+
+    def __init__(
+        self,
+        plan: StackPlan,
+        mesh,
+        params: Sequence[dict],
+        *,
+        buckets: Sequence[int] = (1, 2, 4, 8),
+        latency_budget: float = 0.1,
+        step_bound: float | None = None,
+        hw: Any = None,
+        cluster: ClusterSpec | None = None,
+        slack_factor: float = 2.0,
+        cache: ExecutableCache | None = None,
+        cache_capacity: int = 16,
+        clock: Callable[[], float] = time.monotonic,
+        simulate_step_s: float | None = None,
+        row_axis: str = "th",
+        col_axis: str = "tw",
+        dtype=np.float32,
+    ):
+        if not plan.inference:
+            raise ValueError(
+                "CNNServeEngine needs a forward-only plan: take "
+                "plan.inference_twin() (and freeze_bn_stats the params) - "
+                "serving a training plan would psum BN batch statistics "
+                "across requests"
+            )
+        buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints; got {buckets!r}")
+        if plan.crossover is not None:
+            t = plan.n * plan.m
+            bad = [b for b in buckets if b % t]
+            if bad:
+                raise ValueError(
+                    f"hybrid plan: buckets {bad} not divisible by the tile "
+                    f"count {plan.n}x{plan.m}={t} (data-mode batch split)"
+                )
+        self.plan = plan
+        self.mesh = mesh
+        self.params = params
+        self.buckets = buckets
+        self.latency_budget = float(latency_budget)
+        self.cluster = cluster
+        self.slack_factor = float(slack_factor)
+        self.clock = clock
+        self.simulate_step_s = simulate_step_s
+        self.dtype = dtype
+        h, w = plan.input_hw
+        cin = plan.layers[0].in_channels
+        self._img_shape = (h, w, cin)
+        self.step_bound = (
+            float(step_bound)
+            if step_bound is not None
+            else modeled_step_bound(plan, buckets[-1], cluster if cluster is not None else hw)
+        )
+        self.cache = cache if cache is not None else ExecutableCache(cache_capacity)
+        self._infer = make_tiled_infer(
+            plan, mesh, row_axis=row_axis, col_axis=col_axis
+        )
+        self._pstruct = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), params
+        )
+        self.queue: deque[ImageRequest] = deque()
+        self.finished: list[ImageRequest] = []
+        self.batch_log: list[dict] = []     # per dispatch: t, bucket, filled, slack
+        self._rid = 0
+
+    # -- compilation ---------------------------------------------------------
+
+    def _compile(self, bucket: int):
+        xs = jax.ShapeDtypeStruct((bucket, *self._img_shape), self.dtype)
+        return jax.jit(self._infer).lower(self._pstruct, xs).compile()
+
+    def executable(self, bucket: int):
+        """The AOT-compiled serve step for one bucket, through the keyed
+        cache - a steady-state bucket switch is a dict lookup, not a
+        compile."""
+        key = plan_cache_key(self.plan, bucket, self.cluster)
+        return self.cache.get_or_build(key, lambda: self._compile(bucket))
+
+    def warmup(self) -> dict:
+        """Precompile the whole bucket ladder (startup, before traffic).
+        Returns cache stats; after warmup, steady-state misses stay flat."""
+        for b in self.buckets:
+            self.executable(b)
+        return self.cache.stats()
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(
+        self, image: np.ndarray, *, deadline: float | None = None
+    ) -> ImageRequest:
+        image = np.asarray(image, self.dtype)
+        if image.shape != self._img_shape:
+            raise ValueError(
+                f"request image shape {image.shape} != plan input "
+                f"{self._img_shape}"
+            )
+        now = self.clock()
+        req = ImageRequest(
+            rid=self._rid,
+            image=image,
+            submitted=now,
+            deadline=deadline if deadline is not None else now + self.latency_budget,
+        )
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def _pick_bucket(self, k: int) -> int:
+        """Smallest bucket covering k requests (largest bucket if k exceeds
+        the ladder - the rest wait for the next dispatch)."""
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
+
+    def step(self, force: bool = False) -> list[ImageRequest]:
+        """Admit-or-wait decision + at most one dispatched batch.
+
+        Ships when (a) the queue fills the largest bucket, (b) the oldest
+        request's deadline headroom is below ``slack_factor * step_bound``,
+        or (c) ``force=True`` (draining: no further arrivals expected).
+        Returns the completed requests (empty when waiting)."""
+        if not self.queue:
+            return []
+        now = self.clock()
+        full = len(self.queue) >= self.buckets[-1]
+        oldest = self.queue[0]
+        must_ship = (oldest.deadline - now) <= self.slack_factor * self.step_bound
+        if not (full or must_ship or force):
+            return []
+        bucket = self._pick_bucket(len(self.queue))
+        take = min(len(self.queue), bucket)
+        reqs = [self.queue.popleft() for _ in range(take)]
+        x = np.zeros((bucket, *self._img_shape), self.dtype)
+        for i, r in enumerate(reqs):
+            x[i] = r.image
+        slack = min(r.deadline for r in reqs) - (now + self.step_bound)
+        y = np.asarray(jax.device_get(self.executable(bucket)(self.params, x)))
+        if self.simulate_step_s is not None and hasattr(self.clock, "advance"):
+            self.clock.advance(self.simulate_step_s)
+        done = self.clock()
+        for i, r in enumerate(reqs):
+            r.result = y[i]
+            r.completed = done
+        self.finished.extend(reqs)
+        self.batch_log.append(
+            {"t": now, "bucket": bucket, "filled": take, "slack": slack}
+        )
+        return reqs
+
+    def drain(self, max_steps: int = 10_000) -> list[ImageRequest]:
+        """Dispatch until the queue is empty (no further arrivals expected:
+        partial batches ship immediately)."""
+        out: list[ImageRequest] = []
+        while self.queue and max_steps:
+            out.extend(self.step(force=True))
+            max_steps -= 1
+        return out
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- accounting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving statistics over everything completed so far: latency
+        percentiles, throughput, bucket census, dispatch slack, cache."""
+        lats = sorted(r.latency for r in self.finished if r.latency is not None)
+        census: dict[int, int] = {}
+        for b in self.batch_log:
+            census[b["bucket"]] = census.get(b["bucket"], 0) + 1
+        out = {
+            "served": len(self.finished),
+            "dispatches": len(self.batch_log),
+            "bucket_census": census,
+            "fill_rate": (
+                sum(b["filled"] for b in self.batch_log)
+                / max(1, sum(b["bucket"] for b in self.batch_log))
+            ),
+            "min_slack_s": min((b["slack"] for b in self.batch_log), default=None),
+            "deadline_misses": sum(
+                1
+                for r in self.finished
+                if r.deadline is not None
+                and r.completed is not None
+                and r.completed > r.deadline
+            ),
+            "cache": self.cache.stats(),
+            "step_bound_s": self.step_bound,
+        }
+        if lats:
+            first = min(r.submitted for r in self.finished)
+            last = max(r.completed for r in self.finished)
+            span = max(last - first, 1e-12)
+            out.update(
+                {
+                    "p50_s": lats[len(lats) // 2],
+                    "p99_s": lats[min(len(lats) - 1, int(len(lats) * 0.99))],
+                    "throughput": len(lats) / span,
+                }
+            )
+        return out

@@ -53,7 +53,34 @@ class ServeEngine:
         self.queue: list[Request] = []
         self.key = jax.random.PRNGKey(0)
         self._decode = jax.jit(arch.decode_fn)
+        self._prefill = jax.jit(self._make_prefill())
+        self.prefill_calls = 0          # host->device dispatches spent admitting
         self._finished: list[Request] = []
+
+    def _make_prefill(self):
+        """Bulk prefill: ONE jit'd call replays a whole prompt into a slot's
+        KV cache via ``lax.scan`` over the prompt tokens, instead of O(T)
+        single-token decode dispatches from Python (each of which paid a
+        host->device round trip and synced on the discarded sampled token).
+        The slot index is a traced argument, so all ``batch`` slots share
+        one executable; jit caches one program per distinct prompt length.
+        Numerics are unchanged - the same per-token decode graph runs over
+        the same token block sequence (zeros in the other slots); only the
+        per-token sampling of the old replay (whose results were discarded)
+        is dropped."""
+        decode = self.arch.decode_fn
+        batch = self.batch
+
+        def prefill_fn(params, prompt, slot, caches):
+            def body(caches, tok):
+                blk = jnp.zeros((batch, 1), jnp.int32).at[slot, 0].set(tok)
+                _, caches = decode(params, blk, caches)
+                return caches, None
+
+            caches, _ = jax.lax.scan(body, caches, prompt)
+            return caches
+
+        return prefill_fn
 
     # -- request lifecycle ----------------------------------------------------
 
@@ -65,18 +92,13 @@ class ServeEngine:
             if slot is None and self.queue:
                 req = self.queue.pop(0)
                 self.slots[i] = req
-                # prefill by replaying prompt tokens through decode (exact,
-                # shape-static; bulk prefill is the XLA full-seq path used by
-                # the prefill benchmarks)
-                for tok in req.prompt:
-                    self._step_token(i, int(tok))
-
-    def _step_token(self, slot: int, token: int) -> int:
-        tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(token)
-        logits, self.caches = self._decode(self.params, tok, self.caches)
-        self.key, sub = jax.random.split(self.key)
-        nxt = sample_logits(logits, sub, self.temperature)
-        return int(nxt[slot])
+                self.caches = self._prefill(
+                    self.params,
+                    jnp.asarray(req.prompt, jnp.int32),
+                    jnp.int32(i),
+                    self.caches,
+                )
+                self.prefill_calls += 1
 
     def tick(self) -> int:
         """One engine iteration: admit + one decode for all active slots.

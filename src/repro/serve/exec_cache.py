@@ -1,0 +1,105 @@
+"""Compiled-executable cache for tiled-CNN serving (DESIGN.md §13).
+
+A serve fleet switches between batch buckets every dispatch and between
+StackPlans on every elastic replan (DESIGN.md §10); recompiling the
+shard_map'd forward on the hot path would blow any latency budget (XLA
+compiles run hundreds of ms even for small stacks).  ``ExecutableCache``
+keys ahead-of-time-compiled executables by the *full plan identity* - every
+knob that changes the traced program: cluster, partition boundaries,
+crossover, wire codec, backend, schedule, ragged executor, grouping,
+inference flag - plus the batch bucket, with LRU eviction and hit/miss
+counters.  Replans that later revert to a previously-seen plan (a dropped
+device rejoining, DESIGN.md §10) re-key to the surviving entry and pay
+nothing.
+
+The cache is deliberately generic over the build function, so tests can
+exercise keying/LRU/counters without paying XLA compiles, and the LM engine
+could adopt it for per-sequence-length prefill executables later.
+"""
+from __future__ import annotations
+
+import json
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+from repro.core.fusion import StackPlan, plan_manifest
+from repro.core.grouping import ClusterSpec
+
+
+def plan_cache_key(
+    plan: StackPlan,
+    bucket: int,
+    cluster: ClusterSpec | None = None,
+) -> tuple[str, int]:
+    """Canonical hashable key for (plan, batch-bucket[, cluster]).
+
+    Built from ``plan_manifest`` - the same serialization the elastic
+    checkpoints persist - so the key covers every plan knob by
+    construction: two plans collide iff their manifests (layers, grid,
+    partition boundaries, grouping modes/crossover, backend, schedule,
+    block_oh, ragged_exec, wire_codec, inference, cluster) are identical,
+    which is exactly when their lowered executables are interchangeable.
+    New StackPlan knobs that reach the manifest are picked up here with no
+    code change; ``sort_keys`` makes the JSON rendering canonical.
+    """
+    man = plan_manifest(plan, cluster)
+    return (json.dumps(man, sort_keys=True), int(bucket))
+
+
+class ExecutableCache:
+    """LRU cache of compiled serve-step executables with hit/miss counters.
+
+    ``get_or_build(key, build)`` returns the cached value and counts a hit,
+    or calls ``build()`` (an AOT compile in production), inserts, counts a
+    miss, and evicts the least-recently-used entry past ``capacity``.
+    ``misses`` therefore *is* the compile count - the number the serve
+    acceptance gate bounds by the bucket-ladder size and asserts flat
+    across steady-state bucket switches.
+    """
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        """Keys in LRU order (least recently used first)."""
+        return list(self._entries.keys())
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        value = build()
+        self.misses += 1
+        self._entries[key] = value
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return value
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+        }

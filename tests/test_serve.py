@@ -62,6 +62,23 @@ def test_slot_recycling(lm_arch, lm_params):
     assert sorted(r.rid for r in done) == [0, 1, 2]
 
 
+def test_bulk_prefill_one_dispatch_matches_token_replay(lm_arch, lm_params):
+    prompt = np.asarray([5, 7, 9, 11], np.int32)
+    eng = ServeEngine(lm_arch, lm_params, batch=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    eng._admit()
+    assert eng.prefill_calls == 1          # one jit'd scan, not O(T) dispatches
+
+    # reference: the old per-token replay through the same decode graph
+    caches = lm_arch.make_caches(2, 64)
+    decode = jax.jit(lm_arch.decode_fn)
+    for t in prompt:
+        blk = jnp.zeros((2, 1), jnp.int32).at[0, 0].set(int(t))
+        _, caches = decode(lm_params, blk, caches)
+    for a, b in zip(jax.tree.leaves(eng.caches), jax.tree.leaves(caches)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
 def test_whisper_decode_serving():
     arch = get_arch("whisper-medium", reduced=True)
     params = arch.init(jax.random.PRNGKey(0))

@@ -1,0 +1,260 @@
+"""Tiled-CNN serving (DESIGN.md §13): forward-only plans, the compiled-
+executable cache (key derivation / LRU / counters / replan survivors), and
+the dynamic-batching engine's dispatch policy on a 1x1 mesh.
+
+Multi-device exactness (2x2 grid: serve output vs untiled forward, psum-free
+jaxpr, steady-state cache behavior) runs in scripts/check_serve.py under
+fake devices; these tests cover the single-device semantics tier-1 can see.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fusion import (
+    build_stack_plan,
+    make_deferred_grad_step,
+    make_tiled_infer,
+    make_tiled_loss,
+    plan_from_manifest,
+    plan_manifest,
+)
+from repro.core.spatial import LayerDef, freeze_bn_stats, init_stack_params, stack_reference
+from repro.core.tiling import TilePartition
+from repro.launch.mesh import make_tile_mesh
+from repro.serve.cnn_engine import CNNServeEngine, ManualClock, modeled_step_bound
+from repro.serve.exec_cache import ExecutableCache, plan_cache_key
+
+LAYERS = [
+    LayerDef(3, 1, 3, 8, act="leaky", batch_norm=True, use_bias=False),
+    LayerDef(2, 2, 8, 8, pool=True, act="linear"),
+    LayerDef(3, 1, 8, 8, act="leaky"),
+]
+HW = (16, 16)
+
+
+def _serve_setup(**plan_kw):
+    plan = build_stack_plan(HW, LAYERS, 1, 1, inference=True, **plan_kw)
+    mesh = make_tile_mesh(1, 1)
+    params = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    calib = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (4, *HW, 3)))
+    params = freeze_bn_stats(params, plan.layers, calib)
+    return plan, mesh, params
+
+
+# ---------------------------------------------------------------------------
+# forward-only plans
+# ---------------------------------------------------------------------------
+
+
+def test_inference_twin_and_training_guards():
+    train = build_stack_plan(HW, LAYERS, 1, 1)
+    assert not train.inference
+    serve = train.inference_twin()
+    assert serve.inference
+    # geometry and compute knobs are untouched
+    assert serve.groups == train.groups
+    assert serve.partition == train.partition
+    mesh = make_tile_mesh(1, 1)
+    with pytest.raises(ValueError, match="forward-only|inference"):
+        make_tiled_infer(train, mesh)
+    with pytest.raises(ValueError, match="inference"):
+        make_tiled_loss(serve, mesh, lambda y, t: (((y - t) ** 2).sum(), 1.0))
+    with pytest.raises(ValueError, match="inference"):
+        make_deferred_grad_step(
+            serve, mesh, lambda y, t: (((y - t) ** 2).sum(), 1.0)
+        )
+
+
+def test_inference_plan_manifest_roundtrip():
+    plan = build_stack_plan(HW, LAYERS, 1, 1, inference=True)
+    man = json.loads(json.dumps(plan_manifest(plan)))
+    assert man["inference"] is True
+    assert plan_from_manifest(man) == plan
+    # v2 manifests (no key) read back as training plans
+    man.pop("inference")
+    assert not plan_from_manifest(man).inference
+
+
+def test_infer_matches_untiled_reference_and_requires_frozen_stats():
+    plan, mesh, params = _serve_setup()
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (2, *HW, 3)))
+    infer = jax.jit(make_tiled_infer(plan, mesh))
+    y = np.asarray(infer(params, x))
+    ref = np.asarray(stack_reference(x, params, plan.layers, inference=True))
+    np.testing.assert_allclose(y, ref, atol=1e-5)
+    # no frozen stats -> clear trace-time error
+    raw = init_stack_params(jax.random.PRNGKey(0), LAYERS)
+    with pytest.raises(ValueError, match="freeze_bn_stats"):
+        infer(raw, x)
+
+
+def test_serve_jaxpr_has_no_training_collectives():
+    plan, mesh, params = _serve_setup()
+    x = jax.ShapeDtypeStruct((2, *HW, 3), np.float32)
+    jaxpr = str(jax.make_jaxpr(make_tiled_infer(plan, mesh))(params, x))
+    assert "psum" not in jaxpr
+
+
+# ---------------------------------------------------------------------------
+# executable cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_covers_every_plan_knob():
+    base = dict(inference=True)
+    plans = [
+        build_stack_plan(HW, LAYERS, 1, 1, **base),
+        build_stack_plan(HW, LAYERS, 2, 2, **base),
+        build_stack_plan(HW, LAYERS, 2, 2, schedule="overlap", **base),
+        build_stack_plan(HW, LAYERS, 2, 2, backend="pallas", **base),
+        build_stack_plan(HW, LAYERS, 2, 2, crossover=2, **base),
+        build_stack_plan(HW, LAYERS, 2, 2, wire_codec="int8", **base),
+        build_stack_plan(
+            HW, LAYERS, 2, 2,
+            partition=TilePartition((0, 6, 16), (0, 10, 16)), **base,
+        ),
+        build_stack_plan(HW, LAYERS, 1, 1),        # training twin
+    ]
+    keys = {plan_cache_key(p, 4) for p in plans}
+    assert len(keys) == len(plans)                 # every knob distinguishes
+    # same plan, different bucket -> different key; rebuilt plan -> same key
+    p = plans[0]
+    assert plan_cache_key(p, 1) != plan_cache_key(p, 2)
+    assert plan_cache_key(build_stack_plan(HW, LAYERS, 1, 1, **base), 4) == \
+        plan_cache_key(p, 4)
+
+
+def test_cache_lru_eviction_and_counters():
+    cache = ExecutableCache(capacity=2)
+    builds = []
+    mk = lambda k: lambda: builds.append(k) or k
+    assert cache.get_or_build("a", mk("a")) == "a"
+    assert cache.get_or_build("b", mk("b")) == "b"
+    assert cache.get_or_build("a", mk("a")) == "a"      # hit; a now MRU
+    assert cache.stats() == {
+        "hits": 1, "misses": 2, "evictions": 0, "hit_rate": 1 / 3,
+        "entries": 2, "capacity": 2,
+    }
+    cache.get_or_build("c", mk("c"))                    # evicts b (LRU)
+    assert cache.keys() == ["a", "c"]
+    assert "b" not in cache and cache.evictions == 1
+    assert builds == ["a", "b", "c"]                    # a built exactly once
+    with pytest.raises(ValueError):
+        ExecutableCache(capacity=0)
+
+
+def test_replan_reuses_surviving_cache_entries():
+    """Elastic replan regression: plan A -> plan B -> back to A re-keys to
+    the surviving executable and pays no compile (DESIGN.md §10 + §13)."""
+    a = build_stack_plan(HW, LAYERS, 1, 1, inference=True)
+    b = build_stack_plan(HW, LAYERS, 1, 1, schedule="overlap", inference=True)
+    cache = ExecutableCache(capacity=4)
+    compiles = []
+    build = lambda tag: lambda: compiles.append(tag) or tag
+    for bucket in (1, 2):
+        cache.get_or_build(plan_cache_key(a, bucket), build(f"a{bucket}"))
+    cache.get_or_build(plan_cache_key(b, 1), build("b1"))   # replan to B
+    # revert to a rebuilt-but-equal A: both buckets must be hits
+    a2 = plan_from_manifest(plan_manifest(a))
+    for bucket in (1, 2):
+        assert cache.get_or_build(
+            plan_cache_key(a2, bucket), build(f"a{bucket}'")
+        ) == f"a{bucket}"
+    assert compiles == ["a1", "a2", "b1"]
+    assert cache.hits == 2 and cache.misses == 3
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_refuses_training_plans_and_bad_buckets():
+    train = build_stack_plan(HW, LAYERS, 1, 1)
+    with pytest.raises(ValueError, match="inference_twin"):
+        CNNServeEngine(train, None, [])
+    plan, mesh, params = _serve_setup()
+    with pytest.raises(ValueError, match="buckets"):
+        CNNServeEngine(plan, mesh, params, buckets=(0, 2))
+
+
+def test_engine_dispatch_policy_and_stats():
+    plan, mesh, params = _serve_setup()
+    clock = ManualClock()
+    engine = CNNServeEngine(
+        plan, mesh, params, buckets=(1, 2, 4), latency_budget=10.0,
+        step_bound=0.5, clock=clock, simulate_step_s=0.05,
+    )
+    assert engine.warmup()["misses"] == 3               # bucket ladder compiled
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((6, *HW, 3)).astype(np.float32)
+
+    # below the largest bucket + deadlines far away -> engine waits
+    engine.submit(imgs[0]); engine.submit(imgs[1])
+    assert engine.step() == [] and engine.pending == 2
+
+    # 4 queued fills the largest bucket -> ships a full batch
+    engine.submit(imgs[2]); engine.submit(imgs[3])
+    done = engine.step()
+    assert [r.rid for r in done] == [0, 1, 2, 3]
+    assert engine.batch_log[-1]["bucket"] == 4
+
+    # deadline pressure ships a partial batch: 1 queued, headroom below
+    # slack_factor * step_bound
+    engine.submit(imgs[4])
+    assert engine.step() == []                          # still slack
+    clock.advance(10.0 - 2.0 * 0.5 + 0.01)              # cross the threshold
+    done = engine.step()
+    assert [r.rid for r in done] == [4]
+    assert engine.batch_log[-1]["bucket"] == 1          # smallest covering
+
+    # padded slots don't corrupt results
+    ref = np.asarray(stack_reference(
+        imgs[:5], params, plan.layers, inference=True))
+    for r in engine.finished:
+        np.testing.assert_allclose(r.result, ref[r.rid], atol=1e-5)
+
+    engine.submit(imgs[5])
+    engine.drain()
+    s = engine.stats()
+    assert s["served"] == 6 and engine.pending == 0
+    assert s["bucket_census"] == {4: 1, 1: 2}
+    assert s["cache"]["misses"] == 3                    # no post-warmup compile
+    assert s["deadline_misses"] == 0                    # policy shipped in time
+    assert s["min_slack_s"] > 0
+    assert s["p99_s"] >= s["p50_s"] >= 0.0
+    assert s["throughput"] > 0
+
+
+def test_engine_rejects_wrong_image_shape_and_bound_is_modeled():
+    plan, mesh, params = _serve_setup()
+    engine = CNNServeEngine(plan, mesh, params, buckets=(1,))
+    with pytest.raises(ValueError, match="shape"):
+        engine.submit(np.zeros((8, 8, 3), np.float32))
+    assert engine.step_bound == pytest.approx(modeled_step_bound(plan, 1))
+
+
+def test_run_serving_driver_reports():
+    from repro.runtime.driver import run_serving
+
+    plan, mesh, params = _serve_setup()
+    clock = ManualClock()
+    engine = CNNServeEngine(
+        plan, mesh, params, buckets=(1, 2), latency_budget=5.0,
+        step_bound=0.1, clock=clock, simulate_step_s=0.01,
+    )
+    engine.warmup()
+    rng = np.random.default_rng(1)
+
+    def on_tick(t, eng):
+        eng.submit(rng.standard_normal((*HW, 3)).astype(np.float32))
+        clock.advance(0.001)
+
+    report = run_serving(engine, ticks=5, on_tick=on_tick)
+    assert report.served == 5 and engine.pending == 0
+    assert report.deadline_misses == 0 and report.min_slack_s > 0
+    assert report.throughput > 0 and report.p99_s >= report.p50_s
+    assert sum(report.bucket_census.values()) == report.dispatches
+    assert report.cache["misses"] == 2

@@ -211,7 +211,7 @@ def test_efbag_modes_and_errors():
 
 
 def test_plan_manifest_roundtrip_wire_codec():
-    assert PLAN_MANIFEST_VERSION == 2
+    assert PLAN_MANIFEST_VERSION == 3
     for spec in ("none", "int8", "topk:0.25"):
         plan = build_stack_plan((32, 32), LAYERS5, 2, 2, wire_codec=spec)
         assert plan.wire_codec == spec
